@@ -1,0 +1,25 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_call(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall time in microseconds."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,39 @@
+"""Paper Figure 1b: communication overhead grows as compute gets faster.
+
+From the dry-run roofline artifacts: per train cell, the collective term as
+a fraction of (compute + collective), at 1x / 8x / 35x compute speed (the
+paper's GPU-generation sweep: K520 -> V100 was 35x).  Shows the same
+qualitative result: faster compute makes the fixed-byte exchange dominate.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+
+
+def run(art_dir: str = "artifacts/dryrun") -> None:
+    d = Path(art_dir)
+    seen = set()
+    for f in sorted(d.glob("*train*__single__pbox.json")):
+        if f.name in seen:
+            continue
+        seen.add(f.name)
+        rec = json.loads(f.read_text())
+        if rec.get("status") != "ok":
+            continue
+        t_comp = rec["flops_per_device"] / PEAK_FLOPS
+        t_coll = rec["collective_bytes_per_device"].get("wire_total", 0) / ICI_BW
+        if t_comp == 0:
+            continue
+        fracs = []
+        for speed in (1, 8, 35):
+            fracs.append(t_coll / (t_comp / speed + t_coll))
+        emit(f"fig1b/{rec['arch']}_{rec['shape']}", t_coll * 1e6,
+             f"comm_frac@1x={fracs[0]:.2f};@8x={fracs[1]:.2f};@35x={fracs[2]:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,64 @@
+"""Paper Figure 4: ZeroComputeEngine limit study.
+
+The paper drives PBox with infinitely fast workers to find the exchange
+ceiling (PCIe-to-memory bound).  Analogue: exchange-only steps (no model
+compute) measured on 8 host devices across gradient sizes and strategies;
+derived column reports achieved GB/s of aggregated gradient per step and
+the modeled per-device wire bytes (flat in worker count for pbox — the
+scalability claim)."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+from benchmarks.common import emit
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import time
+import jax, jax.numpy as jnp
+from repro.core.exchange import ExchangeConfig, PSExchange
+from repro.core.zero_compute import init_zero_compute_state, make_zero_compute_step
+from repro.optim.optimizers import momentum
+
+mesh = jax.make_mesh((2,2,2), ("pod","data","model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*3)
+for strat, pod in (("allreduce", None), ("pbox", None), ("pbox_hier", "pod")):
+    for flat in (1<<20, 1<<23):
+        ex = PSExchange(momentum(0.1, 0.9), ExchangeConfig(strat),
+                        ("pod","data","model") if strat != "pbox_hier" else ("pod","data","model"),
+                        pod)
+        step = make_zero_compute_step(mesh, ex, flat)
+        state = init_zero_compute_state(mesh, ex, flat)
+        p = jnp.zeros((flat,)); g = jnp.ones((flat,))
+        p, state = step(p, g, state)  # compile
+        jax.block_until_ready(p)
+        n, t0 = 5, time.perf_counter()
+        for _ in range(n):
+            p, state = step(p, g, state)
+        jax.block_until_ready(p)
+        us = (time.perf_counter()-t0)/n*1e6
+        gbs = flat*4/ (us/1e6) / 1e9
+        mb = ex.modeled_bytes(flat, 2, 4)
+        wire = (mb["push"]+mb["pull"]+(mb["xpod"] or 0.0))/2**20
+        print(f"fig4/{strat}_flat={flat>>20}M,{us:.1f},agg_GBps={gbs:.2f};wire_MiB_dev={wire:.1f}")
+"""
+
+
+def run() -> None:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(Path(__file__).parent.parent / "src")
+    p = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                       text=True, env=env, timeout=900)
+    if p.returncode != 0:
+        emit("fig4/FAILED", 0.0, p.stderr[-200:].replace("\n", " "))
+        return
+    for line in p.stdout.strip().splitlines():
+        print(line)
+
+
+if __name__ == "__main__":
+    run()

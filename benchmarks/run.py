@@ -1,0 +1,52 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig3,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma list of bench names")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        fig1b_comm_fraction,
+        fig3_speedup,
+        fig4_zero_compute,
+        fig5_hierarchical,
+        kernel_micro,
+        table1_frameworks,
+    )
+
+    benches = {
+        "table1": table1_frameworks.run,
+        "fig1b": fig1b_comm_fraction.run,
+        "fig3": fig3_speedup.run,
+        "fig4": fig4_zero_compute.run,
+        "fig5": fig5_hierarchical.run,
+        "kernel": kernel_micro.run,
+    }
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        try:
+            fn()
+        except Exception:  # noqa: BLE001
+            failed += 1
+            print(f"{name}/FAILED,0,{traceback.format_exc(limit=1)!r}",
+                  file=sys.stderr)
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Paper Table 1: training throughput vs worker count.
+
+The paper shows MXNet/TF/Caffe2 scale poorly from 1 -> 8 workers because the
+PS stack bottlenecks.  We reproduce the *shape* of the experiment with the
+in-process PHub server: samples/s of synchronous SGD on the paper's workload
+class (ResNet-ish conv net — reduced for CPU) for K in {1, 2, 4, 8} workers,
+and the ideal linear line for reference.  Derived column: scaling efficiency
+vs K=1.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.registry import get_arch
+from repro.core.chunking import ParamSpace
+from repro.core.server import PHubServer, WorkerHarness
+from repro.data.synthetic import image_batches
+from repro.models import resnet as RN
+from repro.optim.optimizers import momentum
+
+
+def run() -> None:
+    cfg = get_arch("resnet50").smoke_config
+    params = RN.init_params(cfg, jax.random.PRNGKey(0))
+    space = ParamSpace.build(params, num_owners=1)
+    batch = 8
+    data = image_batches(batch, 32, cfg.n_classes, seed=0)
+    batches = [next(data) for _ in range(4)]
+    lossg = jax.jit(jax.grad(lambda p, b: RN.loss_fn(p, b, cfg)[0]))
+
+    base = None
+    for k in (1, 2, 4, 8):
+        srv = PHubServer(space, momentum(0.1, 0.9), space.flatten(params),
+                         num_workers=k)
+
+        def grad_fn(p, wb):
+            b = batches[wb[1] % len(batches)]
+            return lossg(p, jax.tree.map(jnp.asarray, b))
+
+        h = WorkerHarness(srv, grad_fn, lambda w, s: (w, s))
+        h.run(1)  # compile
+        t0 = time.perf_counter()
+        steps = 3
+        h.run(1 + steps)
+        dt = time.perf_counter() - t0
+        sps = steps * k * batch / dt
+        if base is None:
+            base = sps
+        emit(f"table1/sync_sgd_workers={k}", dt / steps * 1e6,
+             f"samples_per_s={sps:.1f};scaling_eff={sps/(base*k):.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Train the eSCN EquiformerV2 on batched synthetic molecules (graph-level
+regression) — exercises the geometric featurization pipeline (spherical
+harmonics + numeric Wigner rotations) end to end.
+
+  PYTHONPATH=src python examples/gnn_molecules.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_arch
+from repro.data.graphs import random_molecule_batch
+from repro.models.common import Dist
+from repro.models.gnn.equiformer_v2 import init_params, loss_fn
+from repro.optim.optimizers import adamw, make_optimizer
+import dataclasses
+
+
+def main() -> None:
+    cfg = dataclasses.replace(get_arch("equiformer-v2").smoke_config,
+                              task="graph_reg", n_out=1)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    dist = Dist.none()
+    init_fn, upd_fn = make_optimizer(adamw(2e-3))
+    opt = init_fn(params)
+
+    step = jax.jit(lambda p, o, g: _step(p, o, g))
+
+    def _step(p, o, g):
+        (loss, met), grads = jax.value_and_grad(
+            lambda p_: loss_fn(p_, g, cfg, dist), has_aux=True)(p)
+        p, o = upd_fn(p, grads, o)
+        return p, o, loss
+
+    for i in range(15):
+        g = random_molecule_batch(8, 8, 16, cfg.d_in, cfg.l_max, cfg.n_rbf,
+                                  seed=i % 4)
+        g = jax.tree.map(jnp.asarray, g)
+        params, opt, loss = step(params, opt, g)
+        if i % 3 == 0:
+            print(f"step {i:2d} mse={float(loss):.4f}")
+    print("done — molecular energies fitted on synthetic targets")
+
+
+if __name__ == "__main__":
+    main()

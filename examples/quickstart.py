@@ -1,0 +1,50 @@
+"""Quickstart: train a tiny LM through the PBox parameter-server pipeline on
+whatever devices exist (single CPU here), watch the loss fall.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_arch
+from repro.core.chunking import ParamSpace
+from repro.core.server import PHubServer, WorkerHarness
+from repro.data.synthetic import lm_batches
+from repro.models.common import Dist
+from repro.models.transformer import init_params, lm_loss
+from repro.optim.optimizers import adamw
+
+
+def main() -> None:
+    cfg = get_arch("gemma3-1b").smoke_config
+    dist = Dist.none()
+    params = init_params(cfg, jax.random.PRNGKey(0), tp=1)
+
+    # the PS: chunked flat space + fused aggregate/optimize server
+    space = ParamSpace.build(params)
+    print(space.describe())
+    srv = PHubServer(space, adamw(3e-3), space.flatten(params), num_workers=2)
+
+    streams = [lm_batches(cfg.vocab, 4, 32, seed=w) for w in range(2)]
+    lossg = jax.jit(jax.value_and_grad(
+        lambda p, t, l: lm_loss(p, t, l, cfg, dist, 1)[0]))
+
+    def grad_fn(p, wstep):
+        w, s = wstep
+        b = next(streams[w]) if s >= len(cache[w]) else cache[w][s]
+        loss, g = lossg(p, jnp.asarray(b["tokens"]), jnp.asarray(b["labels"]))
+        losses.append(float(loss))
+        return g
+
+    cache = [[], []]
+    losses: list[float] = []
+    h = WorkerHarness(srv, grad_fn, lambda w, s: (w, s))
+    h.run(40)
+    print("loss first->last:", round(losses[0], 3), "->", round(losses[-1], 3))
+    assert losses[-1] < losses[0]
+    print("pushes:", srv.stats.pushes, " bytes pushed:",
+          srv.stats.bytes_pushed >> 20, "MiB")
+
+
+if __name__ == "__main__":
+    main()

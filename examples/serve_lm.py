@@ -1,0 +1,28 @@
+"""Batched LM serving: prefill a prompt batch, then greedy-decode with the
+sequence-sharded KV cache (2-way TP on emulated devices).
+
+  python examples/serve_lm.py
+"""
+import os
+import sys
+from pathlib import Path
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+sys.path.insert(0, str(Path(__file__).parent.parent / "src"))
+
+import subprocess
+
+
+def main() -> None:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(Path(__file__).parent.parent / "src")
+    subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "gemma3-1b",
+         "--mesh", "1x2", "--batch", "4", "--prompt-len", "16",
+         "--tokens", "12"],
+        check=True, env=env,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.configs.registry import ARCHS, ArchDef, ShapeCell, get_arch, list_cells
+
+__all__ = ["ARCHS", "ArchDef", "ShapeCell", "get_arch", "list_cells"]

@@ -1,0 +1,16 @@
+"""PBoxAX core: the paper's contribution (PHub/PBox parameter exchange)."""
+from repro.core.chunking import ParamSpace, TensorSlot, DEFAULT_CHUNK_ELEMS
+from repro.core.exchange import ExchangeConfig, PSExchange
+from repro.core.compression import CompressionConfig
+from repro.core.server import PHubServer, WorkerHarness
+
+__all__ = [
+    "ParamSpace",
+    "TensorSlot",
+    "DEFAULT_CHUNK_ELEMS",
+    "ExchangeConfig",
+    "PSExchange",
+    "CompressionConfig",
+    "PHubServer",
+    "WorkerHarness",
+]

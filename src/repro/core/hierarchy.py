@@ -1,0 +1,48 @@
+"""Two-level ("rack-local, then cross-rack") collective schedules.
+
+The paper's §3 insight — aggregate inside the rack at full bisection
+bandwidth, forward a single aggregated stream upward — generalizes beyond
+gradient exchange.  These helpers are per-device SPMD code (inside
+shard_map) reused by the PS exchange, the GNN cross-partition aggregation
+and the MoE dispatch path.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def hierarchical_psum(x: jax.Array, inner_axes, outer_axis: str | None):
+    """psum factored as inner reduce-scatter + outer all-reduce + inner
+    all-gather.  Mathematically == lax.psum(x, inner+outer) but moves only
+    |x| / n_inner bytes across the outer (inter-pod) boundary."""
+    if outer_axis is None:
+        return lax.psum(x, inner_axes)
+    shape = x.shape
+    flat = x.reshape(-1)
+    slab = lax.psum_scatter(flat, inner_axes, scatter_dimension=0, tiled=True)
+    slab = lax.psum(slab, outer_axis)
+    out = lax.all_gather(slab, inner_axes, axis=0, tiled=True)
+    return out.reshape(shape)
+
+
+def hierarchical_pmean(x: jax.Array, inner_axes, outer_axis: str | None):
+    n = 1
+    for a in (inner_axes if isinstance(inner_axes, (tuple, list)) else (inner_axes,)):
+        n *= lax.axis_size(a)
+    if outer_axis is not None:
+        n *= lax.axis_size(outer_axis)
+    return hierarchical_psum(x, inner_axes, outer_axis) / n
+
+
+def two_level_all_gather(x: jax.Array, inner_axes, outer_axis: str | None, axis: int = 0):
+    """All-gather staged inner-then-outer (same bytes, but the outer stage
+    ships the already-concatenated inner block once per pod instead of one
+    message per device — fewer, larger transfers across the slow boundary)."""
+    y = lax.all_gather(x, inner_axes, axis=axis, tiled=True)
+    if outer_axis is not None:
+        y = lax.all_gather(y, outer_axis, axis=axis, tiled=True)
+    return y

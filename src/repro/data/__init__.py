@@ -1,0 +1,2 @@
+"""Host-side data pipeline: synthetic generators, graph featurization,
+neighbor sampling, and a prefetching feeder."""

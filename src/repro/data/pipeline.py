@@ -1,0 +1,53 @@
+"""Prefetching host->device pipeline.
+
+A background thread keeps ``depth`` batches materialized ahead of the
+training loop (the host-side half of compute/transfer overlap; on real TPU
+hosts this hides input latency behind the device step)."""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Iterator
+
+import jax
+
+
+class Prefetcher:
+    def __init__(self, it: Iterator, depth: int = 2,
+                 transform: Callable | None = None):
+        self.it = it
+        self.q: queue.Queue = queue.Queue(maxsize=depth)
+        self.transform = transform or (lambda x: jax.tree.map(jax.numpy.asarray, x))
+        self._err: BaseException | None = None
+        self._stop = threading.Event()
+        self.t = threading.Thread(target=self._work, daemon=True)
+        self.t.start()
+
+    def _work(self):
+        try:
+            for item in self.it:
+                if self._stop.is_set():
+                    return
+                self.q.put(self.transform(item))
+        except BaseException as e:  # noqa: BLE001
+            self._err = e
+            self.q.put(None)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self.q.get()
+        if item is None:
+            if self._err is not None:
+                raise self._err
+            raise StopIteration
+        return item
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self.q.get_nowait()
+        except queue.Empty:
+            pass

@@ -1,0 +1,29 @@
+"""jit'd wrapper for embedding-bag: Pallas kernel or XLA-gather fallback.
+
+The XLA path (take + einsum) is what the distributed lowering uses (XLA
+SPMD partitions the gather against row-sharded tables); the Pallas path is
+the single-chip TPU kernel.  Both satisfy the same oracle (ref.py).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.embedding_bag.kernel import embedding_bag_pallas
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+
+@partial(jax.jit, static_argnames=("mode", "use_pallas", "interpret"))
+def embedding_bag(
+    table: jax.Array,
+    indices: jax.Array,
+    weights: jax.Array,
+    mode: str = "sum",
+    *,
+    use_pallas: bool = False,
+    interpret: bool = True,
+) -> jax.Array:
+    if use_pallas:
+        return embedding_bag_pallas(table, indices, weights, mode, interpret=interpret)
+    return embedding_bag_ref(table, indices, weights, mode)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the weighted embedding-bag.
+
+JAX has no native EmbeddingBag; the reference composes gather + weighted
+reduce.  ``indices`` is (B, L) fixed-width with ``weights`` (B, L) carrying
+0.0 at padded slots (a padded multi-hot bag — the standard recsys layout).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(
+    table: jax.Array,  # (V, D)
+    indices: jax.Array,  # (B, L) int32 in [0, V)
+    weights: jax.Array,  # (B, L) f32, 0 at padding
+    mode: str = "sum",  # "sum" | "mean"
+) -> jax.Array:
+    rows = jnp.take(table, indices, axis=0)  # (B, L, D)
+    out = jnp.einsum("bl,bld->bd", weights.astype(jnp.float32), rows.astype(jnp.float32))
+    if mode == "mean":
+        denom = jnp.maximum(jnp.sum(weights, axis=1, keepdims=True), 1e-9)
+        out = out / denom
+    return out

@@ -1,0 +1,3 @@
+from repro.kernels.fused_agg_opt.ops import fused_aggregate_update
+
+__all__ = ["fused_aggregate_update"]

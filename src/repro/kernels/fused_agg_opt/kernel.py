@@ -1,0 +1,157 @@
+"""Pallas TPU kernel: K-way gradient aggregation fused with the optimizer.
+
+This is the PHub hot loop ("locality-preserving, vectorized implementation of
+aggregator and optimizer"): each PS micro-shard sums the K worker gradient
+slabs for the chunks it owns and applies the optimizer update in the *same*
+VMEM-resident pass -- gradients, parameters and optimizer state are each read
+from HBM exactly once and written at most once, which is the paper's
+locality argument transplanted from CPU cache lines to the TPU HBM->VMEM
+hierarchy.
+
+Layout: a slab of N elements (N a multiple of the 8*128 f32 tile) is viewed
+as (N/128, 128).  Blocks are (block_rows, 128) with block_rows a multiple of
+8, one grid step per block; the K gradient slabs are delivered as a single
+(K, block_rows, 128) block so the aggregation loop is fully unrolled in
+registers.
+
+Traced scalars (lr*schedule, Adam bias corrections) arrive via a (1, 4) SMEM
+operand; static hyperparameters (betas, eps, weight decay, momentum) are
+closed over as Python constants.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.optim.optimizers import OptimizerSpec
+
+LANES = 128
+SUBLANES = 8
+
+
+def _block_rows(rows: int, target: int = 256) -> int:
+    """Largest multiple of SUBLANES*8=64 that divides rows, capped at target."""
+    unit = SUBLANES * 8
+    chunks = rows // unit
+    best = unit
+    for d in range(1, target // unit + 1):
+        if chunks % d == 0:
+            best = unit * d
+    return min(best, rows)
+
+
+def _agg(grads_ref, inv_k: float) -> jax.Array:
+    k = grads_ref.shape[0]
+    acc = grads_ref[0].astype(jnp.float32)
+    for i in range(1, k):
+        acc = acc + grads_ref[i].astype(jnp.float32)
+    return acc * inv_k
+
+
+def _sgd_kernel(spec: OptimizerSpec, inv_k, scal_ref, grads_ref, param_ref, p_out):
+    g = _agg(grads_ref, inv_k)
+    p = param_ref[...].astype(jnp.float32)
+    lr = scal_ref[0, 0]
+    if spec.weight_decay:
+        g = g + spec.weight_decay * p
+    p_out[...] = (p - lr * g).astype(p_out.dtype)
+
+
+def _momentum_kernel(
+    spec: OptimizerSpec, inv_k, scal_ref, grads_ref, param_ref, m_ref, p_out, m_out
+):
+    g = _agg(grads_ref, inv_k)
+    p = param_ref[...].astype(jnp.float32)
+    m = m_ref[...]
+    lr = scal_ref[0, 0]
+    if spec.weight_decay:
+        g = g + spec.weight_decay * p
+    m = spec.momentum * m + g
+    upd = g + spec.momentum * m if spec.nesterov else m
+    p_out[...] = (p - lr * upd).astype(p_out.dtype)
+    m_out[...] = m
+
+
+def _adam_kernel(
+    spec: OptimizerSpec,
+    inv_k,
+    scal_ref,
+    grads_ref,
+    param_ref,
+    m_ref,
+    v_ref,
+    p_out,
+    m_out,
+    v_out,
+):
+    g = _agg(grads_ref, inv_k)
+    p = param_ref[...].astype(jnp.float32)
+    m = m_ref[...]
+    v = v_ref[...]
+    lr, bc1, bc2 = scal_ref[0, 0], scal_ref[0, 1], scal_ref[0, 2]
+    if spec.name == "adam" and spec.weight_decay:
+        g = g + spec.weight_decay * p
+    m = spec.beta1 * m + (1.0 - spec.beta1) * g
+    v = spec.beta2 * v + (1.0 - spec.beta2) * g * g
+    mhat = m * bc1
+    vhat = v * bc2
+    upd = mhat / (jnp.sqrt(vhat) + spec.eps)
+    if spec.name == "adamw" and spec.weight_decay:
+        upd = upd + spec.weight_decay * p
+    p_out[...] = (p - lr * upd).astype(p_out.dtype)
+    m_out[...] = m
+    v_out[...] = v
+
+
+def fused_agg_opt_pallas(
+    grads: jax.Array,  # (K, N)
+    param: jax.Array,  # (N,)
+    state: tuple,  # num_state_slots arrays of (N,) f32
+    scalars: jax.Array,  # (1, 4) f32: [lr_t, bc1, bc2, pad]
+    spec: OptimizerSpec,
+    *,
+    average: bool = True,
+    interpret: bool = True,
+    block_target: int = 256,
+) -> tuple[jax.Array, tuple]:
+    k, n = grads.shape
+    if n % (SUBLANES * LANES * 8) != 0:
+        raise ValueError(f"slab size {n} not a multiple of {SUBLANES*LANES*8}")
+    rows = n // LANES
+    bm = _block_rows(rows, block_target)
+    grid = (rows // bm,)
+    inv_k = 1.0 / k if average else 1.0
+
+    g2 = grads.reshape(k, rows, LANES)
+    p2 = param.reshape(rows, LANES)
+    s2 = tuple(s.reshape(rows, LANES) for s in state)
+
+    scal_spec = pl.BlockSpec((1, 4), lambda i: (0, 0))
+    grad_spec = pl.BlockSpec((k, bm, LANES), lambda i: (0, i, 0))
+    slab_spec = pl.BlockSpec((bm, LANES), lambda i: (i, 0))
+
+    n_state = spec.num_state_slots
+    kern = {
+        0: partial(_sgd_kernel, spec, inv_k),
+        1: partial(_momentum_kernel, spec, inv_k),
+        2: partial(_adam_kernel, spec, inv_k),
+    }[n_state]
+
+    out_shape = [jax.ShapeDtypeStruct((rows, LANES), param.dtype)] + [
+        jax.ShapeDtypeStruct((rows, LANES), jnp.float32) for _ in range(n_state)
+    ]
+    outs = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[scal_spec, grad_spec, slab_spec] + [slab_spec] * n_state,
+        out_specs=[slab_spec] * (1 + n_state),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(scalars, g2, p2, *s2)
+    new_p = outs[0].reshape(n)
+    new_state = tuple(o.reshape(n) for o in outs[1:])
+    return new_p, new_state

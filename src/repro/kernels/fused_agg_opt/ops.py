@@ -1,0 +1,62 @@
+"""jit'd public wrapper for the fused aggregate+optimize kernel.
+
+Chooses the Pallas kernel (interpret=True off-TPU) or the pure-jnp reference,
+and computes the traced scalar packet (lr*schedule, Adam bias corrections)
+outside the kernel.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_agg_opt.kernel import fused_agg_opt_pallas
+from repro.kernels.fused_agg_opt.ref import fused_aggregate_update_ref
+from repro.optim.optimizers import OptimizerSpec
+
+
+def _scalar_packet(spec: OptimizerSpec, step, lr_scale) -> jax.Array:
+    t = jnp.asarray(step, jnp.float32)
+    lr_t = jnp.asarray(spec.lr * lr_scale, jnp.float32)
+    if spec.num_state_slots == 2:
+        bc1 = 1.0 / (1.0 - spec.beta1**t)
+        bc2 = 1.0 / (1.0 - spec.beta2**t)
+    else:
+        bc1 = jnp.float32(1.0)
+        bc2 = jnp.float32(1.0)
+    return jnp.stack([lr_t, bc1, bc2, jnp.float32(0.0)]).reshape(1, 4)
+
+
+@partial(
+    jax.jit,
+    static_argnames=("spec", "average", "use_pallas", "interpret", "block_target"),
+)
+def fused_aggregate_update(
+    grads: jax.Array,  # (K, N) worker slabs
+    param: jax.Array,  # (N,)
+    state: tuple,  # opt state slots
+    spec: OptimizerSpec,
+    step: jax.Array,  # scalar, 1-based
+    lr_scale: jax.Array | float = 1.0,
+    *,
+    average: bool = True,
+    use_pallas: bool = True,
+    interpret: bool = True,
+    block_target: int = 256,
+) -> tuple[jax.Array, tuple]:
+    if not use_pallas:
+        return fused_aggregate_update_ref(
+            grads, param, state, spec, step, lr_scale, average=average
+        )
+    scalars = _scalar_packet(spec, step, lr_scale)
+    return fused_agg_opt_pallas(
+        grads,
+        param,
+        state,
+        scalars,
+        spec,
+        average=average,
+        interpret=interpret,
+        block_target=block_target,
+    )

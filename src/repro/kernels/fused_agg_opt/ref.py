@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the fused aggregate+optimize kernel.
+
+Semantics: given K worker gradient slabs for the chunks this PS micro-shard
+owns, sum them (in f32), average by 1/K (sync SGD semantics, matching the
+paper's MXNet integration), then apply the server-side optimizer in the same
+pass.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.optimizers import OptimizerSpec, apply_update
+
+
+def fused_aggregate_update_ref(
+    grads: jax.Array,  # (K, N) worker gradient slabs, any float dtype
+    param: jax.Array,  # (N,) parameters
+    state: tuple,  # optimizer state slots, each (N,) f32
+    spec: OptimizerSpec,
+    step: jax.Array,  # scalar int32, 1-based
+    lr_scale: jax.Array | float = 1.0,
+    average: bool = True,
+) -> tuple[jax.Array, tuple]:
+    agg = jnp.sum(grads.astype(jnp.float32), axis=0)
+    if average:
+        agg = agg / grads.shape[0]
+    return apply_update(spec, param, agg, state, step, lr_scale)

@@ -1,0 +1,3 @@
+from repro.kernels.quant.ops import quantize_chunks, dequantize_chunks
+
+__all__ = ["quantize_chunks", "dequantize_chunks"]

@@ -1,0 +1,76 @@
+"""Pallas TPU kernels for per-chunk int8 quantize / dequantize.
+
+One grid step handles one PS chunk (chunk_elems elements viewed as
+(chunk_elems/128, 128)); the chunk's amax reduction, scale computation and
+rounding all happen in a single VMEM pass.  Scales are emitted as one f32 per
+chunk (the per-chunk metadata the paper's PS keeps besides the payload).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[0, 0] = scale
+
+
+def _dequant_kernel(q_ref, s_ref, x_ref):
+    scale = s_ref[0, 0]
+    x_ref[...] = q_ref[...].astype(jnp.float32) * scale
+
+
+def quantize_chunks_pallas(
+    x: jax.Array, chunk_elems: int, *, interpret: bool = True
+) -> tuple[jax.Array, jax.Array]:
+    n = x.shape[0]
+    if n % chunk_elems or chunk_elems % LANES:
+        raise ValueError(f"bad sizes n={n} chunk={chunk_elems}")
+    c = n // chunk_elems
+    rows = chunk_elems // LANES
+    x2 = x.reshape(c * rows, LANES)
+    q2, s2 = pl.pallas_call(
+        _quant_kernel,
+        grid=(c,),
+        in_specs=[pl.BlockSpec((rows, LANES), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((c * rows, LANES), jnp.int8),
+            jax.ShapeDtypeStruct((c, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x2)
+    return q2.reshape(n), s2.reshape(c)
+
+
+def dequantize_chunks_pallas(
+    q: jax.Array, scale: jax.Array, chunk_elems: int, *, interpret: bool = True
+) -> jax.Array:
+    n = q.shape[0]
+    c = n // chunk_elems
+    rows = chunk_elems // LANES
+    q2 = q.reshape(c * rows, LANES)
+    s2 = scale.reshape(c, 1)
+    x2 = pl.pallas_call(
+        _dequant_kernel,
+        grid=(c,),
+        in_specs=[
+            pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((c * rows, LANES), jnp.float32),
+        interpret=interpret,
+    )(q2, s2)
+    return x2.reshape(n)

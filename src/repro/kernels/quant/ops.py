@@ -1,0 +1,23 @@
+"""jit'd wrappers for the chunk quantization codec."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.quant.kernel import dequantize_chunks_pallas, quantize_chunks_pallas
+from repro.kernels.quant.ref import dequantize_chunks_ref, quantize_chunks_ref
+
+
+@partial(jax.jit, static_argnames=("chunk_elems", "use_pallas", "interpret"))
+def quantize_chunks(x, chunk_elems: int, *, use_pallas: bool = True, interpret: bool = True):
+    if not use_pallas:
+        return quantize_chunks_ref(x, chunk_elems)
+    return quantize_chunks_pallas(x, chunk_elems, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("chunk_elems", "use_pallas", "interpret"))
+def dequantize_chunks(q, scale, chunk_elems: int, *, use_pallas: bool = True, interpret: bool = True):
+    if not use_pallas:
+        return dequantize_chunks_ref(q, scale, chunk_elems)
+    return dequantize_chunks_pallas(q, scale, chunk_elems, interpret=interpret)

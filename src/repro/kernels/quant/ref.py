@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for per-chunk symmetric int8 gradient quantization.
+
+The paper's in-network aggregation section notes programmable switches only
+do integer math on small packet regions; our codec mirrors that: each 32 KB
+chunk gets one f32 scale (amax/127) and int8 payload, so chunks aggregate
+with integer adds on the wire and rescale at the PS.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_chunks_ref(
+    x: jax.Array, chunk_elems: int
+) -> tuple[jax.Array, jax.Array]:
+    """(N,) f32 -> ((N,) int8 payload, (N/chunk_elems,) f32 scales)."""
+    n = x.shape[0]
+    c = n // chunk_elems
+    xc = x.reshape(c, chunk_elems).astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xc), axis=1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xc / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q.reshape(n), scale
+
+
+def dequantize_chunks_ref(
+    q: jax.Array, scale: jax.Array, chunk_elems: int
+) -> jax.Array:
+    n = q.shape[0]
+    c = n // chunk_elems
+    qc = q.reshape(c, chunk_elems).astype(jnp.float32)
+    return (qc * scale[:, None]).reshape(n)

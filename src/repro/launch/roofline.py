@@ -1,0 +1,112 @@
+"""Roofline analysis from dry-run artifacts (TPU v5e targets).
+
+Three terms per (arch x shape x mesh), all in seconds per step:
+
+  compute   = HLO_FLOPs_per_device / peak_FLOPs
+  memory    = HLO_bytes_per_device / HBM_bw
+  collective= wire_collective_bytes_per_device / ICI_bw
+
+cost_analysis() of a compiled SPMD executable is per-device (verified
+empirically — see tests/test_dryrun_small.py), so no division by chip count.
+MODEL_FLOPS (6·N·D etc.) comes from the cell plan's meta and is divided by
+device count for the usefulness ratio.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+# TPU v5e-class hardware constants (per chip)
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s per link (wire-byte estimate treats links in series)
+
+
+def analyze(rec: dict) -> dict:
+    if rec.get("status") != "ok":
+        return {"status": rec.get("status", "?"), "reason": rec.get("reason") or rec.get("error", "")[:120]}
+    nd = rec["n_devices"]
+    flops = rec["flops_per_device"]
+    membytes = rec["bytes_per_device"]
+    mem_min = rec.get("bytes_min_per_device", membytes)
+    coll = rec["collective_bytes_per_device"].get("wire_total", 0.0)
+    t_c = flops / PEAK_FLOPS
+    t_hi = membytes / HBM_BW  # unfused upper bound (CPU-backend HLO)
+    t_lo = mem_min / HBM_BW  # perfect-fusion lower bound
+    t_m = (t_hi * t_lo) ** 0.5 if t_lo > 0 else t_hi  # geometric midpoint
+    t_x = coll / ICI_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])[0]
+    model_flops = rec.get("meta", {}).get("model_flops")
+    ratio = (model_flops / nd / flops) if (model_flops and flops) else None
+    bound = max(t_c, t_m, t_x)
+    frac = t_c / bound if bound > 0 else 0.0
+    return {
+        "status": "ok",
+        "compute_s": t_c,
+        "memory_s": t_m,
+        "memory_lo_s": t_lo,
+        "memory_hi_s": t_hi,
+        "collective_s": t_x,
+        "dominant": dom,
+        "model_flops_ratio": ratio,
+        "roofline_fraction": frac,  # compute term / dominant term
+        "peak_gib": rec["memory"]["peak_estimate"] / 2**30,
+    }
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.1f}us"
+    if x < 1:
+        return f"{x*1e3:.2f}ms"
+    return f"{x:.2f}s"
+
+
+def table(dir_: Path, mesh_filter: str | None = None) -> str:
+    rows = []
+    for f in sorted(dir_.glob("*.json")):
+        rec = json.loads(f.read_text())
+        if mesh_filter and rec.get("mesh") != mesh_filter:
+            continue
+        parts = f.stem.split("__")
+        tag = "+".join(p for p in parts[3:] if p != "pbox")
+        if tag:  # optimized variant / non-default strategy artifacts
+            rec = dict(rec)
+            rec["shape"] = rec["shape"] + f"+{tag}"
+        a = analyze(rec)
+        if a["status"] != "ok":
+            rows.append((rec["arch"], rec["shape"], rec.get("mesh", "?"),
+                         a["status"], a.get("reason", ""), "", "", "", "", ""))
+            continue
+        rows.append((
+            rec["arch"], rec["shape"], rec["mesh"], "ok",
+            fmt_s(a["compute_s"]),
+            f"{fmt_s(a['memory_lo_s'])}~{fmt_s(a['memory_hi_s'])}",
+            fmt_s(a["collective_s"]), a["dominant"],
+            f"{a['model_flops_ratio']:.2f}" if a["model_flops_ratio"] else "-",
+            f"{a['peak_gib']:.2f}",
+        ))
+    hdr = ("arch", "shape", "mesh", "status", "compute", "memory(lo~hi)",
+           "collective", "dominant", "MF-ratio", "peakGiB")
+    widths = [max(len(str(r[i])) for r in rows + [hdr]) for i in range(len(hdr))]
+    lines = ["| " + " | ".join(str(h).ljust(w) for h, w in zip(hdr, widths)) + " |",
+             "|" + "|".join("-" * (w + 2) for w in widths) + "|"]
+    for r in rows:
+        lines.append("| " + " | ".join(str(c).ljust(w) for c, w in zip(r, widths)) + " |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default=None, help="16x16 or 2x16x16")
+    args = ap.parse_args()
+    print(table(Path(args.dir), args.mesh))
+
+
+if __name__ == "__main__":
+    main()

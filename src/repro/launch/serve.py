@@ -1,0 +1,87 @@
+"""Serving driver: batched LM generation (prefill + decode) or recsys
+scoring against the sharded model.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --mesh 1x2 \
+      --tokens 16 --batch 4
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--mesh", default="1x1")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    d, m = (int(x) for x in args.mesh.split("x"))
+    if d * m > 1:
+        os.environ.setdefault(
+            "XLA_FLAGS", f"--xla_force_host_platform_device_count={d*m}"
+        )
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs.registry import get_arch
+    from repro.launch.mesh import make_mesh
+    from repro.models.common import Dist
+    from repro.models import transformer as T
+    from jax.sharding import PartitionSpec as P
+
+    mesh = make_mesh((d, m), ("data", "model"))
+    arch = get_arch(args.arch)
+    cfg = arch.smoke_config
+    if arch.family != "lm":
+        raise SystemExit("serve.py drives LM archs; recsys serving is "
+                         "exercised via launch/steps.py serve cells")
+    tp = m
+    dist = Dist(model_axis="model" if m > 1 else None,
+                data_axes=("data",) if d > 1 else (), tp=tp)
+    specs = T.make_param_specs(cfg, tp)
+    params = T.init_params(cfg, jax.random.PRNGKey(args.seed), tp=tp)
+    max_seq = args.prompt_len + args.tokens
+    max_seq = -(-max_seq // tp) * tp
+
+    wa = ("data",) if d > 1 else ()
+    bspec = P(wa) if wa else P()
+    cache_spec = {"k": P(None, wa, "model" if m > 1 else None),
+                  "v": P(None, wa, "model" if m > 1 else None)}
+
+    pf = jax.jit(jax.shard_map(
+        lambda p, t: T.prefill(p, t, cfg, dist, tp, max_seq),
+        mesh=mesh, in_specs=(specs, bspec),
+        out_specs=(bspec, cache_spec), check_vma=False))
+    dc = jax.jit(jax.shard_map(
+        lambda p, t, c, pos: T.decode_step(p, t, c, pos, cfg, dist, tp),
+        mesh=mesh, in_specs=(specs, bspec, cache_spec, P()),
+        out_specs=(bspec, cache_spec), check_vma=False))
+
+    rng = np.random.default_rng(args.seed)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32)
+    t0 = time.time()
+    nxt, cache = pf(params, prompts)
+    t_prefill = time.time() - t0
+    out = [np.asarray(nxt)]
+    t0 = time.time()
+    for i in range(args.tokens - 1):
+        nxt, cache = dc(params, nxt, cache, jnp.int32(args.prompt_len + i))
+        out.append(np.asarray(nxt))
+    t_dec = time.time() - t0
+    gen = np.stack(out, axis=1)
+    print(f"prefill {args.batch}x{args.prompt_len} in {t_prefill*1e3:.1f} ms; "
+          f"{args.tokens-1} decode steps in {t_dec*1e3:.1f} ms "
+          f"({t_dec/(args.tokens-1)*1e3:.2f} ms/tok)")
+    print("generated ids:\n", gen)
+
+
+if __name__ == "__main__":
+    main()

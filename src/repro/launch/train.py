@@ -1,0 +1,155 @@
+"""End-to-end training driver.
+
+Runs real steps (synthetic data) on whatever devices exist — smoke-scale
+configs on CPU here, production configs on a pod.  Demonstrates the full
+runtime: PS exchange, prefetching pipeline, async checkpointing,
+crash-restart (--resume), and elastic owner-count changes.
+
+  PYTHONPATH=src python -m repro.launch.train --arch gemma3-1b --steps 50 \
+      --mesh 2x2 --smoke --ckpt-dir /tmp/ckpt --ckpt-every 20
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--shape", default=None, help="defaults to the train cell")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--mesh", default="1x1", help="DATAxMODEL, e.g. 2x4")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--strategy", default="pbox",
+                    choices=["allreduce", "pbox", "pbox_hier"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    d, m = (int(x) for x in args.mesh.split("x"))
+    if d * m > 1:
+        os.environ.setdefault(
+            "XLA_FLAGS", f"--xla_force_host_platform_device_count={d*m}"
+        )
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.checkpoint import Checkpointer
+    from repro.checkpoint.checkpointer import flat_to_train_state, train_state_to_flat
+    from repro.configs.registry import get_arch
+    from repro.data.pipeline import Prefetcher
+    from repro.data.synthetic import image_batches, lm_batches, recsys_batches
+    from repro.launch.mesh import make_mesh
+    from repro.launch.steps import build_cell
+    from repro.runtime.trainer import TrainState, init_train_state
+
+    mesh = make_mesh((d, m), ("data", "model"))
+    arch = get_arch(args.arch)
+    shape = args.shape or {
+        "lm": "train_4k", "recsys": "train_batch", "gnn": "molecule",
+        "vision": "imagenet_train",
+    }[arch.family]
+    plan = build_cell(args.arch, shape, mesh, strategy=args.strategy,
+                      smoke=args.smoke)
+    cfg = arch.smoke_config if args.smoke else arch.config
+    space = plan.meta["space"]
+    ng = plan.meta["n_groups"]
+    from repro.launch.steps import make_exchange
+    exchange = make_exchange(mesh, arch.family, args.strategy)
+
+    # ---- data ----
+    bt = plan.abstract_args[4]
+    if arch.family == "lm":
+        gb, s = bt["tokens"].shape
+        it = lm_batches(cfg.vocab, gb, s, args.seed)
+    elif arch.family == "recsys":
+        gb = bt["sparse"].shape[0]
+        it = recsys_batches(args.arch, cfg, gb, args.seed)
+    elif arch.family == "vision":
+        gb = bt["images"].shape[0]
+        it = image_batches(gb, bt["images"].shape[1], cfg.n_classes, args.seed)
+    else:  # gnn molecule smoke
+        from repro.data.graphs import random_molecule_batch
+
+        def gen():
+            i = 0
+            while True:
+                b = bt["node_feat"].shape[0] // 8
+                yield random_molecule_batch(
+                    bt["targets"].shape[0], 8,
+                    bt["edge_src"].shape[0] // bt["targets"].shape[0],
+                    cfg.d_in, cfg.l_max, cfg.n_rbf, seed=args.seed + i)
+                i += 1
+        it = gen()
+    data = Prefetcher(it, depth=2)
+
+    # ---- state (fresh or restored) ----
+    ckpt = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
+    start = 0
+    if args.resume and ckpt and ckpt.latest_step() is not None:
+        host, meta = ckpt.restore()
+        state = flat_to_train_state(host, TrainState)
+        start = int(host["step"])
+        print(f"resumed from step {start}")
+    else:
+        if arch.family == "lm":
+            from repro.models.transformer import init_params as ip
+            init_fn = lambda k: ip(cfg, k, tp=m)
+            specs = __import__("repro.models.transformer", fromlist=["x"]) \
+                .make_param_specs(cfg, m)
+        elif arch.family == "recsys":
+            from repro.launch.steps import _RS_FNS
+            fi, fs = _RS_FNS[args.arch][0], _RS_FNS[args.arch][1]
+            init_fn = lambda k: fi(cfg, k, m)
+            specs = fs(cfg, m)
+        elif arch.family == "vision":
+            from repro.models.resnet import init_params as ip
+            init_fn = lambda k: ip(cfg, k)
+            specs = jax.tree.map(
+                lambda _: jax.sharding.PartitionSpec(), jax.eval_shape(
+                    lambda: ip(cfg, jax.random.PRNGKey(0))),
+                is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        else:
+            from repro.models.gnn.equiformer_v2 import init_params as ip
+            from repro.models.gnn.equiformer_v2 import make_param_specs as mps
+            import dataclasses as dc
+            gcfg = dc.replace(cfg, d_in=cfg.d_in, n_out=1, task="graph_reg")
+            init_fn = lambda k: ip(gcfg, k, m)
+            specs = mps(gcfg, m)
+        state = init_train_state(
+            mesh, init_params_fn=init_fn, param_specs=specs, exchange=exchange,
+            space=space, n_groups=ng, key=jax.random.PRNGKey(args.seed),
+            ps_dtype=plan.abstract_args[0].dtype)
+
+    pflat, slots, ef, stc = state.pflat, state.slots, state.ef, state.step
+    t0 = time.time()
+    for i in range(start, args.steps):
+        batch = next(data)
+        batch = jax.tree.map(jnp.asarray, batch)
+        pflat, slots, ef, stc, met = plan.fn(pflat, slots, ef, stc, batch)
+        if (i + 1) % args.log_every == 0 or i == start:
+            met = jax.tree.map(float, jax.device_get(met))
+            dt = (time.time() - t0) / (i - start + 1)
+            print(f"step {i+1:5d} loss={met['loss']:.4f} "
+                  + " ".join(f"{k}={v:.4f}" for k, v in met.items() if k != "loss")
+                  + f" ({dt*1e3:.0f} ms/step)", flush=True)
+        if ckpt and args.ckpt_every and (i + 1) % args.ckpt_every == 0:
+            st = TrainState(pflat=pflat, slots=slots, ef=ef, step=stc)
+            ckpt.save_async(i + 1, train_state_to_flat(st))
+    if ckpt:
+        st = TrainState(pflat=pflat, slots=slots, ef=ef, step=stc)
+        ckpt.save(args.steps, train_state_to_flat(st))
+        ckpt.wait()
+    data.close()
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

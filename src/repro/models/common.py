@@ -1,0 +1,139 @@
+"""Shared model machinery: distribution context, init, norms, activations.
+
+All models are pure functions over param pytrees and are written as
+*per-device* code for a fully manual ``jax.shard_map``: tensor-parallel
+collectives are explicit ``lax.psum``/``psum_scatter`` calls over the
+``model`` axis.  A ``Dist`` context carries the axis names; ``Dist.none()``
+makes the same code run on a single device (smoke tests), with all
+collectives degrading to identity.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@dataclasses.dataclass(frozen=True)
+class Dist:
+    """Distribution context (static)."""
+
+    model_axis: str | None = None  # TP axis name (None = single device)
+    data_axes: tuple[str, ...] = ()  # batch-sharding axes
+    tp: int = 1  # size of model axis
+
+    @staticmethod
+    def none() -> "Dist":
+        return Dist()
+
+    @property
+    def distributed(self) -> bool:
+        return self.model_axis is not None
+
+    # -- collectives (identity when single-device) ----------------------
+    def psum_model(self, x):
+        if self.model_axis is None:
+            return x
+        return lax.psum(x, self.model_axis)
+
+    def pmax_model(self, x):
+        if self.model_axis is None:
+            return x
+        return lax.pmax(x, self.model_axis)
+
+    def psum_scatter_model(self, x, axis: int):
+        """Combine partial results AND split ``axis`` over the model axis."""
+        if self.model_axis is None:
+            return x
+        return lax.psum_scatter(
+            x, self.model_axis, scatter_dimension=axis, tiled=True
+        )
+
+    def all_gather_model(self, x, axis: int):
+        if self.model_axis is None:
+            return x
+        return lax.all_gather(x, self.model_axis, axis=axis, tiled=True)
+
+    def all_gather_data(self, x, axis: int):
+        if not self.data_axes:
+            return x
+        return lax.all_gather(x, self.data_axes, axis=axis, tiled=True)
+
+    def model_index(self):
+        if self.model_axis is None:
+            return jnp.int32(0)
+        return lax.axis_index(self.model_axis)
+
+
+# ---------------------------------------------------------------------------
+# initializers (explicit PRNG threading; no flax)
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, in_dim: int, dtype=jnp.float32, scale: float = 1.0):
+    std = scale / math.sqrt(in_dim)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32, std: float = 0.02):
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * lax.rsqrt(var + eps) * (1.0 + weight.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * lax.rsqrt(var + eps)
+    out = out * weight.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(dt)
+
+
+def act_fn(name: str):
+    return {
+        "relu": jax.nn.relu,
+        "gelu": jax.nn.gelu,
+        "silu": jax.nn.silu,
+        "tanh": jnp.tanh,
+        "sigmoid": jax.nn.sigmoid,
+    }[name]
+
+
+def rope_freqs(head_dim: int, theta: float = 1e4):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float = 1e4):
+    """x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def count_params(tree) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(tree))

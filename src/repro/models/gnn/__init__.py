@@ -1,0 +1,1 @@
+"""Equivariant GNN (EquiformerV2 / eSCN backbone) + graph utilities."""

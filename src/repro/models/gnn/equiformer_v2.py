@@ -1,0 +1,364 @@
+"""EquiformerV2 backbone: eSCN SO(2) equivariant graph attention (JAX).
+
+Faithful-in-structure implementation of arXiv:2306.12059 adapted to TPU:
+
+  * node features are real-SH irreps x: (N, (l_max+1)^2, C)
+  * per edge, features are rotated into the edge-aligned frame using
+    precomputed Wigner blocks (data pipeline, see spherical.py); there the
+    SO(3) tensor-product convolution reduces to SO(2) linear maps over the
+    |m| <= m_max components (the eSCN O(L^6) -> O(L^3) trick)
+  * graph attention (8 heads) with segment-softmax over incoming edges
+  * equivariant RMS norm (per degree l) and gated irrep FFN
+
+TPU adaptation notes (DESIGN.md §2): message passing is scatter/gather via
+``jax.ops.segment_sum`` over an edge index (JAX has no CSR SpMM); channels
+are tensor-parallel over the ``model`` axis — every channel-mixing linear is
+``partial @ W`` followed by ``psum_scatter`` over the channel dim (reduce +
+re-shard in one collective, the PHub exchange pattern at layer scale).
+For full-graph-large mode, node shards live on the data axes and source
+features are all-gathered per layer (the baseline whose collective term the
+§Perf loop attacks).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.common import Dist, dense_init, split_keys
+
+
+@dataclasses.dataclass(frozen=True)
+class EquiformerConfig:
+    name: str
+    n_layers: int = 12
+    channels: int = 128
+    l_max: int = 6
+    m_max: int = 2
+    n_heads: int = 8
+    n_rbf: int = 32
+    d_in: int = 128  # input node feature dim
+    n_out: int = 1
+    task: str = "node_class"  # "node_class" | "graph_reg"
+    dtype: Any = jnp.float32
+    param_dtype: Any = jnp.float32
+    remat: bool = True
+    # Edge-parallel mode (beyond-paper, EXPERIMENTS.md §Perf): channels kept
+    # whole and the model axis shards *edges* instead.  The per-edge SO(2)
+    # conv then needs no collectives at all; the only model-axis collective
+    # is one node-sized psum per layer (edge count >> node count, so this
+    # trades many edge-sized reduce-scatters for one node-sized psum).
+    # Params are replicated over the model axis (grad tag "psum_model").
+    edge_parallel: bool = False
+
+    @property
+    def num_coef(self) -> int:
+        return (self.l_max + 1) ** 2
+
+    # --- static m-restricted index plans (eSCN layout) ---
+    def m0_idx(self):
+        return [l * l + l for l in range(self.l_max + 1)]
+
+    def mp_idx(self, m):
+        return [l * l + l + m for l in range(m, self.l_max + 1)]
+
+    def mn_idx(self, m):
+        return [l * l + l - m for l in range(m, self.l_max + 1)]
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: EquiformerConfig, key, tp: int = 1) -> dict:
+    c = cfg.channels
+    k = cfg.num_coef
+    pdt = cfg.param_dtype
+    n0 = cfg.l_max + 1
+    keys = iter(split_keys(key, 16 + cfg.n_layers))
+
+    def so2_w(key_, n_l):
+        # (n_l, C, n_l, C): in-(degree,channel) -> out-(degree,channel)
+        return dense_init(key_, (cfg.n_layers, n_l, c, n_l, c), n_l * c, pdt)
+
+    params = {
+        "embed": dense_init(next(ks := keys), (cfg.d_in, c), cfg.d_in, pdt),
+        "layers": {
+            "w0": so2_w(next(ks), n0),
+            "gate_rbf": dense_init(
+                next(ks), (cfg.n_layers, cfg.n_rbf, cfg.m_max + 1), cfg.n_rbf, pdt
+            ),
+            "w_att": dense_init(next(ks), (cfg.n_layers, n0, c, cfg.n_heads), n0 * c, pdt),
+            "w_upd": dense_init(next(ks), (cfg.n_layers, c, c), c, pdt),
+            "ln_a": jnp.ones((cfg.n_layers, cfg.l_max + 1), pdt),
+            "ln_f": jnp.ones((cfg.n_layers, cfg.l_max + 1), pdt),
+            "f1": dense_init(next(ks), (cfg.n_layers, c, 2 * c), c, pdt),
+            "f_gate": dense_init(next(ks), (cfg.n_layers, c, 2 * c), c, pdt),
+            "f2": dense_init(next(ks), (cfg.n_layers, 2 * c, c), 2 * c, pdt),
+        },
+        "head": dense_init(next(ks), (c, cfg.n_out), c, pdt),
+    }
+    for m in range(1, cfg.m_max + 1):
+        n_l = cfg.l_max + 1 - m
+        params["layers"][f"wr{m}"] = so2_w(next(ks), n_l)
+        params["layers"][f"wi{m}"] = so2_w(next(ks), n_l)
+    return params
+
+
+def make_param_specs(cfg: EquiformerConfig, tp: int, axis: str = "model") -> dict:
+    from jax.sharding import PartitionSpec as P
+
+    M = axis if (tp > 1 and not cfg.edge_parallel) else None
+    so2 = P(None, None, M, None, None)  # shard input channels
+    layers = {
+        "w0": so2,
+        "gate_rbf": P(),
+        "w_att": P(None, None, M, None),
+        "w_upd": P(None, M, None),
+        "ln_a": P(),
+        "ln_f": P(),
+        "f1": P(None, M, None),
+        "f_gate": P(None, M, None),
+        "f2": P(None, M, None),
+    }
+    for m in range(1, cfg.m_max + 1):
+        layers[f"wr{m}"] = so2
+        layers[f"wi{m}"] = so2
+    return {"embed": P(None, M), "layers": layers, "head": P(M, None)}
+
+
+def grad_sync(cfg: EquiformerConfig, tp: int) -> dict:
+    if cfg.edge_parallel and tp > 1:
+        # every param is replicated over the model axis; each device's grads
+        # cover only its edge shard's paths -> psum completes them (the
+        # /tp loss division makes replicated node-path terms sum to 1x)
+        sync = jax.tree.map(
+            lambda _: "psum_model",
+            make_param_specs(cfg, 1),
+            is_leaf=lambda x: not isinstance(x, dict),
+        )
+        return sync
+    layers = {k: "none" for k in [
+        "w0", "w_att", "w_upd", "ln_a", "ln_f", "f1", "f_gate", "f2"]}
+    layers["gate_rbf"] = "psum_model" if tp > 1 else "none"
+    layers["ln_a"] = "psum_model" if tp > 1 else "none"
+    layers["ln_f"] = "psum_model" if tp > 1 else "none"
+    for m in range(1, cfg.m_max + 1):
+        layers[f"wr{m}"] = "none"
+        layers[f"wi{m}"] = "none"
+    return {"embed": "none", "layers": layers, "head": "none"}
+
+
+# ---------------------------------------------------------------------------
+# building blocks (per-device; channels sharded C_loc = C/tp)
+# ---------------------------------------------------------------------------
+
+def _mix(x, w, dist: Dist):
+    """Channel-mixing linear: x (..., C_loc_in) @ w (C_loc_in, C_out) ->
+    psum_scatter over the output channel dim -> (..., C_out/tp)."""
+    y = x @ w
+    if dist.model_axis is None:
+        return y
+    return lax.psum_scatter(
+        y, dist.model_axis, scatter_dimension=y.ndim - 1, tiled=True
+    )
+
+
+def _so2_apply(xr, w, dist: Dist):
+    """SO(2) block: xr (E, n_l, C_loc) x w (n_l, C_loc, n_l, C) -> (E, n_l, C/tp)."""
+    y = jnp.einsum("elc,lcmo->emo", xr, w)
+    if dist.model_axis is None:
+        return y
+    return lax.psum_scatter(y, dist.model_axis, scatter_dimension=2, tiled=True)
+
+
+def _rotate(x, wigner, cfg: EquiformerConfig, inverse: bool = False):
+    """x (E, K, C) rotated per edge by packed Wigner blocks (E, packed)."""
+    outs = []
+    off = 0
+    for l in range(cfg.l_max + 1):
+        w = 2 * l + 1
+        d = wigner[:, off : off + w * w].reshape(-1, w, w)
+        off += w * w
+        xl = x[:, l * l : l * l + w]
+        if inverse:
+            outs.append(jnp.einsum("enm,enc->emc", d, xl))
+        else:
+            outs.append(jnp.einsum("emn,enc->emc", d, xl))
+    return jnp.concatenate(outs, axis=1)
+
+
+def _equiv_norm(x, scale, cfg: EquiformerConfig, dist: Dist, eps=1e-6):
+    """RMS norm per degree l over (m, all channels); scale (l_max+1,)."""
+    outs = []
+    for l in range(cfg.l_max + 1):
+        xl = x[:, l * l : (l + 1) ** 2]
+        ss = jnp.mean(xl.astype(jnp.float32) ** 2, axis=(1, 2), keepdims=True)
+        if dist.model_axis is not None:
+            ss = lax.pmean(ss, dist.model_axis)
+        outs.append((xl * lax.rsqrt(ss + eps) * scale[l]).astype(x.dtype))
+    return jnp.concatenate(outs, axis=1)
+
+
+def _segment_softmax(logits, seg_ids, num_segments, dist: Dist | None = None):
+    """Softmax over incoming edges; with ``dist`` the edge set is sharded
+    over the model axis and the max/sum reduce across shards."""
+    mx = jax.ops.segment_max(lax.stop_gradient(logits), seg_ids,
+                             num_segments=num_segments)
+    mx = jnp.nan_to_num(mx, neginf=0.0)
+    if dist is not None and dist.model_axis is not None:
+        mx = dist.pmax_model(mx)
+    e = jnp.exp(logits - mx[seg_ids])
+    den = jax.ops.segment_sum(e, seg_ids, num_segments=num_segments)
+    if dist is not None and dist.model_axis is not None:
+        den = dist.psum_model(den)
+    return e / jnp.maximum(den[seg_ids], 1e-9)
+
+
+def _so2_conv(xr, lp, rbf, cfg: EquiformerConfig, dist: Dist):
+    """eSCN conv in the rotated frame: per |m| <= m_max SO(2) linear maps,
+    distance-gated.  xr (E, K, C_loc) -> (E, K, C_loc)."""
+    e = xr.shape[0]
+    gates = rbf @ lp["gate_rbf"]  # (E, m_max+1)
+    # m = 0
+    x0 = xr[:, jnp.array(cfg.m0_idx())]
+    y0 = _so2_apply(x0, lp["w0"], dist) * gates[:, 0, None, None]
+    out_parts = [(jnp.array(cfg.m0_idx()), y0)]
+    for m in range(1, cfg.m_max + 1):
+        xp = xr[:, jnp.array(cfg.mp_idx(m))]
+        xn = xr[:, jnp.array(cfg.mn_idx(m))]
+        yr_p = _so2_apply(xp, lp[f"wr{m}"], dist) - _so2_apply(xn, lp[f"wi{m}"], dist)
+        yr_n = _so2_apply(xp, lp[f"wi{m}"], dist) + _so2_apply(xn, lp[f"wr{m}"], dist)
+        g = gates[:, m, None, None]
+        out_parts.append((jnp.array(cfg.mp_idx(m)), yr_p * g))
+        out_parts.append((jnp.array(cfg.mn_idx(m)), yr_n * g))
+    cloc = y0.shape[-1]
+    buf = jnp.zeros((e, cfg.num_coef, cloc), xr.dtype)
+    for idx, val in out_parts:
+        buf = buf.at[:, idx].set(val.astype(xr.dtype))
+    return buf
+
+
+def _layer(
+    x, lp, graph, cfg: EquiformerConfig, dist: Dist, gather_nodes
+):
+    """One EquiformerV2 block.  x (N_loc, K, C_loc).
+
+    edge_parallel: channels whole (cdist degenerates every channel mix to a
+    local matmul), edges sharded over the model axis; the segment-softmax
+    stats and the per-dst aggregate psum across edge shards."""
+    ep = cfg.edge_parallel and dist.model_axis is not None
+    cdist = Dist.none() if ep else dist
+    src, dst = graph["edge_src"], graph["edge_dst"]
+    wig, rbf = graph["wigner"], graph["rbf"]
+    emask = graph["edge_mask"]
+    n_loc = x.shape[0]
+    cloc = x.shape[2]
+
+    h = _equiv_norm(x, lp["ln_a"], cfg, cdist)
+    msg_in = gather_nodes(h, src) + jnp.take(h, dst, axis=0)
+    # rotate into edge frame, SO(2) conv, attention stats
+    mr = _rotate(msg_in, wig, cfg)
+    conv = _so2_conv(mr, lp, rbf, cfg, cdist)  # (E, K, C_loc)
+    # attention logits from the m=0 (invariant) components
+    inv = conv[:, jnp.array(cfg.m0_idx())]  # (E, n0, C_loc)
+    logits = jnp.einsum("elc,lch->eh", jax.nn.leaky_relu(inv), lp["w_att"])
+    if not ep and dist.model_axis is not None:
+        logits = lax.psum(logits, dist.model_axis)
+    logits = jnp.where(emask[:, None], logits, -1e30)
+    att = _segment_softmax(logits, dst, n_loc, dist if ep else None)  # (E, H)
+    # map attention heads onto local channels
+    midx = jnp.int32(0) if ep else dist.model_index()
+    gcid = midx * cloc + jnp.arange(cloc)
+    head_of_c = gcid // (cfg.channels // cfg.n_heads)
+    a_ch = jnp.take(att, head_of_c, axis=1)  # (E, C_loc)
+    # rotate back and aggregate
+    val = _rotate(conv, wig, cfg, inverse=True)
+    val = val * a_ch[:, None, :] * emask[:, None, None]
+    agg = jax.ops.segment_sum(val, dst, num_segments=n_loc)
+    if ep:
+        # the one model-axis collective per layer: node-sized, not edge-sized
+        agg = dist.psum_model(agg)
+    x = x + _mix(agg, lp["w_upd"], cdist).astype(x.dtype)
+
+    # gated irrep FFN
+    h = _equiv_norm(x, lp["ln_f"], cfg, cdist)
+    hid = _mix(h, lp["f1"], cdist)  # (N, K, 2C/tp)
+    gate = jax.nn.sigmoid(_mix(h[:, 0:1], lp["f_gate"], cdist))  # l=0 scalars
+    hid = hid * gate
+    x = x + _mix(hid, lp["f2"], cdist).astype(x.dtype)
+    return x
+
+
+def forward(params, graph, cfg: EquiformerConfig, dist: Dist, dist_nodes: bool = False):
+    """graph: node_feat (N_loc, d_in), edge_src/dst, wigner, rbf, masks.
+
+    dist_nodes: nodes sharded over data axes (full-graph-large mode); source
+    indices are then *global* and features are all-gathered per layer."""
+    feat = graph["node_feat"].astype(cfg.dtype)
+    # column-parallel input embedding: output channels sharded, no collective
+    x0 = feat @ params["embed"]  # (N_loc, C_loc) l=0 channels
+    n_loc, cloc = x0.shape
+    x = jnp.zeros((n_loc, cfg.num_coef, cloc), cfg.dtype).at[:, 0].set(x0)
+
+    ep = cfg.edge_parallel and dist.model_axis is not None
+    if dist_nodes and dist.data_axes:
+        if ep:
+            # node shards carry full channels (edge-parallel); gathering
+            # them whole would cost tp x the channel-sharded baseline —
+            # instead gather a channel slice, take the edge rows, and
+            # restore channels on the (much smaller) edge set.
+            def gather_nodes(h, src):
+                cs = h.shape[2] // dist.tp
+                hs = lax.dynamic_slice_in_dim(
+                    h, dist.model_index() * cs, cs, axis=2)
+                h_all = dist.all_gather_data(hs, axis=0)  # (N, K, C/tp)
+                rows = jnp.take(h_all, src, axis=0)
+                return dist.all_gather_model(rows, axis=2)  # (E_loc, K, C)
+        else:
+            def gather_nodes(h, src):
+                return jnp.take(dist.all_gather_data(h, axis=0), src, axis=0)
+    else:
+        def gather_nodes(h, src):
+            return jnp.take(h, src, axis=0)
+
+    def body(x, lp):
+        return _layer(x, lp, graph, cfg, dist, gather_nodes), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = lax.scan(body_fn, x, params["layers"])
+    return x
+
+
+def loss_fn(params, graph, cfg: EquiformerConfig, dist: Dist, dist_nodes: bool = False):
+    x = forward(params, graph, cfg, dist, dist_nodes)
+    inv = x[:, 0]  # (N_loc, C_loc) invariant features
+    out = inv @ params["head"]  # partial (N_loc, n_out)
+    if dist.model_axis is not None and not cfg.edge_parallel:
+        out = lax.psum(out, dist.model_axis)
+    nmask = graph["node_mask"]
+    # per-device loss is replicated over the model axis -> divide by tp so the
+    # sum over devices (what per-device autodiff differentiates) is the true
+    # loss; see transformer.grad_sync docstring.
+    tp_div = dist.tp if dist.model_axis is not None else 1
+    if cfg.task == "node_class":
+        labels = graph["labels"]
+        logp = jax.nn.log_softmax(out.astype(jnp.float32), axis=-1)
+        ce = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+        loss = jnp.sum(ce * nmask) / jnp.maximum(jnp.sum(nmask), 1.0)
+        acc = jnp.sum((jnp.argmax(out, -1) == labels) * nmask) / jnp.maximum(
+            jnp.sum(nmask), 1.0
+        )
+        return loss / tp_div, {"acc": acc, "ce": loss}
+    # graph regression: segment-sum readout over graph ids
+    gid = graph["graph_ids"]
+    n_graphs = graph["targets"].shape[0]
+    energy = jax.ops.segment_sum(out[:, 0] * nmask, gid, num_segments=n_graphs)
+    err = energy - graph["targets"]
+    gmask = graph.get("graph_mask", jnp.ones((n_graphs,), jnp.float32))
+    loss = jnp.sum(err * err * gmask) / jnp.maximum(jnp.sum(gmask), 1.0)
+    return loss / tp_div, {"mse": loss}

@@ -1,0 +1,113 @@
+"""Mixture-of-Experts FFN with capacity-based argsort dispatch.
+
+Experts are *tensor-parallel* over the ``model`` axis (every device holds a
+1/tp slice of every expert's hidden dim): routing and dispatch are computed
+identically on all model-shards, expert matmuls produce partial outputs, and
+one ``psum`` (shared with the dense path) completes the block.  This keeps
+expert count free of mesh-divisibility constraints (60 experts on a 16-way
+axis) and adds no all-to-all; an expert-parallel dispatch variant is a
+planned beyond-paper optimization (see EXPERIMENTS.md §Perf).
+
+Dispatch uses the GShard/Switch capacity pattern, built from argsort (no
+(T, E, C) one-hot): sort assignments by expert, compute each assignment's
+rank within its expert group, drop overflow beyond capacity, and
+scatter-gather through an (E, C, d) buffer.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Dist, act_fn
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    shared_d_ff: int = 0  # 0 = no shared expert
+    capacity_factor: float = 1.25
+    aux_loss_coef: float = 0.01
+    router_dtype: str = "float32"
+
+    def capacity(self, tokens: int) -> int:
+        c = int(self.capacity_factor * tokens * self.top_k / self.n_experts)
+        return max(8, -(-c // 8) * 8)
+
+
+def route_topk(logits: jax.Array, cfg: MoEConfig):
+    """logits (T, E) -> (weights (T,k), experts (T,k), aux_loss scalar)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    vals, idx = jax.lax.top_k(probs, cfg.top_k)
+    vals = vals / jnp.maximum(jnp.sum(vals, axis=-1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss: E * sum_e f_e * p_e
+    t = logits.shape[0]
+    onehot = jax.nn.one_hot(idx[:, 0], cfg.n_experts, dtype=jnp.float32)
+    f = jnp.mean(onehot, axis=0)
+    p = jnp.mean(probs, axis=0)
+    aux = cfg.aux_loss_coef * cfg.n_experts * jnp.sum(f * p)
+    return vals, idx, aux
+
+
+def dispatch_indices(experts: jax.Array, cfg: MoEConfig, capacity: int):
+    """experts (T, k) -> (buf_pos (T*k,), keep (T*k,)) where buf_pos indexes a
+    flattened (E*C) expert buffer."""
+    tk = experts.size
+    flat_e = experts.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)  # assignments grouped by expert
+    sorted_e = flat_e[order]
+    # rank within the expert group
+    counts = jnp.bincount(flat_e, length=cfg.n_experts)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype), jnp.cumsum(counts)[:-1]])
+    rank_sorted = jnp.arange(tk) - starts[sorted_e]
+    rank = jnp.zeros((tk,), rank_sorted.dtype).at[order].set(rank_sorted)
+    keep = rank < capacity
+    buf_pos = jnp.where(keep, flat_e * capacity + rank, 0)
+    return buf_pos, keep
+
+
+def moe_ffn(
+    x: jax.Array,  # (T, d) tokens
+    weights: dict,  # router (d,E); we1/we3 (E,d,Fe_loc); we2 (E,Fe_loc,d);
+    # optional ws1/ws3 (d,Fs_loc), ws2 (Fs_loc,d)
+    cfg: MoEConfig,
+    dist: Dist,
+    act: str = "silu",
+):
+    """Returns (partial output (T, d) — caller psums over model —, aux_loss)."""
+    t, d = x.shape
+    logits = x.astype(jnp.float32) @ weights["router"].astype(jnp.float32)
+    gate_w, gate_e, aux = route_topk(logits, cfg)
+
+    capacity = cfg.capacity(t)
+    buf_pos, keep = dispatch_indices(gate_e, cfg, capacity)
+    tok_of_assign = jnp.repeat(jnp.arange(t), cfg.top_k)
+
+    # scatter tokens into the (E*C, d) buffer (dropped assignments write to a
+    # scratch row which is ignored on the way back)
+    buf = jnp.zeros((cfg.n_experts * capacity, d), x.dtype)
+    src = jnp.where(keep, buf_pos, cfg.n_experts * capacity - 1)
+    buf = buf.at[src].set(
+        jnp.where(keep[:, None], x[tok_of_assign], 0.0).astype(x.dtype)
+    )
+    buf = buf.reshape(cfg.n_experts, capacity, d)
+
+    # expert SwiGLU over the local hidden slice
+    a = act_fn(act)
+    h = a(jnp.einsum("ecd,edf->ecf", buf, weights["we1"])) * jnp.einsum(
+        "ecd,edf->ecf", buf, weights["we3"]
+    )
+    out_buf = jnp.einsum("ecf,efd->ecd", h, weights["we2"])
+    out_buf = out_buf.reshape(cfg.n_experts * capacity, d)
+
+    # combine: weighted gather back to tokens
+    per_assign = out_buf[buf_pos] * (gate_w.reshape(-1) * keep)[:, None].astype(x.dtype)
+    out = jax.ops.segment_sum(per_assign, tok_of_assign, num_segments=t)
+
+    if cfg.shared_d_ff:
+        hs = a(x @ weights["ws1"]) * (x @ weights["ws3"])
+        out = out + hs @ weights["ws2"]
+    return out.astype(x.dtype), aux

@@ -1,0 +1,1 @@
+"""RecSys models: DLRM, AutoInt, DIEN, xDeepFM over PS-sharded embeddings."""

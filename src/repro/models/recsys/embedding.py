@@ -1,0 +1,136 @@
+"""PS-sharded embedding tables — the paper's workload par excellence.
+
+Tables are row-sharded over the ``model`` axis (each device is a PBox
+micro-shard holding a contiguous row range of every table).  A lookup is the
+PS "pull": each shard gathers the rows it owns (mask + clipped take, JAX's
+EmbeddingBag construction) producing a *partial* (B, F, D); one
+``psum_scatter`` over the model axis then simultaneously (a) combines the
+shard-partial rows and (b) re-shards the batch over the model axis, so the
+dense interaction/MLP stage runs batch-parallel on the full mesh (the
+standard DLRM "butterfly" between model-parallel embeddings and
+data-parallel dense compute).  Its transpose (all_gather) routes sparse
+gradients back to the owning rows — the PS "push" — for free in autodiff.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import Dist, embed_init, split_keys
+
+
+def padded_vocab(v: int, tp: int) -> int:
+    return -(-v // tp) * tp
+
+
+def init_tables(key, vocabs, dim: int, tp: int = 1, dtype=jnp.float32) -> dict:
+    keys = split_keys(key, len(vocabs))
+    return {
+        f"t{i}": embed_init(keys[i], (padded_vocab(v, tp), dim), dtype, std=0.01)
+        for i, v in enumerate(vocabs)
+    }
+
+
+def table_specs(vocabs, tp: int, axis: str = "model") -> dict:
+    M = axis if tp > 1 else None
+    return {f"t{i}": P(M, None) for i in range(len(vocabs))}
+
+
+def table_grad_sync(vocabs) -> dict:
+    return {f"t{i}": "none" for i in range(len(vocabs))}
+
+
+def lookup_fields(tables: dict, ids: jax.Array, dist: Dist) -> jax.Array:
+    """ids (B, F) one id per field -> (B/tp, F, D) batch-resharded embeddings.
+
+    Per field: local masked gather from the row shard (partial), then one
+    psum_scatter over the model axis combining partials + splitting batch.
+    """
+    midx = dist.model_index()
+    parts = []
+    for i in range(ids.shape[1]):
+        t = tables[f"t{i}"]
+        vloc = t.shape[0]
+        local = ids[:, i] - midx * vloc
+        ok = (local >= 0) & (local < vloc)
+        rows = jnp.take(t, jnp.clip(local, 0, vloc - 1), axis=0)
+        parts.append(jnp.where(ok[:, None], rows, 0.0))
+    e = jnp.stack(parts, axis=1)  # (B, F, D) partial
+    if dist.model_axis is None:
+        return e
+    return lax.psum_scatter(e, dist.model_axis, scatter_dimension=0, tiled=True)
+
+
+def lookup_sequence(table: jax.Array, ids: jax.Array, dist: Dist) -> jax.Array:
+    """ids (B, T) from a single table -> (B/tp, T, D) (history sequences)."""
+    midx = dist.model_index()
+    vloc = table.shape[0]
+    local = ids - midx * vloc
+    ok = (local >= 0) & (local < vloc)
+    rows = jnp.take(table, jnp.clip(local, 0, vloc - 1), axis=0)
+    e = jnp.where(ok[..., None], rows, 0.0)
+    if dist.model_axis is None:
+        return e
+    return lax.psum_scatter(e, dist.model_axis, scatter_dimension=0, tiled=True)
+
+
+def split_batch_model(x: jax.Array, dist: Dist) -> jax.Array:
+    """Slice the worker batch to this device's model-axis sub-batch (aligned
+    with psum_scatter's batch split)."""
+    if dist.model_axis is None:
+        return x
+    midx = dist.model_index()
+    b_loc = x.shape[0] // dist.tp
+    return lax.dynamic_slice_in_dim(x, midx * b_loc, b_loc, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# plain MLP machinery (dense stage, batch-parallel — no TP needed)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, dims, dtype=jnp.float32) -> dict:
+    from repro.models.common import dense_init
+
+    keys = split_keys(key, len(dims) - 1)
+    return {
+        f"w{i}": dense_init(keys[i], (dims[i], dims[i + 1]), dims[i], dtype)
+        for i in range(len(dims) - 1)
+    } | {f"b{i}": jnp.zeros((dims[i + 1],), dtype) for i in range(len(dims) - 1)}
+
+
+def mlp_specs(dims) -> dict:
+    return {f"w{i}": P() for i in range(len(dims) - 1)} | {
+        f"b{i}": P() for i in range(len(dims) - 1)
+    }
+
+
+def mlp_grad_sync(dims, tp: int) -> dict:
+    s = "psum_model" if tp > 1 else "none"
+    return {f"w{i}": s for i in range(len(dims) - 1)} | {
+        f"b{i}": s for i in range(len(dims) - 1)
+    }
+
+
+def apply_mlp(p: dict, x, act=jax.nn.relu, final_act=None):
+    n = len([k for k in p if k.startswith("w")])
+    for i in range(n):
+        x = x @ p[f"w{i}"] + p[f"b{i}"]
+        if i < n - 1:
+            x = act(x)
+        elif final_act is not None:
+            x = final_act(x)
+    return x
+
+
+def bce_loss(logits: jax.Array, labels: jax.Array, dist: Dist):
+    """Per-device mean BCE divided by tp (sums to the worker mean across the
+    model-axis batch split — see DESIGN.md loss-scaling note)."""
+    z = logits.astype(jnp.float32)
+    y = labels.astype(jnp.float32)
+    per = jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z)))
+    loss = jnp.mean(per)
+    if dist.model_axis is not None:
+        loss = loss / dist.tp
+    return loss

@@ -1,0 +1,501 @@
+"""The four assigned recsys architectures over PS-sharded embeddings.
+
+Each model exposes: Config, init_params(cfg, key, tp), make_param_specs,
+grad_sync, loss(params, batch, cfg, dist), score(params, batch, cfg, dist)
+(serving logits), and user_tower (retrieval).  Batches:
+  dense (B, n_dense) f32 | sparse (B, F) int32 | labels (B,) {0,1}
+  DIEN adds hist (B, T) + target fields.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import Dist, dense_init, split_keys
+from repro.models.recsys.embedding import (
+    apply_mlp,
+    bce_loss,
+    init_mlp,
+    init_tables,
+    lookup_fields,
+    lookup_sequence,
+    mlp_grad_sync,
+    mlp_specs,
+    split_batch_model,
+    table_grad_sync,
+    table_specs,
+)
+
+# Criteo-Terabyte vocabulary sizes capped at 40M (MLPerf DLRM convention)
+CRITEO_VOCABS = (
+    40000000, 36746, 17245, 7413, 20243, 3, 7114, 1441, 62, 29275261,
+    1572176, 345138, 10, 2209, 11267, 128, 4, 974, 14, 40000000,
+    11316796, 40000000, 452104, 12606, 104, 35,
+)
+
+
+# ===========================================================================
+# DLRM (MLPerf config)
+# ===========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm-mlperf"
+    n_dense: int = 13
+    vocabs: tuple = CRITEO_VOCABS
+    embed_dim: int = 128
+    bot_mlp: tuple = (512, 256, 128)
+    top_mlp: tuple = (1024, 1024, 512, 256, 1)
+    dtype: Any = jnp.float32
+
+    @property
+    def n_sparse(self) -> int:
+        return len(self.vocabs)
+
+    @property
+    def top_in(self) -> int:
+        f = self.n_sparse + 1
+        return self.embed_dim + f * (f - 1) // 2
+
+    def param_count(self) -> int:
+        n = sum(self.vocabs) * self.embed_dim
+        dims_b = (self.n_dense,) + self.bot_mlp
+        dims_t = (self.top_in,) + self.top_mlp
+        for d in (dims_b, dims_t):
+            n += sum(d[i] * d[i + 1] + d[i + 1] for i in range(len(d) - 1))
+        return n
+
+
+def dlrm_init(cfg: DLRMConfig, key, tp: int = 1) -> dict:
+    k1, k2, k3 = split_keys(key, 3)
+    return {
+        "tables": init_tables(k1, cfg.vocabs, cfg.embed_dim, tp, cfg.dtype),
+        "bot": init_mlp(k2, (cfg.n_dense,) + cfg.bot_mlp, cfg.dtype),
+        "top": init_mlp(k3, (cfg.top_in,) + cfg.top_mlp, cfg.dtype),
+    }
+
+
+def dlrm_specs(cfg: DLRMConfig, tp: int) -> dict:
+    return {
+        "tables": table_specs(cfg.vocabs, tp),
+        "bot": mlp_specs((cfg.n_dense,) + cfg.bot_mlp),
+        "top": mlp_specs((cfg.top_in,) + cfg.top_mlp),
+    }
+
+
+def dlrm_grad_sync(cfg: DLRMConfig, tp: int) -> dict:
+    return {
+        "tables": table_grad_sync(cfg.vocabs),
+        "bot": mlp_grad_sync((cfg.n_dense,) + cfg.bot_mlp, tp),
+        "top": mlp_grad_sync((cfg.top_in,) + cfg.top_mlp, tp),
+    }
+
+
+def _dot_interact(z, e):
+    """DLRM pairwise-dot interaction.  z (B, D); e (B, F, D)."""
+    b, f, d = e.shape
+    cat = jnp.concatenate([z[:, None, :], e], axis=1)  # (B, F+1, D)
+    g = jnp.einsum("bfd,bgd->bfg", cat, cat)
+    iu, ju = jnp.triu_indices(f + 1, k=1)
+    return g[:, iu, ju]  # (B, (F+1)F/2)
+
+
+def dlrm_score(params, batch, cfg: DLRMConfig, dist: Dist):
+    e = lookup_fields(params["tables"], batch["sparse"], dist)
+    dense = split_batch_model(batch["dense"], dist)
+    z = apply_mlp(params["bot"], dense.astype(cfg.dtype), final_act=jax.nn.relu)
+    x = jnp.concatenate([z, _dot_interact(z, e)], axis=1)
+    return apply_mlp(params["top"], x)[:, 0]
+
+
+def dlrm_loss(params, batch, cfg: DLRMConfig, dist: Dist):
+    logit = dlrm_score(params, batch, cfg, dist)
+    labels = split_batch_model(batch["labels"], dist)
+    loss = bce_loss(logit, labels, dist)
+    return loss, {"bce": loss}
+
+
+def dlrm_lookup(tables: dict, batch, dist: Dist):
+    """The embedding stage alone (for the sparse-push training path)."""
+    return lookup_fields(tables, batch["sparse"], dist)
+
+
+def dlrm_loss_from_emb(dense_params, e, batch, cfg: DLRMConfig, dist: Dist):
+    """DLRM loss given the looked-up embeddings ``e`` (B/tp, F, D) — lets the
+    trainer take grads w.r.t. e and push them sparsely (runtime/sparse_push)."""
+    dense = split_batch_model(batch["dense"], dist)
+    z = apply_mlp(dense_params["bot"], dense.astype(cfg.dtype),
+                  final_act=jax.nn.relu)
+    x = jnp.concatenate([z, _dot_interact(z, e)], axis=1)
+    logit = apply_mlp(dense_params["top"], x)[:, 0]
+    labels = split_batch_model(batch["labels"], dist)
+    loss = bce_loss(logit, labels, dist)
+    return loss, {"bce": loss}
+
+
+def dlrm_user_tower(params, batch, cfg: DLRMConfig, dist: Dist):
+    """Retrieval user vector: bottom-MLP(dense) + mean of user-side embeds."""
+    e = lookup_fields(params["tables"], batch["sparse"], dist)
+    dense = split_batch_model(batch["dense"], dist)
+    z = apply_mlp(params["bot"], dense.astype(cfg.dtype), final_act=jax.nn.relu)
+    return z + jnp.mean(e, axis=1)
+
+
+# ===========================================================================
+# AutoInt
+# ===========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class AutoIntConfig:
+    name: str = "autoint"
+    n_sparse: int = 39
+    vocab_per_field: int = 10000
+    embed_dim: int = 16
+    n_attn_layers: int = 3
+    n_heads: int = 2
+    d_attn: int = 32
+    dtype: Any = jnp.float32
+
+    @property
+    def vocabs(self) -> tuple:
+        return (self.vocab_per_field,) * self.n_sparse
+
+    def param_count(self) -> int:
+        n = sum(self.vocabs) * self.embed_dim
+        d_in = self.embed_dim
+        for _ in range(self.n_attn_layers):
+            n += 3 * d_in * self.d_attn + d_in * self.d_attn
+            d_in = self.d_attn
+        return n + self.n_sparse * self.d_attn
+
+
+def autoint_init(cfg: AutoIntConfig, key, tp: int = 1) -> dict:
+    ks = split_keys(key, 2 + cfg.n_attn_layers)
+    p = {"tables": init_tables(ks[0], cfg.vocabs, cfg.embed_dim, tp, cfg.dtype)}
+    d_in = cfg.embed_dim
+    for i in range(cfg.n_attn_layers):
+        kk = split_keys(ks[1 + i], 4)
+        p[f"attn{i}"] = {
+            "wq": dense_init(kk[0], (d_in, cfg.d_attn), d_in, cfg.dtype),
+            "wk": dense_init(kk[1], (d_in, cfg.d_attn), d_in, cfg.dtype),
+            "wv": dense_init(kk[2], (d_in, cfg.d_attn), d_in, cfg.dtype),
+            "wres": dense_init(kk[3], (d_in, cfg.d_attn), d_in, cfg.dtype),
+        }
+        d_in = cfg.d_attn
+    p["out"] = dense_init(ks[-1], (cfg.n_sparse * cfg.d_attn, 1), cfg.n_sparse * cfg.d_attn, cfg.dtype)
+    return p
+
+
+def autoint_specs(cfg: AutoIntConfig, tp: int) -> dict:
+    sp = {"tables": table_specs(cfg.vocabs, tp), "out": P()}
+    for i in range(cfg.n_attn_layers):
+        sp[f"attn{i}"] = {k: P() for k in ("wq", "wk", "wv", "wres")}
+    return sp
+
+
+def autoint_grad_sync(cfg: AutoIntConfig, tp: int) -> dict:
+    s = "psum_model" if tp > 1 else "none"
+    g = {"tables": table_grad_sync(cfg.vocabs), "out": s}
+    for i in range(cfg.n_attn_layers):
+        g[f"attn{i}"] = {k: s for k in ("wq", "wk", "wv", "wres")}
+    return g
+
+
+def autoint_score(params, batch, cfg: AutoIntConfig, dist: Dist):
+    x = lookup_fields(params["tables"], batch["sparse"], dist)  # (B, F, D)
+    h = cfg.n_heads
+    for i in range(cfg.n_attn_layers):
+        ap = params[f"attn{i}"]
+        q = (x @ ap["wq"]).reshape(*x.shape[:2], h, -1)
+        k = (x @ ap["wk"]).reshape(*x.shape[:2], h, -1)
+        v = (x @ ap["wv"]).reshape(*x.shape[:2], h, -1)
+        s = jnp.einsum("bfhd,bghd->bhfg", q, k) / jnp.sqrt(q.shape[-1] * 1.0)
+        a = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhfg,bghd->bfhd", a, v).reshape(*x.shape[:2], -1)
+        x = jax.nn.relu(o + x @ ap["wres"])
+    return (x.reshape(x.shape[0], -1) @ params["out"])[:, 0]
+
+
+def autoint_loss(params, batch, cfg: AutoIntConfig, dist: Dist):
+    logit = autoint_score(params, batch, cfg, dist)
+    loss = bce_loss(logit, split_batch_model(batch["labels"], dist), dist)
+    return loss, {"bce": loss}
+
+
+def autoint_user_tower(params, batch, cfg: AutoIntConfig, dist: Dist):
+    e = lookup_fields(params["tables"], batch["sparse"], dist)
+    return jnp.mean(e, axis=1)
+
+
+# ===========================================================================
+# DIEN (GRU + AUGRU over behavior sequence)
+# ===========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class DIENConfig:
+    name: str = "dien"
+    n_items: int = 63001
+    n_cats: int = 801
+    embed_dim: int = 18
+    seq_len: int = 100
+    gru_dim: int = 108
+    mlp: tuple = (200, 80, 1)
+    dtype: Any = jnp.float32
+
+    @property
+    def vocabs(self) -> tuple:
+        return (self.n_items, self.n_cats)
+
+    @property
+    def in_dim(self) -> int:
+        return 2 * self.embed_dim  # item + category
+
+    @property
+    def mlp_in(self) -> int:
+        return self.in_dim * 2 + self.gru_dim
+
+    def param_count(self) -> int:
+        n = sum(self.vocabs) * self.embed_dim
+        n += 2 * 3 * (self.in_dim + self.gru_dim) * self.gru_dim  # GRU + AUGRU
+        n += (self.in_dim + self.gru_dim) * 1  # attention
+        dims = (self.mlp_in,) + self.mlp
+        n += sum(dims[i] * dims[i + 1] + dims[i + 1] for i in range(len(dims) - 1))
+        return n
+
+
+def _gru_init(key, d_in, d_h, dtype):
+    ks = split_keys(key, 3)
+    return {
+        g: {
+            "w": dense_init(ks[i], (d_in + d_h, d_h), d_in + d_h, dtype),
+            "b": jnp.zeros((d_h,), dtype),
+        }
+        for i, g in enumerate(("r", "z", "h"))
+    }
+
+
+def _gru_cell(p, h, x, a=None):
+    xh = jnp.concatenate([x, h], axis=-1)
+    r = jax.nn.sigmoid(xh @ p["r"]["w"] + p["r"]["b"])
+    z = jax.nn.sigmoid(xh @ p["z"]["w"] + p["z"]["b"])
+    if a is not None:  # AUGRU: attention scales the update gate
+        z = z * a[:, None]
+    xrh = jnp.concatenate([x, r * h], axis=-1)
+    hh = jnp.tanh(xrh @ p["h"]["w"] + p["h"]["b"])
+    return (1.0 - z) * h + z * hh
+
+
+def dien_init(cfg: DIENConfig, key, tp: int = 1) -> dict:
+    ks = split_keys(key, 5)
+    return {
+        "tables": init_tables(ks[0], cfg.vocabs, cfg.embed_dim, tp, cfg.dtype),
+        "gru": _gru_init(ks[1], cfg.in_dim, cfg.gru_dim, cfg.dtype),
+        "augru": _gru_init(ks[2], cfg.gru_dim, cfg.gru_dim, cfg.dtype),
+        "att": dense_init(ks[3], (cfg.gru_dim + cfg.in_dim, 1), cfg.gru_dim, cfg.dtype),
+        "mlp": init_mlp(ks[4], (cfg.mlp_in,) + cfg.mlp, cfg.dtype),
+    }
+
+
+def dien_specs(cfg: DIENConfig, tp: int) -> dict:
+    gru = {g: {"w": P(), "b": P()} for g in ("r", "z", "h")}
+    return {
+        "tables": table_specs(cfg.vocabs, tp),
+        "gru": gru,
+        "augru": {g: {"w": P(), "b": P()} for g in ("r", "z", "h")},
+        "att": P(),
+        "mlp": mlp_specs((cfg.mlp_in,) + cfg.mlp),
+    }
+
+
+def dien_grad_sync(cfg: DIENConfig, tp: int) -> dict:
+    s = "psum_model" if tp > 1 else "none"
+    gru = {g: {"w": s, "b": s} for g in ("r", "z", "h")}
+    return {
+        "tables": table_grad_sync(cfg.vocabs),
+        "gru": gru,
+        "augru": {g: {"w": s, "b": s} for g in ("r", "z", "h")},
+        "att": s,
+        "mlp": mlp_grad_sync((cfg.mlp_in,) + cfg.mlp, tp),
+    }
+
+
+def dien_score(params, batch, cfg: DIENConfig, dist: Dist):
+    t_it = params["tables"]["t0"]
+    t_ct = params["tables"]["t1"]
+    hist = jnp.concatenate(
+        [
+            lookup_sequence(t_it, batch["hist_items"], dist),
+            lookup_sequence(t_ct, batch["hist_cats"], dist),
+        ],
+        axis=-1,
+    )  # (B, T, 2D)
+    tgt = lookup_fields(params["tables"], batch["sparse"], dist)  # (B, 2, D)
+    tgt = tgt.reshape(tgt.shape[0], -1)  # (B, 2D)
+    b = hist.shape[0]
+
+    # interest extraction GRU
+    def step(h, x):
+        h = _gru_cell(params["gru"], h, x)
+        return h, h
+
+    h0 = jnp.zeros((b, cfg.gru_dim), cfg.dtype)
+    _, hs = lax.scan(step, h0, jnp.swapaxes(hist, 0, 1))
+    hs = jnp.swapaxes(hs, 0, 1)  # (B, T, G)
+
+    # attention vs target
+    att_in = jnp.concatenate(
+        [hs, jnp.broadcast_to(tgt[:, None], (b, hs.shape[1], tgt.shape[1]))], axis=-1
+    )
+    scores = jax.nn.softmax((att_in @ params["att"])[..., 0], axis=1)  # (B, T)
+
+    # interest evolution AUGRU
+    def astep(h, xa):
+        x, a = xa
+        h = _gru_cell(params["augru"], h, x, a)
+        return h, None
+
+    hT, _ = lax.scan(
+        astep,
+        jnp.zeros((b, cfg.gru_dim), cfg.dtype),
+        (jnp.swapaxes(hs, 0, 1), jnp.swapaxes(scores, 0, 1)),
+    )
+    feat = jnp.concatenate([tgt, hT, jnp.mean(hist, axis=1)], axis=-1)
+    return apply_mlp(params["mlp"], feat)[:, 0]
+
+
+def dien_loss(params, batch, cfg: DIENConfig, dist: Dist):
+    logit = dien_score(params, batch, cfg, dist)
+    loss = bce_loss(logit, split_batch_model(batch["labels"], dist), dist)
+    return loss, {"bce": loss}
+
+
+def dien_user_tower(params, batch, cfg: DIENConfig, dist: Dist):
+    t_it = params["tables"]["t0"]
+    hist = lookup_sequence(t_it, batch["hist_items"], dist)
+    return jnp.mean(hist, axis=1)
+
+
+# ===========================================================================
+# xDeepFM (CIN + DNN + linear)
+# ===========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class XDeepFMConfig:
+    name: str = "xdeepfm"
+    n_sparse: int = 39
+    vocab_per_field: int = 10000
+    embed_dim: int = 10
+    cin_layers: tuple = (200, 200, 200)
+    mlp: tuple = (400, 400, 1)
+    dtype: Any = jnp.float32
+
+    @property
+    def vocabs(self) -> tuple:
+        return (self.vocab_per_field,) * self.n_sparse
+
+    def param_count(self) -> int:
+        n = sum(self.vocabs) * (self.embed_dim + 1)  # embeds + linear weights
+        h_prev = self.n_sparse
+        for h in self.cin_layers:
+            n += h * h_prev * self.n_sparse
+            h_prev = h
+        n += sum(self.cin_layers)  # cin output weights
+        dims = (self.n_sparse * self.embed_dim,) + self.mlp
+        n += sum(dims[i] * dims[i + 1] + dims[i + 1] for i in range(len(dims) - 1))
+        return n
+
+
+def xdeepfm_init(cfg: XDeepFMConfig, key, tp: int = 1) -> dict:
+    ks = split_keys(key, 4 + len(cfg.cin_layers))
+    p = {
+        "tables": init_tables(ks[0], cfg.vocabs, cfg.embed_dim, tp, cfg.dtype),
+        "linear": init_tables(ks[1], cfg.vocabs, 1, tp, cfg.dtype),
+        "mlp": init_mlp(ks[2], (cfg.n_sparse * cfg.embed_dim,) + cfg.mlp, cfg.dtype),
+        "cin_out": dense_init(ks[3], (sum(cfg.cin_layers), 1), sum(cfg.cin_layers), cfg.dtype),
+    }
+    h_prev = cfg.n_sparse
+    for i, h in enumerate(cfg.cin_layers):
+        p[f"cin{i}"] = dense_init(ks[4 + i], (h, h_prev, cfg.n_sparse), h_prev * cfg.n_sparse, cfg.dtype)
+        h_prev = h
+    return p
+
+
+def xdeepfm_specs(cfg: XDeepFMConfig, tp: int) -> dict:
+    sp = {
+        "tables": table_specs(cfg.vocabs, tp),
+        "linear": table_specs(cfg.vocabs, tp),
+        "mlp": mlp_specs((cfg.n_sparse * cfg.embed_dim,) + cfg.mlp),
+        "cin_out": P(),
+    }
+    for i in range(len(cfg.cin_layers)):
+        sp[f"cin{i}"] = P()
+    return sp
+
+
+def xdeepfm_grad_sync(cfg: XDeepFMConfig, tp: int) -> dict:
+    s = "psum_model" if tp > 1 else "none"
+    g = {
+        "tables": table_grad_sync(cfg.vocabs),
+        "linear": table_grad_sync(cfg.vocabs),
+        "mlp": mlp_grad_sync((cfg.n_sparse * cfg.embed_dim,) + cfg.mlp, tp),
+        "cin_out": s,
+    }
+    for i in range(len(cfg.cin_layers)):
+        g[f"cin{i}"] = s
+    return g
+
+
+def xdeepfm_score(params, batch, cfg: XDeepFMConfig, dist: Dist):
+    x0 = lookup_fields(params["tables"], batch["sparse"], dist)  # (B, F, D)
+    lin = lookup_fields(params["linear"], batch["sparse"], dist)  # (B, F, 1)
+    xk = x0
+    pools = []
+    for i in range(len(cfg.cin_layers)):
+        z = jnp.einsum("bhd,bfd->bhfd", xk, x0)
+        xk = jnp.einsum("bhfd,ohf->bod", z, params[f"cin{i}"])
+        pools.append(jnp.sum(xk, axis=-1))  # (B, H)
+    cin = jnp.concatenate(pools, axis=-1) @ params["cin_out"]
+    dnn = apply_mlp(params["mlp"], x0.reshape(x0.shape[0], -1))
+    return (cin + dnn)[:, 0] + jnp.sum(lin[..., 0], axis=-1)
+
+
+def xdeepfm_loss(params, batch, cfg: XDeepFMConfig, dist: Dist):
+    logit = xdeepfm_score(params, batch, cfg, dist)
+    loss = bce_loss(logit, split_batch_model(batch["labels"], dist), dist)
+    return loss, {"bce": loss}
+
+
+def xdeepfm_user_tower(params, batch, cfg: XDeepFMConfig, dist: Dist):
+    e = lookup_fields(params["tables"], batch["sparse"], dist)
+    return jnp.mean(e, axis=1)
+
+
+# ===========================================================================
+# retrieval: bulk candidate scoring (two-tower readout)
+# ===========================================================================
+
+def bulk_retrieval(params, batch, user_tower, item_table: str, proj_dim: int,
+                   cfg, dist: Dist):
+    """Score one user against N candidates.  cand_ids (N,) enter sharded over
+    the model axis already (worker axes shard them upstream); each table
+    shard contributes its rows via the mask+psum PS pull.
+
+    Returns (N_loc,) scores for this device's candidate slice."""
+    u = user_tower(params, batch, cfg, dist)  # (B_loc, D_u)
+    u = jnp.mean(u, axis=0)  # single user vector (B=1 semantics)
+    cand = batch["cand_ids"]  # (N_loc,)
+    t = params["tables"][item_table]
+    midx = dist.model_index()
+    vloc = t.shape[0]
+    local = cand - midx * vloc
+    ok = (local >= 0) & (local < vloc)
+    rows = jnp.take(t, jnp.clip(local, 0, vloc - 1), axis=0)
+    e = jnp.where(ok[:, None], rows, 0.0)
+    e = dist.psum_model(e)  # (N_loc, D)
+    d = min(u.shape[0], e.shape[1])
+    return e[:, :d] @ u[:d]

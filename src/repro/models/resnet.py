@@ -1,0 +1,117 @@
+"""ResNet-50 — the paper's own evaluation workload (ImageNet CNNs).
+
+Pure data-parallel (params replicated; the PS exchange handles gradient
+aggregation — exactly the paper's MXNet setting).  BatchNorm is replaced by
+per-device GroupNorm, the standard choice for large-scale data-parallel
+training without cross-device BN stats."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.common import Dist, dense_init, split_keys
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetConfig:
+    name: str = "resnet50"
+    blocks: tuple = (3, 4, 6, 3)
+    widths: tuple = (256, 512, 1024, 2048)
+    n_classes: int = 1000
+    groups: int = 32
+    dtype: Any = jnp.float32
+
+    def param_count(self) -> int:
+        params = init_params(self, jax.random.PRNGKey(0), abstract=True)
+        return sum(
+            int(jnp.prod(jnp.array(x.shape))) for x in jax.tree.leaves(params)
+        )
+
+
+def _conv_init(key, kh, kw, cin, cout, dtype):
+    return dense_init(key, (kh, kw, cin, cout), kh * kw * cin, dtype)
+
+
+def init_params(cfg: ResNetConfig, key, abstract: bool = False) -> dict:
+    def mk(key, shape, fan_in):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, cfg.dtype)
+        return dense_init(key, shape, fan_in, cfg.dtype)
+
+    keys = iter(split_keys(key, 256))
+    p: dict[str, Any] = {
+        "stem": mk(next(keys), (7, 7, 3, 64), 7 * 7 * 3),
+        "stem_gn": {"s": jnp.ones((64,), cfg.dtype), "b": jnp.zeros((64,), cfg.dtype)},
+    }
+    cin = 64
+    for si, (n, w) in enumerate(zip(cfg.blocks, cfg.widths)):
+        mid = w // 4
+        for bi in range(n):
+            blk = {
+                "c1": mk(next(keys), (1, 1, cin, mid), cin),
+                "g1": {"s": jnp.ones((mid,), cfg.dtype), "b": jnp.zeros((mid,), cfg.dtype)},
+                "c2": mk(next(keys), (3, 3, mid, mid), 9 * mid),
+                "g2": {"s": jnp.ones((mid,), cfg.dtype), "b": jnp.zeros((mid,), cfg.dtype)},
+                "c3": mk(next(keys), (1, 1, mid, w), mid),
+                "g3": {"s": jnp.ones((w,), cfg.dtype), "b": jnp.zeros((w,), cfg.dtype)},
+            }
+            if bi == 0:
+                blk["proj"] = mk(next(keys), (1, 1, cin, w), cin)
+                blk["gproj"] = {
+                    "s": jnp.ones((w,), cfg.dtype),
+                    "b": jnp.zeros((w,), cfg.dtype),
+                }
+            p[f"s{si}b{bi}"] = blk
+            cin = w
+    p["head"] = mk(next(keys), (cfg.widths[-1], cfg.n_classes), cfg.widths[-1])
+    p["head_b"] = jnp.zeros((cfg.n_classes,), cfg.dtype)
+    return p
+
+
+def _gn(x, g, groups: int):
+    n, h, w, c = x.shape
+    xg = x.reshape(n, h, w, groups, c // groups).astype(jnp.float32)
+    mu = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mu) * lax.rsqrt(var + 1e-5)
+    x = xg.reshape(n, h, w, c).astype(x.dtype)
+    return x * g["s"] + g["b"]
+
+
+def _conv(x, w, stride: int = 1):
+    return lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+
+
+def forward(params, images, cfg: ResNetConfig):
+    x = images.astype(cfg.dtype)
+    x = _conv(x, params["stem"], 2)
+    x = jax.nn.relu(_gn(x, params["stem_gn"], cfg.groups))
+    x = lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, 3, 3, 1), (1, 2, 2, 1), "SAME"
+    )
+    for si, n in enumerate(cfg.blocks):
+        for bi in range(n):
+            blk = params[f"s{si}b{bi}"]
+            stride = 2 if (bi == 0 and si > 0) else 1
+            h = jax.nn.relu(_gn(_conv(x, blk["c1"]), blk["g1"], cfg.groups))
+            h = jax.nn.relu(_gn(_conv(h, blk["c2"], stride), blk["g2"], cfg.groups))
+            h = _gn(_conv(h, blk["c3"]), blk["g3"], cfg.groups)
+            if "proj" in blk:
+                x = _gn(_conv(x, blk["proj"], stride), blk["gproj"], cfg.groups)
+            x = jax.nn.relu(x + h)
+    x = jnp.mean(x, axis=(1, 2))
+    return x @ params["head"] + params["head_b"]
+
+
+def loss_fn(params, batch, cfg: ResNetConfig, dist: Dist | None = None):
+    logits = forward(params, batch["images"], cfg).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ce = -jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1).mean()
+    acc = jnp.mean(jnp.argmax(logits, -1) == batch["labels"])
+    return ce, {"acc": acc}

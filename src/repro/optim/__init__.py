@@ -1,0 +1,31 @@
+from repro.optim.optimizers import (
+    OptimizerSpec,
+    sgd,
+    momentum,
+    adam,
+    adamw,
+    init_opt_state,
+    apply_update,
+    make_optimizer,
+)
+from repro.optim.schedules import (
+    constant_schedule,
+    cosine_schedule,
+    warmup_cosine_schedule,
+    linear_warmup,
+)
+
+__all__ = [
+    "OptimizerSpec",
+    "sgd",
+    "momentum",
+    "adam",
+    "adamw",
+    "init_opt_state",
+    "apply_update",
+    "make_optimizer",
+    "constant_schedule",
+    "cosine_schedule",
+    "warmup_cosine_schedule",
+    "linear_warmup",
+]

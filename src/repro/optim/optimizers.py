@@ -1,0 +1,162 @@
+"""Optimizers as pure chunk-wise update rules.
+
+The PS applies the optimizer *at the server*, per chunk, immediately after
+aggregation (PHub's fused "aggregator + optimizer").  To make that fusable in
+a single Pallas kernel, every optimizer here is expressed as a flat-array
+update rule:
+
+    new_param, new_state = update(param, grad, state, hyper, step)
+
+where ``state`` is a tuple of 0..2 flat arrays with the same shape as the
+param slab.  The same rules are reused tree-wise (for non-PS baselines) by
+mapping over leaves.
+
+All math is f32 at the server (the paper's PS aggregates in full precision),
+regardless of the model's compute dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerSpec:
+    """Static description of a server-side optimizer."""
+
+    name: str  # 'sgd' | 'momentum' | 'adam' | 'adamw'
+    lr: float = 1e-3
+    momentum: float = 0.9
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    nesterov: bool = False
+
+    @property
+    def num_state_slots(self) -> int:
+        return {"sgd": 0, "momentum": 1, "adam": 2, "adamw": 2}[self.name]
+
+
+def sgd(lr: float = 1e-3, weight_decay: float = 0.0) -> OptimizerSpec:
+    return OptimizerSpec(name="sgd", lr=lr, weight_decay=weight_decay)
+
+
+def momentum(
+    lr: float = 1e-3,
+    mu: float = 0.9,
+    weight_decay: float = 0.0,
+    nesterov: bool = False,
+) -> OptimizerSpec:
+    return OptimizerSpec(
+        name="momentum", lr=lr, momentum=mu, weight_decay=weight_decay,
+        nesterov=nesterov,
+    )
+
+
+def adam(
+    lr: float = 1e-3, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8
+) -> OptimizerSpec:
+    return OptimizerSpec(name="adam", lr=lr, beta1=b1, beta2=b2, eps=eps)
+
+
+def adamw(
+    lr: float = 1e-3,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.01,
+) -> OptimizerSpec:
+    return OptimizerSpec(
+        name="adamw", lr=lr, beta1=b1, beta2=b2, eps=eps,
+        weight_decay=weight_decay,
+    )
+
+
+def init_opt_state(spec: OptimizerSpec, param_like: jax.Array) -> tuple:
+    """State slots for a flat param slab (all f32, same shape)."""
+    n = spec.num_state_slots
+    return tuple(jnp.zeros(param_like.shape, jnp.float32) for _ in range(n))
+
+
+def apply_update(
+    spec: OptimizerSpec,
+    param: jax.Array,
+    grad: jax.Array,
+    state: tuple,
+    step: jax.Array,
+    lr_scale: jax.Array | float = 1.0,
+) -> tuple[jax.Array, tuple]:
+    """Pure-jnp update rule.  ``step`` is the 1-based step count (for Adam
+    bias correction).  This is the oracle the fused Pallas kernel must match
+    (kernels/fused_agg_opt/ref.py delegates here)."""
+    p = param.astype(jnp.float32)
+    g = grad.astype(jnp.float32)
+    lr = spec.lr * lr_scale
+    if spec.name == "sgd":
+        if spec.weight_decay:
+            g = g + spec.weight_decay * p
+        return (p - lr * g).astype(param.dtype), ()
+    if spec.name == "momentum":
+        (m,) = state
+        if spec.weight_decay:
+            g = g + spec.weight_decay * p
+        m = spec.momentum * m + g
+        upd = g + spec.momentum * m if spec.nesterov else m
+        return (p - lr * upd).astype(param.dtype), (m,)
+    if spec.name in ("adam", "adamw"):
+        m, v = state
+        if spec.name == "adam" and spec.weight_decay:
+            g = g + spec.weight_decay * p
+        m = spec.beta1 * m + (1.0 - spec.beta1) * g
+        v = spec.beta2 * v + (1.0 - spec.beta2) * g * g
+        t = step.astype(jnp.float32)
+        mhat = m / (1.0 - spec.beta1**t)
+        vhat = v / (1.0 - spec.beta2**t)
+        upd = mhat / (jnp.sqrt(vhat) + spec.eps)
+        if spec.name == "adamw" and spec.weight_decay:
+            upd = upd + spec.weight_decay * p
+        return (p - lr * upd).astype(param.dtype), (m, v)
+    raise ValueError(f"unknown optimizer {spec.name}")
+
+
+# ---------------------------------------------------------------------------
+# Tree-wise wrapper (for the non-PS baseline path and generic training loops)
+# ---------------------------------------------------------------------------
+
+def make_optimizer(spec: OptimizerSpec, lr_schedule: Callable | None = None):
+    """Returns (init_fn, update_fn) operating on pytrees.
+
+    update_fn(params, grads, state) -> (new_params, new_state); ``state`` is
+    {"step": int32, "slots": tuple[pytree, ...]}.
+    """
+
+    def init_fn(params: Any):
+        slots = tuple(
+            jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            for _ in range(spec.num_state_slots)
+        )
+        return {"step": jnp.zeros((), jnp.int32), "slots": slots}
+
+    def update_fn(params: Any, grads: Any, state: Any):
+        step = state["step"] + 1
+        lr_scale = lr_schedule(step) if lr_schedule is not None else 1.0
+        leaves_p, treedef = jax.tree.flatten(params)
+        leaves_g = jax.tree.leaves(grads)
+        leaves_s = [jax.tree.leaves(s) for s in state["slots"]]
+        new_p, new_s = [], [[] for _ in range(spec.num_state_slots)]
+        for i, (p, g) in enumerate(zip(leaves_p, leaves_g)):
+            s = tuple(sl[i] for sl in leaves_s)
+            np_, ns_ = apply_update(spec, p, g, s, step, lr_scale)
+            new_p.append(np_)
+            for k in range(spec.num_state_slots):
+                new_s[k].append(ns_[k])
+        params_out = jax.tree.unflatten(treedef, new_p)
+        slots_out = tuple(jax.tree.unflatten(treedef, s) for s in new_s)
+        return params_out, {"step": step, "slots": slots_out}
+
+    return init_fn, update_fn

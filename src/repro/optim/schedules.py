@@ -1,0 +1,41 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(value: float = 1.0):
+    def fn(step):
+        return jnp.asarray(value, jnp.float32)
+
+    return fn
+
+
+def linear_warmup(warmup_steps: int, peak: float = 1.0):
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        return peak * jnp.minimum(1.0, s / max(warmup_steps, 1))
+
+    return fn
+
+
+def cosine_schedule(total_steps: int, final_frac: float = 0.1, peak: float = 1.0):
+    def fn(step):
+        s = jnp.clip(jnp.asarray(step, jnp.float32), 0, total_steps)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * s / total_steps))
+        return peak * (final_frac + (1.0 - final_frac) * cos)
+
+    return fn
+
+
+def warmup_cosine_schedule(
+    warmup_steps: int, total_steps: int, final_frac: float = 0.1, peak: float = 1.0
+):
+    warm = linear_warmup(warmup_steps, peak)
+    cos = cosine_schedule(max(total_steps - warmup_steps, 1), final_frac, peak)
+
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        return jnp.where(s < warmup_steps, warm(s), cos(s - warmup_steps))
+
+    return fn

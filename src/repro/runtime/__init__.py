@@ -1,0 +1,15 @@
+from repro.runtime.trainer import (
+    TrainState,
+    make_ps_train_step,
+    init_train_state,
+    apply_grad_sync,
+    local_template,
+)
+
+__all__ = [
+    "TrainState",
+    "make_ps_train_step",
+    "init_train_state",
+    "apply_grad_sync",
+    "local_template",
+]

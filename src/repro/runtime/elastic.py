@@ -1,0 +1,82 @@
+"""Elastic scaling: re-shard chunked PS state across mesh resizes.
+
+Because all training state lives in a flat chunk space with balanced
+contiguous-slab ownership, growing or shrinking the worker set is a pure
+re-slicing of the same 1-D buffer — no per-tensor resharding plans.  This is
+the operational payoff of the paper's tensor-boundary-free chunking: a PBox
+micro-shard count change is a reshape.
+
+Covers the two production events:
+  * node loss (shrink): restore latest checkpoint onto the smaller mesh
+  * capacity add (grow): re-slice onto more owners; chunk padding already
+    guarantees divisibility for any owner count dividing num_chunks
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.chunking import ParamSpace
+
+
+def reshard_flat(flat: np.ndarray, old_owners: int, new_owners: int,
+                 chunk_elems: int) -> np.ndarray:
+    """Re-balance a flat chunk space from old_owners to new_owners.
+
+    flat: (flat_elems,) host array.  Returns the same logical array, but
+    verifies the new owner count tiles the chunk space; pads with zero
+    chunks if the new owner count requires it (payload offsets unchanged —
+    padding lives at the tail)."""
+    n = flat.shape[0]
+    if n % chunk_elems:
+        raise ValueError("flat not chunk aligned")
+    chunks = n // chunk_elems
+    new_chunks = -(-chunks // new_owners) * new_owners
+    if new_chunks != chunks:
+        flat = np.concatenate(
+            [flat, np.zeros(((new_chunks - chunks) * chunk_elems,), flat.dtype)]
+        )
+    return flat
+
+
+def owner_slabs(flat: np.ndarray, owners: int) -> list[np.ndarray]:
+    return list(flat.reshape(owners, -1))
+
+
+def rebuild_space(space: ParamSpace, new_owners: int) -> ParamSpace:
+    """Same tensor layout, new owner count (num_chunks re-padded)."""
+    num_chunks = -(-space.payload_elems // space.chunk_elems)
+    num_chunks = max(num_chunks, 1)
+    num_chunks = -(-num_chunks // new_owners) * new_owners
+    return ParamSpace(
+        slots=space.slots,
+        treedef=space.treedef,
+        chunk_elems=space.chunk_elems,
+        num_owners=new_owners,
+        payload_elems=space.payload_elems,
+        flat_elems=num_chunks * space.chunk_elems,
+    )
+
+
+def elastic_restore(host_state: dict, old_space: ParamSpace,
+                    new_owners: int) -> tuple[dict, ParamSpace]:
+    """Re-target a checkpointed flat state onto a new owner count."""
+    new_space = rebuild_space(old_space, new_owners)
+    out = {}
+    for k, v in host_state.items():
+        if k == "step":
+            out[k] = v
+            continue
+        arr = np.asarray(v)
+        groups = arr.reshape(arr.shape[0], -1) if arr.ndim > 1 else arr[None]
+        resized = []
+        for g in groups:
+            g = g[: old_space.flat_elems]
+            if new_space.flat_elems > g.shape[0]:
+                g = np.concatenate(
+                    [g, np.zeros((new_space.flat_elems - g.shape[0],), g.dtype)]
+                )
+            else:
+                g = g[: new_space.flat_elems]
+            resized.append(g)
+        out[k] = np.stack(resized) if arr.ndim > 1 else resized[0]
+    return out, new_space

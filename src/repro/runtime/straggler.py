@@ -1,0 +1,80 @@
+"""Straggler mitigation policies for PS training.
+
+JAX SPMD steps are bulk-synchronous, so within a step the mitigation levers
+are the PS-level ones the paper's design enables; they are implemented and
+exercised against the in-process PHub simulator (core/server.py):
+
+  * backup-worker quorum: the server applies the update once
+    ``min_push_fraction`` of workers have pushed (Chen et al.'s backup
+    workers); stragglers' late pushes are dropped for that step.
+  * bounded staleness (SSP): workers may run ahead up to ``staleness`` steps
+    — hides transient slowness without losing gradients.
+  * chunk rebalancing: if a PS *shard* (not worker) is persistently slow
+    (flaky host, thermal throttle), its chunks are re-assigned to healthy
+    shards — with contiguous-slab ownership this is an ownership-boundary
+    shift, not a data reshuffle plan.
+
+``StragglerMonitor`` detects persistent stragglers from per-step push
+latencies (median-based, robust to noise).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    mode: str = "sync"  # "sync" | "backup" | "stale"
+    min_push_fraction: float = 1.0  # backup mode: quorum fraction
+    staleness: int = 0  # SSP bound
+
+    def server_kwargs(self) -> dict:
+        if self.mode == "backup":
+            return {"mode": "sync", "min_push_fraction": self.min_push_fraction}
+        if self.mode == "stale":
+            return {"mode": "stale", "staleness": self.staleness}
+        return {"mode": "sync"}
+
+
+class StragglerMonitor:
+    """Flags workers whose push latency is persistently above
+    ``threshold`` x the fleet median."""
+
+    def __init__(self, n_workers: int, threshold: float = 2.0, window: int = 20):
+        self.lat = [[] for _ in range(n_workers)]
+        self.threshold = threshold
+        self.window = window
+
+    def record(self, worker: int, seconds: float) -> None:
+        w = self.lat[worker]
+        w.append(seconds)
+        if len(w) > self.window:
+            w.pop(0)
+
+    def stragglers(self) -> list[int]:
+        meds = [np.median(w) if w else 0.0 for w in self.lat]
+        fleet = np.median([m for m in meds if m > 0] or [0.0])
+        if fleet <= 0:
+            return []
+        return [i for i, m in enumerate(meds) if m > self.threshold * fleet]
+
+
+def rebalance_chunks(chunk_owner: np.ndarray, slow_shards: list[int],
+                     n_shards: int) -> np.ndarray:
+    """Re-assign chunks owned by slow shards round-robin to healthy shards.
+    chunk_owner: (num_chunks,) int array.  Returns new assignment with the
+    balance invariant |count_i - count_j| <= 1 preserved among healthy
+    shards."""
+    healthy = [s for s in range(n_shards) if s not in slow_shards]
+    if not healthy:
+        return chunk_owner
+    out = chunk_owner.copy()
+    moved = np.where(np.isin(chunk_owner, slow_shards))[0]
+    counts = {h: int(np.sum(out == h)) for h in healthy}
+    for c in moved:
+        tgt = min(counts, key=counts.get)
+        out[c] = tgt
+        counts[tgt] += 1
+    return out

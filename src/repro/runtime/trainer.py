@@ -1,0 +1,254 @@
+"""Training runtime: the PS train step, assembled inside one shard_map.
+
+Data flow per step (per device):
+
+  pflat (flat chunked params, this model shard)      <- TrainState
+    -> unflatten to the model pytree
+    -> value_and_grad of the per-device loss (/tp — see transformer.grad_sync)
+    -> apply grad-sync tags (psum_model / scale_R for replicated-copy params)
+    -> flatten grads into the chunk space                (PHub key chunking)
+    -> exchange.device_update: push / fused-update / pull (PBox)
+  -> new pflat, new PS state, pmean'd metrics
+
+Keeping parameters *in flat chunked form between steps* is the PHub design
+decision: zero re-layout cost at exchange time, checkpoint shards are
+chunk-aligned, and elastic re-sharding is a pure reshape (runtime/elastic).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.chunking import ParamSpace
+from repro.core.exchange import PSExchange
+from repro.models.common import Dist
+
+
+@dataclasses.dataclass
+class TrainState:
+    """Global (host-view) training state."""
+
+    pflat: jax.Array  # (n_groups, flat_local)  — model-axis groups
+    slots: tuple  # each (n_groups, flat_local) f32 (sharded over owners)
+    ef: jax.Array | None
+    step: jax.Array  # scalar int32
+
+
+def local_template(global_tree: Any, specs: Any, mesh) -> Any:
+    """Shrink global ShapeDtypeStructs to per-device local shapes."""
+
+    def shrink(x, spec):
+        shape = list(x.shape)
+        for i, s in enumerate(spec):
+            if s is None:
+                continue
+            axes = s if isinstance(s, tuple) else (s,)
+            for a in axes:
+                shape[i] //= mesh.shape[a]
+        return jax.ShapeDtypeStruct(tuple(shape), x.dtype)
+
+    return jax.tree.map(shrink, global_tree, specs,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def apply_grad_sync(grads: Any, tags: Any, dist: Dist) -> Any:
+    """Apply per-tensor gradient corrections (see transformer.grad_sync)."""
+
+    def fix(g, tag):
+        if tag == "none" or dist.model_axis is None:
+            return g
+        if tag == "psum_model":
+            return lax.psum(g, dist.model_axis)
+        if tag.startswith("scale_"):
+            return g * float(tag.split("_")[1])
+        raise ValueError(f"unknown grad-sync tag {tag}")
+
+    return jax.tree.map(fix, grads, tags)
+
+
+def _state_specs(exchange: PSExchange, n_state: int, has_ef: bool):
+    group = "model"
+    owner = P(group, exchange.owner_axes) if exchange.owner_axes else P(group, None)
+    return {
+        "pflat": P(group, None),
+        "slots": tuple(owner for _ in range(n_state)),
+        "ef": owner if has_ef else None,
+        "step": P(),
+    }
+
+
+def make_ps_train_step(
+    mesh,
+    *,
+    loss_fn: Callable,  # (params, batch, dist) -> (loss, metrics); per-device
+    param_specs: Any,
+    sync_tags: Any,
+    global_param_template: Any,  # pytree of ShapeDtypeStruct (global shapes)
+    exchange: PSExchange,
+    dist: Dist,
+    batch_spec: Any,  # pytree of PartitionSpec for the batch
+    ps_dtype=jnp.float32,
+    loss_div_tp: bool = True,
+    lr_schedule: Callable | None = None,
+    donate: bool = True,
+    microbatches: int = 1,
+):
+    """Returns (jitted step, ParamSpace, state_specs, n_groups).
+
+    step(pflat, slots, ef, step_count, batch) ->
+        (new_pflat, new_slots, new_ef, new_step, metrics)
+    """
+    tp = dist.tp if dist.model_axis is not None else 1
+    n_groups = tp if dist.model_axis is not None else 1
+    local = local_template(global_param_template, param_specs, mesh)
+    space = exchange.build_space(local, dict(mesh.shape))
+    n_state = exchange.spec.num_state_slots
+    has_ef = (
+        exchange.cfg.compression.codec != "none"
+        and exchange.cfg.compression.error_feedback
+    )
+    sspecs = _state_specs(exchange, n_state, has_ef)
+
+    def device_step(pflat, slots, ef, step_cnt, batch):
+        pf = pflat.reshape(-1)  # (flat_local,)
+        slots_l = tuple(s.reshape(-1) for s in slots)
+        ef_l = ef.reshape(-1) if ef is not None else None
+        params = space.unflatten(pf)
+
+        def grads_of(mb):
+            def lf_tree(params_):
+                loss, met = loss_fn(params_, mb, dist)
+                lossd = loss / tp if (loss_div_tp and tp > 1) else loss
+                return lossd, (loss, met)
+
+            (_, (loss, met)), grads = jax.value_and_grad(lf_tree, has_aux=True)(
+                params
+            )
+            grads = apply_grad_sync(grads, sync_tags, dist)
+            return space.flatten(grads, ps_dtype), loss, met
+
+        if microbatches <= 1:
+            gflat, loss, met = grads_of(batch)
+        else:
+            # gradient accumulation: one PS exchange per global batch
+            mbs = jax.tree.map(
+                lambda x: x.reshape(microbatches, x.shape[0] // microbatches,
+                                    *x.shape[1:]),
+                batch,
+            )
+
+            def body(acc, mb):
+                g, loss, met = grads_of(mb)
+                return acc + g, (loss, met)
+
+            gflat, (losses, mets) = lax.scan(
+                body, jnp.zeros((space.flat_elems,), ps_dtype), mbs
+            )
+            gflat = gflat / microbatches
+            loss = jnp.mean(losses)
+            met = jax.tree.map(jnp.mean, mets)
+
+        lr_scale = lr_schedule(step_cnt + 1) if lr_schedule is not None else 1.0
+        state = {"slots": slots_l, "ef": ef_l, "step": step_cnt}
+        new_pf, new_state = exchange.device_update(gflat, pf, state, lr_scale)
+        # metrics: mean over every axis (values may vary over worker axes and,
+        # for batch-resharding models, over the model axis too)
+        all_axes = tuple(mesh.axis_names)
+        met = jax.tree.map(lambda m: lax.pmean(m, all_axes), met)
+        loss = lax.pmean(loss, all_axes)
+        new_slots = tuple(s.reshape(1, -1) for s in new_state["slots"])
+        new_ef = (
+            new_state["ef"].reshape(1, -1) if new_state["ef"] is not None else None
+        )
+        return (
+            new_pf.reshape(1, -1),
+            new_slots,
+            new_ef,
+            new_state["step"],
+            {"loss": loss, **met},
+        )
+
+    in_specs = (
+        sspecs["pflat"],
+        sspecs["slots"],
+        sspecs["ef"],
+        sspecs["step"],
+        batch_spec,
+    )
+    out_specs = (
+        sspecs["pflat"],
+        sspecs["slots"],
+        sspecs["ef"],
+        sspecs["step"],
+        P(),
+    )
+    shmap = jax.shard_map(
+        device_step, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False,
+    )
+    jit_kwargs = {"donate_argnums": (0, 1, 2)} if donate else {}
+    return jax.jit(shmap, **jit_kwargs), space, sspecs, n_groups
+
+
+def init_train_state(
+    mesh,
+    *,
+    init_params_fn: Callable,  # (key) -> global param pytree (concrete)
+    param_specs: Any,
+    exchange: PSExchange,
+    space: ParamSpace,
+    n_groups: int,
+    key,
+    ps_dtype=jnp.float32,
+) -> TrainState:
+    """Build a concrete, correctly-sharded TrainState on the mesh.
+
+    The flat param buffer is assembled per model group by flattening the
+    *local shard* of each tensor (host-side loop; fine up to multi-B params
+    on a real host, and smoke-scale here)."""
+    params = init_params_fn(key)
+    groups = []
+    for g in range(n_groups):
+        def take_local(x, spec):
+            idx = [slice(None)] * x.ndim
+            for i, s in enumerate(spec):
+                if s is None:
+                    continue
+                axes = s if isinstance(s, tuple) else (s,)
+                if "model" in axes:
+                    n = x.shape[i] // n_groups
+                    idx[i] = slice(g * n, (g + 1) * n)
+            return x[tuple(idx)]
+
+        local = jax.tree.map(take_local, params, param_specs)
+        groups.append(space.flatten(local, ps_dtype))
+    pflat = jnp.stack(groups)
+    n_state = exchange.spec.num_state_slots
+    slots = tuple(
+        jnp.zeros((n_groups, space.flat_elems), jnp.float32) for _ in range(n_state)
+    )
+    has_ef = (
+        exchange.cfg.compression.codec != "none"
+        and exchange.cfg.compression.error_feedback
+    )
+    # NB: slots/ef global second dim is flat_elems (= slab * owners)
+    ef = jnp.zeros((n_groups, space.flat_elems), jnp.float32) if has_ef else None
+    return TrainState(pflat=pflat, slots=slots, ef=ef, step=jnp.zeros((), jnp.int32))
+
+
+def state_shardings(mesh, sspecs) -> dict:
+    return {
+        k: (
+            NamedSharding(mesh, v)
+            if not isinstance(v, tuple)
+            else tuple(NamedSharding(mesh, s) for s in v)
+        )
+        for k, v in sspecs.items()
+        if v is not None
+    }

@@ -1,0 +1,21 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, traceback
+from repro.launch.mesh import make_mesh
+from repro.launch.steps import build_cell
+from repro.configs.registry import list_cells, get_arch
+
+mesh = make_mesh((2,2,2), ("pod","data","model"))
+ok = bad = 0
+for arch_id, shape in list_cells():
+    cell = get_arch(arch_id).cell(shape)
+    try:
+        plan = build_cell(arch_id, shape, mesh, smoke=True)
+        lowered = plan.fn.lower(*plan.abstract_args)
+        compiled = lowered.compile()
+        print(f"OK   {arch_id:22s} {shape}")
+        ok += 1
+    except Exception as e:
+        print(f"FAIL {arch_id:22s} {shape}: {type(e).__name__}: {str(e)[:200]}")
+        bad += 1
+print(f"\n{ok} ok, {bad} fail")

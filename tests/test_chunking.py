@@ -1,0 +1,96 @@
+"""Property tests for the PHub chunk space (hypothesis)."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core.chunking import (
+    DEFAULT_CHUNK_ELEMS,
+    TILE_ELEMS,
+    ParamSpace,
+    tensor_chunk_map,
+)
+
+shapes = st.lists(
+    st.tuples(st.integers(1, 4), st.integers(1, 37), st.integers(1, 9)),
+    min_size=1,
+    max_size=6,
+)
+dtypes = st.sampled_from([jnp.float32, jnp.bfloat16, jnp.float16])
+
+
+def make_tree(shape_list, dtype):
+    rng = np.random.default_rng(42)
+    return {
+        f"t{i}": jnp.asarray(rng.normal(size=s), dtype)
+        for i, s in enumerate(shape_list)
+    }
+
+
+@settings(max_examples=25, deadline=None)
+@given(shapes=shapes, dtype=dtypes, owners=st.integers(1, 7))
+def test_roundtrip(shapes, dtype, owners):
+    tree = make_tree(shapes, dtype)
+    space = ParamSpace.build(tree, chunk_elems=TILE_ELEMS, num_owners=owners)
+    flat = space.flatten(tree)
+    out = space.unflatten(flat)
+    for k in tree:
+        assert out[k].dtype == tree[k].dtype
+        np.testing.assert_array_equal(
+            np.asarray(out[k], np.float32), np.asarray(tree[k], np.float32)
+        )
+
+
+@settings(max_examples=25, deadline=None)
+@given(shapes=shapes, owners=st.integers(1, 16))
+def test_balance_invariant(shapes, owners):
+    tree = make_tree(shapes, jnp.float32)
+    space = ParamSpace.build(tree, chunk_elems=TILE_ELEMS, num_owners=owners)
+    # every owner holds exactly the same number of chunks (slab-uniform)
+    assert space.num_chunks % owners == 0
+    assert space.flat_elems == space.num_chunks * space.chunk_elems
+    assert space.elems_per_owner * owners == space.flat_elems
+    # owner map consistent with contiguous slabs
+    for c in range(space.num_chunks):
+        assert space.owner_of_chunk(c) == c // space.chunks_per_owner
+
+
+def test_determinism():
+    tree = make_tree([(3, 5, 2), (7,)], jnp.float32)
+    s1 = ParamSpace.build(tree, num_owners=4)
+    s2 = ParamSpace.build(tree, num_owners=4)
+    assert s1.slots == s2.slots
+    assert s1.flat_elems == s2.flat_elems
+
+
+def test_owner_slab_views():
+    tree = make_tree([(64, 130)], jnp.float32)
+    space = ParamSpace.build(tree, chunk_elems=TILE_ELEMS, num_owners=4)
+    flat = space.flatten(tree)
+    slabs = space.to_owner_slabs(flat)
+    assert slabs.shape == (4, space.elems_per_owner)
+    np.testing.assert_array_equal(
+        np.asarray(space.from_owner_slabs(slabs)), np.asarray(flat)
+    )
+
+
+def test_chunk_map_and_padding():
+    tree = make_tree([(1000,), (3000,)], jnp.float32)
+    space = ParamSpace.build(tree, chunk_elems=TILE_ELEMS, num_owners=2)
+    m = tensor_chunk_map(space)
+    assert m[0][0] == "['t0']"
+    assert m[0][1] == 0
+    assert space.padding_elems == space.flat_elems - 4000
+    # padding flattens to zeros
+    flat = space.flatten(tree)
+    np.testing.assert_array_equal(
+        np.asarray(flat[space.payload_elems:]), 0.0
+    )
+
+
+def test_bad_chunk_size_rejected():
+    tree = make_tree([(8,)], jnp.float32)
+    with pytest.raises(ValueError):
+        ParamSpace.build(tree, chunk_elems=1000)

@@ -1,0 +1,90 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.embedding_bag.ops import embedding_bag
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+from repro.kernels.fused_agg_opt.ops import fused_aggregate_update
+from repro.kernels.fused_agg_opt.ref import fused_aggregate_update_ref
+from repro.kernels.quant.ops import dequantize_chunks, quantize_chunks
+from repro.kernels.quant.ref import dequantize_chunks_ref, quantize_chunks_ref
+from repro.optim.optimizers import adam, adamw, init_opt_state, momentum, sgd
+
+SLAB = 8 * 128 * 8  # one chunk
+
+
+@pytest.mark.parametrize("spec", [sgd(1e-2, weight_decay=0.01),
+                                  momentum(1e-2, 0.9),
+                                  momentum(1e-2, 0.9, nesterov=True),
+                                  adam(1e-3), adamw(1e-3, weight_decay=0.1)])
+@pytest.mark.parametrize("k", [1, 2, 8])
+@pytest.mark.parametrize("n_chunks", [1, 3])
+@pytest.mark.parametrize("gdtype,pdtype", [(jnp.float32, jnp.float32),
+                                           (jnp.bfloat16, jnp.bfloat16),
+                                           (jnp.bfloat16, jnp.float32)])
+def test_fused_agg_opt_sweep(spec, k, n_chunks, gdtype, pdtype):
+    n = SLAB * n_chunks
+    key = jax.random.PRNGKey(n_chunks * 100 + k)
+    g = jax.random.normal(key, (k, n), jnp.float32).astype(gdtype)
+    p = jax.random.normal(jax.random.PRNGKey(1), (n,), jnp.float32).astype(pdtype)
+    st = init_opt_state(spec, p)
+    if spec.num_state_slots:
+        st = tuple(jax.random.normal(jax.random.PRNGKey(7 + i), (n,)) * 0.1
+                   for i in range(spec.num_state_slots))
+    step = jnp.int32(5)
+    p1, s1 = fused_aggregate_update(g, p, st, spec, step, lr_scale=0.7)
+    p2, s2 = fused_aggregate_update_ref(g, p, st, spec, step, lr_scale=0.7)
+    tol = 1e-6 if pdtype == jnp.float32 else 1e-2
+    np.testing.assert_allclose(np.asarray(p1, np.float32),
+                               np.asarray(p2, np.float32), rtol=tol, atol=tol)
+    for a, b in zip(s1, s2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n_chunks", [1, 4])
+@pytest.mark.parametrize("chunk", [1024, 8192])
+def test_quant_matches_ref(n_chunks, chunk):
+    n = n_chunks * chunk
+    x = jax.random.normal(jax.random.PRNGKey(0), (n,)) * 13.0
+    q, s = quantize_chunks(x, chunk)
+    qr, sr = quantize_chunks_ref(x, chunk)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    xd = dequantize_chunks(q, s, chunk)
+    xr = dequantize_chunks_ref(qr, sr, chunk)
+    np.testing.assert_allclose(np.asarray(xd), np.asarray(xr), rtol=1e-6)
+
+
+def test_quant_error_bound():
+    """Per-chunk error <= scale/2 = amax/254 (symmetric int8 rounding)."""
+    chunk = 1024
+    x = jax.random.normal(jax.random.PRNGKey(3), (8 * chunk,)) * 5
+    q, s = quantize_chunks(x, chunk)
+    xd = dequantize_chunks(q, s, chunk)
+    err = np.abs(np.asarray(xd - x)).reshape(8, chunk).max(axis=1)
+    amax = np.abs(np.asarray(x)).reshape(8, chunk).max(axis=1)
+    assert (err <= amax / 254 + 1e-7).all()
+
+
+def test_quant_zero_chunk():
+    x = jnp.zeros((2048,))
+    q, s = quantize_chunks(x, 1024)
+    assert not np.isnan(np.asarray(s)).any()
+    np.testing.assert_array_equal(np.asarray(dequantize_chunks(q, s, 1024)), 0.0)
+
+
+@pytest.mark.parametrize("b,l,v,d", [(4, 1, 64, 128), (8, 4, 100, 128),
+                                     (2, 16, 32, 256)])
+@pytest.mark.parametrize("mode", ["sum", "mean"])
+def test_embedding_bag_sweep(b, l, v, d, mode):
+    key = jax.random.PRNGKey(b * l)
+    table = jax.random.normal(key, (v, d))
+    idx = jax.random.randint(jax.random.PRNGKey(1), (b, l), 0, v)
+    w = jnp.where(jax.random.uniform(jax.random.PRNGKey(2), (b, l)) > 0.3, 1.0, 0.0)
+    out_k = embedding_bag(table, idx, w, mode, use_pallas=True)
+    out_r = embedding_bag_ref(table, idx, w, mode)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=1e-5, atol=1e-5)
