@@ -1,17 +1,26 @@
 """Paper Figure 4: ZeroComputeEngine limit study.
 
 The paper drives PBox with infinitely fast workers to find the exchange
-ceiling (PCIe-to-memory bound).  Analogue: exchange-only steps (no model
-compute) measured on 8 host devices across gradient sizes and strategies;
-derived column reports achieved GB/s of aggregated gradient per step and
-the modeled per-device wire bytes (flat in worker count for pbox — the
-scalability claim)."""
+ceiling (PCIe-to-memory bound).  Two analogues:
+
+  * SPMD: exchange-only steps (no model compute) measured on 8 host devices
+    across gradient sizes and strategies; derived column reports achieved
+    GB/s of aggregated gradient per step and the modeled per-device wire
+    bytes (flat in worker count for pbox — the scalability claim).
+  * Fabric: the in-process PBox fabric fed precomputed gradients (zero
+    worker compute), swept over shard counts; the event-clock columns are
+    the paper's Fig. 4 shape — pipelined makespan vs the monolithic
+    store-and-forward baseline, shrinking as engines are added.
+"""
 from __future__ import annotations
 
 import os
 import subprocess
 import sys
+import time
 from pathlib import Path
+
+import jax.numpy as jnp
 
 from benchmarks.common import emit
 
@@ -22,10 +31,10 @@ import time
 import jax, jax.numpy as jnp
 from repro.core.exchange import ExchangeConfig, PSExchange
 from repro.core.zero_compute import init_zero_compute_state, make_zero_compute_step
+from repro.launch.mesh import make_mesh
 from repro.optim.optimizers import momentum
 
-mesh = jax.make_mesh((2,2,2), ("pod","data","model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*3)
+mesh = make_mesh((2,2,2), ("pod","data","model"))
 for strat, pod in (("allreduce", None), ("pbox", None), ("pbox_hier", "pod")):
     for flat in (1<<20, 1<<23):
         ex = PSExchange(momentum(0.1, 0.9), ExchangeConfig(strat),
@@ -48,6 +57,39 @@ for strat, pod in (("allreduce", None), ("pbox", None), ("pbox_hier", "pod")):
 """
 
 
+def _run_fabric_sweep() -> None:
+    """Zero-compute drive of the in-process fabric: precomputed gradients,
+    shard-count scaling curve from the event clock."""
+    from repro.core.chunking import ParamSpace
+    from repro.core.fabric import LinkModel, PBoxFabric
+    from repro.optim.optimizers import momentum
+
+    k = 4
+    flat_elems = 1 << 20
+    params = {"w": jnp.zeros((flat_elems,), jnp.float32)}
+    space = ParamSpace.build(params)
+    grads = [jnp.full((space.flat_elems,), float(w + 1)) for w in range(k)]
+    link = LinkModel(wire_us_per_chunk=0.2, agg_us_per_chunk=1.0)
+    for n_shards in (1, 2, 4, 8, 16):
+        fab = PBoxFabric(space, momentum(0.1, 0.9), space.flatten(params),
+                         num_workers=k, num_shards=n_shards, link=link,
+                         placement="round_robin")
+        for w in range(k):  # compile
+            fab.push(w, grads[w])
+        steps, t0 = 3, time.perf_counter()
+        for _ in range(steps):
+            for w in range(k):
+                fab.push(w, grads[w])
+        us = (time.perf_counter() - t0) / steps * 1e6
+        st = fab.stats
+        emit(
+            f"fig4/fabric_shards={n_shards}", us,
+            f"sim_pipelined_us={st.sim_pipelined_us/st.steps:.0f};"
+            f"sim_serialized_us={st.sim_serialized_us/st.steps:.0f};"
+            f"pipeline_speedup={st.pipeline_speedup:.2f}",
+        )
+
+
 def run() -> None:
     env = dict(os.environ)
     env["PYTHONPATH"] = str(Path(__file__).parent.parent / "src")
@@ -55,9 +97,10 @@ def run() -> None:
                        text=True, env=env, timeout=900)
     if p.returncode != 0:
         emit("fig4/FAILED", 0.0, p.stderr[-200:].replace("\n", " "))
-        return
-    for line in p.stdout.strip().splitlines():
-        print(line)
+    else:
+        for line in p.stdout.strip().splitlines():
+            print(line)
+    _run_fabric_sweep()
 
 
 if __name__ == "__main__":

@@ -1,11 +1,18 @@
-"""Paper Table 1: training throughput vs worker count.
+"""Paper Table 1: training throughput vs worker count — and shard count.
 
 The paper shows MXNet/TF/Caffe2 scale poorly from 1 -> 8 workers because the
 PS stack bottlenecks.  We reproduce the *shape* of the experiment with the
-in-process PHub server: samples/s of synchronous SGD on the paper's workload
+in-process PBox fabric: samples/s of synchronous SGD on the paper's workload
 class (ResNet-ish conv net — reduced for CPU) for K in {1, 2, 4, 8} workers,
 and the ideal linear line for reference.  Derived column: scaling efficiency
 vs K=1.
+
+A second sweep fixes K=4 workers and varies the number of PBox aggregation
+engines (shards): wall time stays ~flat (the fused update is the same math
+either way — CPU simulation has no real parallel engines) while the
+event-clock columns show what sharding buys on real hardware: the pipelined
+makespan shrinks as chunks spread over more engines, and per-shard wire
+bytes split ~1/N.
 """
 from __future__ import annotations
 
@@ -18,30 +25,36 @@ import numpy as np
 from benchmarks.common import emit
 from repro.configs.registry import get_arch
 from repro.core.chunking import ParamSpace
-from repro.core.server import PHubServer, WorkerHarness
+from repro.core.fabric import LinkModel, PBoxFabric, WorkerHarness
 from repro.data.synthetic import image_batches
 from repro.models import resnet as RN
 from repro.optim.optimizers import momentum
 
 
-def run() -> None:
+def _make_setup():
     cfg = get_arch("resnet50").smoke_config
     params = RN.init_params(cfg, jax.random.PRNGKey(0))
-    space = ParamSpace.build(params, num_owners=1)
+    space = ParamSpace.build(params)
     batch = 8
     data = image_batches(batch, 32, cfg.n_classes, seed=0)
     batches = [next(data) for _ in range(4)]
     lossg = jax.jit(jax.grad(lambda p, b: RN.loss_fn(p, b, cfg)[0]))
 
+    def grad_fn(p, wb):
+        b = batches[wb[1] % len(batches)]
+        return lossg(p, jax.tree.map(jnp.asarray, b))
+
+    return params, space, batch, grad_fn
+
+
+def run() -> None:
+    params, space, batch, grad_fn = _make_setup()
+
+    # -- worker-count sweep (the paper's Table 1 axis) ------------------
     base = None
     for k in (1, 2, 4, 8):
-        srv = PHubServer(space, momentum(0.1, 0.9), space.flatten(params),
+        srv = PBoxFabric(space, momentum(0.1, 0.9), space.flatten(params),
                          num_workers=k)
-
-        def grad_fn(p, wb):
-            b = batches[wb[1] % len(batches)]
-            return lossg(p, jax.tree.map(jnp.asarray, b))
-
         h = WorkerHarness(srv, grad_fn, lambda w, s: (w, s))
         h.run(1)  # compile
         t0 = time.perf_counter()
@@ -53,6 +66,29 @@ def run() -> None:
             base = sps
         emit(f"table1/sync_sgd_workers={k}", dt / steps * 1e6,
              f"samples_per_s={sps:.1f};scaling_eff={sps/(base*k):.2f}")
+
+    # -- shard-count sweep (the PBox axis: more aggregation engines) ----
+    k = 4
+    link = LinkModel(wire_us_per_chunk=0.2, agg_us_per_chunk=1.0)
+    for n_shards in (1, 2, 4, 8):
+        srv = PBoxFabric(space, momentum(0.1, 0.9), space.flatten(params),
+                         num_workers=k, num_shards=n_shards, link=link,
+                         placement="round_robin")
+        h = WorkerHarness(srv, grad_fn, lambda w, s: (w, s))
+        h.run(1)  # compile
+        t0 = time.perf_counter()
+        steps = 3
+        h.run(1 + steps)
+        dt = time.perf_counter() - t0
+        st = srv.stats
+        per_shard = [s.stats.bytes_pushed >> 20 for s in srv.shards]
+        emit(
+            f"table1/pbox_shards={n_shards}", dt / steps * 1e6,
+            f"sim_pipelined_us={st.sim_pipelined_us/st.steps:.0f};"
+            f"sim_serialized_us={st.sim_serialized_us/st.steps:.0f};"
+            f"pipeline_speedup={st.pipeline_speedup:.2f};"
+            f"push_MiB_per_shard={min(per_shard)}-{max(per_shard)}",
+        )
 
 
 if __name__ == "__main__":

@@ -1,4 +1,4 @@
-"""Quickstart: train a tiny LM through the PBox parameter-server pipeline on
+"""Quickstart: train a tiny LM through the chunk-sharded PBox fabric on
 whatever devices exist (single CPU here), watch the loss fall.
 
   PYTHONPATH=src python examples/quickstart.py
@@ -8,7 +8,7 @@ import jax.numpy as jnp
 
 from repro.configs.registry import get_arch
 from repro.core.chunking import ParamSpace
-from repro.core.server import PHubServer, WorkerHarness
+from repro.core.fabric import PBoxFabric, WorkerHarness
 from repro.data.synthetic import lm_batches
 from repro.models.common import Dist
 from repro.models.transformer import init_params, lm_loss
@@ -20,10 +20,12 @@ def main() -> None:
     dist = Dist.none()
     params = init_params(cfg, jax.random.PRNGKey(0), tp=1)
 
-    # the PS: chunked flat space + fused aggregate/optimize server
+    # the PS: chunked flat space sharded over 4 fused aggregate/optimize
+    # engines (chunk i aggregates while chunk i+1 is on the wire)
     space = ParamSpace.build(params)
     print(space.describe())
-    srv = PHubServer(space, adamw(3e-3), space.flatten(params), num_workers=2)
+    srv = PBoxFabric(space, adamw(3e-3), space.flatten(params),
+                     num_shards=4, num_workers=2)
 
     streams = [lm_batches(cfg.vocab, 4, 32, seed=w) for w in range(2)]
     lossg = jax.jit(jax.value_and_grad(
@@ -44,6 +46,9 @@ def main() -> None:
     assert losses[-1] < losses[0]
     print("pushes:", srv.stats.pushes, " bytes pushed:",
           srv.stats.bytes_pushed >> 20, "MiB")
+    print(srv.describe())
+    print(f"simulated pipeline speedup vs monolithic store-and-forward: "
+          f"{srv.stats.pipeline_speedup:.2f}x")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# Tier-1 verify: the full pytest suite on CPU.  Pallas kernels run in
+# interpret mode off-TPU (the kernels' default), so this needs no
+# accelerator.  Usage: scripts/verify.sh [extra pytest args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="${PWD}/src${PYTHONPATH:+:$PYTHONPATH}"
+# keep CPU runs deterministic and quiet
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+exec python -m pytest -x -q "$@"

@@ -1,0 +1,68 @@
+"""Version tolerance for the JAX surface this repo uses.
+
+The codebase targets the current jax API (``jax.shard_map`` with
+``check_vma``, ``jax.make_mesh(..., axis_types=...)``,
+``jax.tree.leaves_with_path``).  Older installs (e.g. 0.4.x) spell these
+differently; every call site goes through this module so the rest of the
+code can be written once against the new names.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+
+# ---------------------------------------------------------------------------
+# tree_leaves_with_path
+# ---------------------------------------------------------------------------
+if hasattr(jax.tree, "leaves_with_path"):
+    tree_leaves_with_path = jax.tree.leaves_with_path
+else:  # jax < 0.4.40
+    tree_leaves_with_path = jax.tree_util.tree_leaves_with_path
+
+
+# ---------------------------------------------------------------------------
+# shard_map(f, mesh=, in_specs=, out_specs=, check_vma=)
+# ---------------------------------------------------------------------------
+if hasattr(jax, "shard_map"):
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+
+else:  # jax < 0.6: experimental namespace, ``check_rep`` spelling
+    from jax.experimental.shard_map import shard_map as _shard_map_exp
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+        return _shard_map_exp(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=check_vma,
+        )
+
+
+# ---------------------------------------------------------------------------
+# lax.axis_size (older jax: psum a unit — the reduction is constant-folded)
+# ---------------------------------------------------------------------------
+if hasattr(jax.lax, "axis_size"):
+    axis_size = jax.lax.axis_size
+else:
+
+    def axis_size(axis_name):
+        return jax.lax.psum(1, axis_name)
+
+
+# ---------------------------------------------------------------------------
+# make_mesh: always all-Auto axis types.  On jax versions with AxisType the
+# tuple is passed explicitly; older jax has no such kwarg and its meshes
+# already behave like all-Auto.
+# ---------------------------------------------------------------------------
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]):
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(
+            axis_shapes, axis_names,
+            axis_types=(axis_type.Auto,) * len(tuple(axis_names)),
+        )
+    return jax.make_mesh(axis_shapes, axis_names)

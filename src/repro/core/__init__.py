@@ -2,7 +2,15 @@
 from repro.core.chunking import ParamSpace, TensorSlot, DEFAULT_CHUNK_ELEMS
 from repro.core.exchange import ExchangeConfig, PSExchange
 from repro.core.compression import CompressionConfig
-from repro.core.server import PHubServer, WorkerHarness
+from repro.core.fabric import (
+    LinkModel,
+    PBoxFabric,
+    PBoxShard,
+    ServerStats,
+    ShardStats,
+    WorkerHarness,
+)
+from repro.core.server import PHubServer
 
 __all__ = [
     "ParamSpace",
@@ -11,6 +19,11 @@ __all__ = [
     "ExchangeConfig",
     "PSExchange",
     "CompressionConfig",
+    "LinkModel",
+    "PBoxFabric",
+    "PBoxShard",
+    "ServerStats",
+    "ShardStats",
     "PHubServer",
     "WorkerHarness",
 ]

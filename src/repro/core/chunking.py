@@ -91,8 +91,10 @@ class ParamSpace:
             )
         if num_owners < 1:
             raise ValueError("num_owners must be >= 1")
+        from repro.compat import tree_leaves_with_path
+
         leaves, treedef = jax.tree.flatten(tree)
-        paths = jax.tree.leaves_with_path(tree)
+        paths = tree_leaves_with_path(tree)
         slots = []
         offset = 0
         for (path, leaf) in paths:

@@ -42,6 +42,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import compat
+
 from repro.core import compression as comp
 from repro.core.chunking import ParamSpace
 from repro.core.compression import CompressionConfig
@@ -129,7 +131,7 @@ class PSExchange:
     def _num_workers(self) -> Any:
         n = 1
         for a in self.worker_axes:
-            n *= lax.axis_size(a)
+            n *= compat.axis_size(a)
         return n
 
     def device_update(
@@ -193,8 +195,8 @@ class PSExchange:
             data_axes = self.owner_axes
             n_data = 1
             for a in data_axes:
-                n_data *= lax.axis_size(a)
-            n_pod = lax.axis_size(pod)
+                n_data *= compat.axis_size(a)
+            n_pod = compat.axis_size(pod)
             # stage 1: rack-local aggregation (reduce-scatter within pod)
             slab = lax.psum_scatter(
                 gflat, data_axes, scatter_dimension=0, tiled=True

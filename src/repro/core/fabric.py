@@ -1,0 +1,571 @@
+"""Chunk-sharded PBox fabric: the paper's balanced multi-engine PS.
+
+PBox's central claim (§3) is that a balanced parameter server must (a) shard
+the flat chunked parameter space over multiple aggregation engines, (b) keep
+every engine's slab the same size, and (c) overlap the wire with per-chunk
+aggregation — chunk *i* is aggregated+optimized while chunk *i+1* is still in
+flight.  The previous in-process simulator (``PHubServer``) modelled a single
+monolithic engine over the whole flat space; this module replaces it:
+
+  ``PBoxShard``    one aggregation engine.  Owns a set of 32 KB key chunks
+                   (initially a contiguous slab), holds their parameters and
+                   optimizer state, and runs the *actual* K-way fused
+                   aggregate+optimize Pallas kernel on only its slab.
+
+  ``PBoxFabric``   the fabric: routes per-chunk pushes/pulls to the owning
+                   shard, enforces sync / async / SSP admission and the
+                   backup-worker partial quorum, and can rebalance chunk
+                   ownership away from slow shards
+                   (runtime/straggler.ShardRebalancer drives this hook).
+
+Numerics are *identical* to the single-server path by construction: the fused
+update is elementwise over the flat space and sums workers in a fixed order,
+so applying it slab-by-slab is bit-equal to applying it once over the whole
+space (tests/test_fabric.py asserts this for 1, 2 and 8 shards).
+
+Pipelining is modelled with an event-ordered simulator clock rather than
+threads: each completed push replays the per-chunk timeline (chunk ``c``
+arrives at ``(c+1) * wire_us``; a shard aggregates its chunks in arrival
+order, overlapping the wire), and ``ServerStats`` records both the pipelined
+makespan and the monolithic store-and-forward baseline so benchmarks can plot
+shard-count scaling curves.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.chunking import ParamSpace
+from repro.kernels.fused_agg_opt.kernel import LANES, SUBLANES
+from repro.kernels.fused_agg_opt.ops import fused_aggregate_update
+from repro.optim.optimizers import OptimizerSpec, init_opt_state
+
+# The fused kernel processes slabs in whole (8 sublane) * 8-row register
+# blocks of 128 lanes; shard slabs are padded up to this unit (see
+# PBoxShard.apply).
+_KERNEL_SLAB_UNIT = SUBLANES * LANES * 8
+
+
+# ---------------------------------------------------------------------------
+# stats
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class ServerStats:
+    """Fabric-wide accounting (back-compat superset of the old PHubServer
+    stats, plus chunk-granular and event-clock pipeline fields)."""
+
+    steps: int = 0
+    pushes: int = 0
+    pulls: int = 0
+    bytes_pushed: int = 0
+    bytes_pulled: int = 0
+    partial_aggregations: int = 0
+    # chunk-granular accounting
+    chunk_pushes: int = 0
+    chunk_pulls: int = 0
+    rebalances: int = 0
+    chunks_moved: int = 0
+    # event-ordered simulator clock (µs of simulated time, cumulative)
+    sim_wire_us: float = 0.0
+    sim_agg_us: float = 0.0
+    sim_pipelined_us: float = 0.0  # chunk-pipelined, sharded makespan
+    sim_serialized_us: float = 0.0  # monolithic store-and-forward baseline
+
+    @property
+    def pipeline_speedup(self) -> float:
+        """Simulated speedup of chunk-pipelined sharded aggregation over the
+        monolithic push-everything-then-aggregate baseline."""
+        if self.sim_pipelined_us <= 0.0:
+            return 1.0
+        return self.sim_serialized_us / self.sim_pipelined_us
+
+
+@dataclasses.dataclass
+class ShardStats:
+    chunk_pushes: int = 0
+    chunk_pulls: int = 0
+    bytes_pushed: int = 0
+    bytes_pulled: int = 0
+    agg_events: int = 0
+    sim_busy_us: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkModel:
+    """Event-clock costs for the pipelined push/aggregate/pull simulation.
+
+    Workers stream chunks in ascending chunk order on their own links, so
+    chunk ``c`` (all workers' copies) lands at ``(c+1) * wire_us_per_chunk``;
+    a shard then spends ``agg_us_per_chunk`` of engine time per chunk."""
+
+    wire_us_per_chunk: float = 1.0
+    agg_us_per_chunk: float = 0.5
+
+
+# ---------------------------------------------------------------------------
+# shard
+# ---------------------------------------------------------------------------
+class PBoxShard:
+    """One aggregation engine: owns chunks, runs the fused kernel on them."""
+
+    def __init__(
+        self,
+        shard_id: int,
+        space: ParamSpace,
+        spec: OptimizerSpec,
+        chunk_ids: np.ndarray,
+        chunk_params: jax.Array,  # (n_owned, chunk_elems) f32
+        *,
+        use_pallas: bool = True,
+    ):
+        self.shard_id = shard_id
+        self.space = space
+        self.spec = spec
+        self.chunk_ids = np.asarray(chunk_ids, dtype=np.int64)
+        self.params = chunk_params.astype(jnp.float32)
+        self.state = init_opt_state(spec, self.params)
+        self.use_pallas = use_pallas
+        self.stats = ShardStats()
+
+    @property
+    def num_chunks(self) -> int:
+        return len(self.chunk_ids)
+
+    @property
+    def num_elems(self) -> int:
+        return self.num_chunks * self.space.chunk_elems
+
+    def apply(self, grads: jax.Array, step: int, *, average: bool) -> None:
+        """grads: (K, n_owned, chunk_elems) worker gradient rows for this
+        shard's chunks, stacked in ascending worker order."""
+        if self.num_chunks == 0:
+            return
+        k = grads.shape[0]
+        n = self.num_elems
+        # The Pallas kernel wants slabs in whole 8*128*8 vector-register
+        # blocks; pad with zero grad/param/state rows (a zero fixed point for
+        # every optimizer here), so any chunk count keeps the kernel path —
+        # and the same math path — regardless of how chunks are sharded.
+        pad = (-n) % _KERNEL_SLAB_UNIT if self.use_pallas else 0
+        gf = grads.reshape(k, n)
+        pf = self.params.reshape(n)
+        sf = tuple(s.reshape(n) for s in self.state)
+        if pad:
+            gf = jnp.concatenate([gf, jnp.zeros((k, pad), gf.dtype)], axis=1)
+            pf = jnp.concatenate([pf, jnp.zeros((pad,), pf.dtype)])
+            sf = tuple(jnp.concatenate([s, jnp.zeros((pad,), s.dtype)])
+                       for s in sf)
+        new_p, new_s = fused_aggregate_update(
+            gf,
+            pf,
+            sf,
+            self.spec,
+            jnp.int32(step),
+            average=average,
+            use_pallas=self.use_pallas,
+            interpret=True,
+        )
+        shape = (self.num_chunks, self.space.chunk_elems)
+        self.params = new_p[:n].reshape(shape)
+        self.state = tuple(s[:n].reshape(shape) for s in new_s)
+        self.stats.agg_events += 1
+
+    # -- chunk migration (rebalancing) ---------------------------------
+    def release(self, chunk_ids: np.ndarray) -> tuple[jax.Array, tuple]:
+        """Give up ownership of ``chunk_ids``; returns their (params, state)
+        rows in the order of ``chunk_ids``."""
+        pos = np.searchsorted(self.chunk_ids, chunk_ids)
+        if np.any(pos >= len(self.chunk_ids)) or not np.array_equal(
+                self.chunk_ids[pos], chunk_ids):
+            raise ValueError("releasing chunks this shard does not own")
+        p_rows = self.params[pos]
+        s_rows = tuple(s[pos] for s in self.state)
+        keep = np.ones(self.num_chunks, dtype=bool)
+        keep[pos] = False
+        self.chunk_ids = self.chunk_ids[keep]
+        keep_j = jnp.asarray(np.where(keep)[0])
+        self.params = self.params[keep_j]
+        self.state = tuple(s[keep_j] for s in self.state)
+        return p_rows, s_rows
+
+    def adopt(self, chunk_ids: np.ndarray, p_rows: jax.Array, s_rows: tuple) -> None:
+        """Take ownership of ``chunk_ids`` with their (params, state) rows."""
+        merged = np.concatenate([self.chunk_ids, np.asarray(chunk_ids, np.int64)])
+        order = np.argsort(merged, kind="stable")
+        order_j = jnp.asarray(order)
+        self.chunk_ids = merged[order]
+        self.params = jnp.concatenate([self.params, p_rows])[order_j]
+        self.state = tuple(
+            jnp.concatenate([s, r])[order_j] for s, r in zip(self.state, s_rows)
+        )
+
+
+# ---------------------------------------------------------------------------
+# fabric
+# ---------------------------------------------------------------------------
+class PBoxFabric:
+    """Chunk-sharded PS fabric over N aggregation engines.
+
+    Synchronization modes (identical admission semantics to the old
+    single-engine PHubServer; tested for back-compat in tests/test_server.py):
+
+      sync      barrier every step (BSP; the paper's setting)
+      async     each completed push is applied immediately, chunk-routed to
+                the owning shards (Hogwild-PS)
+      stale(s)  bounded staleness: a worker may run at most ``s`` steps ahead
+                of the slowest worker (SSP); s=0 == sync
+
+    Workers may push the whole flat gradient at once (``push``) or
+    chunk-group by chunk-group (``push_chunks``); a push completes — and
+    enters admission — once every chunk of the flat space has been staged.
+    """
+
+    def __init__(
+        self,
+        space: ParamSpace,
+        spec: OptimizerSpec,
+        init_flat: jax.Array,
+        *,
+        num_shards: int = 1,
+        mode: str = "sync",  # "sync" | "async" | "stale"
+        staleness: int = 0,
+        num_workers: int = 1,
+        min_push_fraction: float = 1.0,
+        use_pallas: bool = True,
+        link: LinkModel | None = None,
+        placement: str = "contiguous",  # | "round_robin"
+    ):
+        if mode not in ("sync", "async", "stale"):
+            raise ValueError(f"unknown mode {mode}")
+        if num_shards < 1:
+            raise ValueError("num_shards must be >= 1")
+        if placement not in ("contiguous", "round_robin"):
+            raise ValueError(f"unknown placement {placement}")
+        self.space = space
+        self.spec = spec
+        self.mode = mode
+        self.staleness = (
+            staleness if mode == "stale" else (0 if mode == "sync" else 1 << 30)
+        )
+        self.num_workers = num_workers
+        self.num_shards = num_shards
+        self.min_pushes = max(1, int(np.ceil(min_push_fraction * num_workers)))
+        self.use_pallas = use_pallas
+        self.link = link or LinkModel()
+        self.step = 0
+        self.worker_clock = np.zeros(num_workers, dtype=np.int64)
+        self.stats = ServerStats()
+
+        c = space.num_chunks
+        rows = init_flat.astype(jnp.float32).reshape(c, space.chunk_elems)
+        self.chunk_owner = np.empty(c, dtype=np.int64)
+        self.shards: list[PBoxShard] = []
+        if placement == "round_robin":
+            # the paper's core assignment: chunk c -> engine c % N, so a
+            # streamed push feeds every engine continuously
+            assignment = [np.arange(c)[np.arange(c) % num_shards == s]
+                          for s in range(num_shards)]
+        else:
+            assignment = np.array_split(np.arange(c), num_shards)
+        for sid, ids in enumerate(assignment):
+            self.chunk_owner[ids] = sid
+            self.shards.append(
+                PBoxShard(sid, space, spec, ids, rows[jnp.asarray(ids)],
+                          use_pallas=use_pallas)
+            )
+        # sync/stale inbox: worker -> (num_chunks, chunk_elems) gradient rows
+        self._inbox: dict[int, jax.Array] = {}
+        # chunk-by-chunk staging: worker -> (host rows buffer, staged mask)
+        self._staged: dict[int, tuple] = {}
+        self._flat_cache: jax.Array | None = None
+
+    # -- assembled views -----------------------------------------------
+    def _assemble_rows(self, per_shard: Callable[[PBoxShard], Any]) -> jax.Array:
+        rows = jnp.zeros((self.space.num_chunks, self.space.chunk_elems),
+                         jnp.float32)
+        for shard in self.shards:
+            if shard.num_chunks:
+                rows = rows.at[jnp.asarray(shard.chunk_ids)].set(per_shard(shard))
+        return rows
+
+    @property
+    def params(self) -> jax.Array:
+        """The full flat parameter space, assembled from the shards."""
+        if self._flat_cache is None:
+            self._flat_cache = self._assemble_rows(
+                lambda s: s.params).reshape(-1)
+        return self._flat_cache
+
+    # -- worker API ----------------------------------------------------
+    def pull(self, worker: int) -> jax.Array:
+        flat = self.params
+        self.stats.pulls += 1
+        self.stats.bytes_pulled += flat.size * 4
+        self.stats.chunk_pulls += self.space.num_chunks
+        for shard in self.shards:
+            shard.stats.chunk_pulls += shard.num_chunks
+            shard.stats.bytes_pulled += shard.num_elems * 4
+        return flat
+
+    def can_proceed(self, worker: int) -> bool:
+        """SSP admission: worker may start its next step iff it is within
+        ``staleness`` steps of the slowest worker."""
+        return self.worker_clock[worker] - self.worker_clock.min() <= self.staleness
+
+    def push(self, worker: int, gflat: jax.Array) -> None:
+        """Push the whole flat gradient in one call."""
+        if gflat.shape != (self.space.flat_elems,):
+            raise ValueError("bad gradient shape")
+        self._complete_push(
+            worker, gflat.reshape(self.space.num_chunks, self.space.chunk_elems)
+        )
+
+    def push_chunks(
+        self, worker: int, chunk_ids: Sequence[int] | np.ndarray,
+        gchunks: jax.Array,
+    ) -> None:
+        """Stage a worker's gradient for a subset of chunks.
+
+        ``gchunks``: (len(chunk_ids), chunk_elems).  The push completes (and
+        enters sync/async/SSP admission) once all chunks are staged."""
+        ids = np.asarray(chunk_ids, dtype=np.int64)
+        if gchunks.shape != (len(ids), self.space.chunk_elems):
+            raise ValueError("bad chunk gradient shape")
+        if worker not in self._staged:
+            # host-side staging buffer, mutated in place — streaming a push
+            # in G groups costs one device->host copy per group plus a
+            # single host->device copy at completion, not G full-buffer
+            # functional updates
+            self._staged[worker] = (
+                np.zeros((self.space.num_chunks, self.space.chunk_elems),
+                         np.float32),
+                np.zeros(self.space.num_chunks, dtype=bool),
+            )
+        buf, mask = self._staged[worker]
+        buf[ids] = np.asarray(gchunks, np.float32)
+        mask[ids] = True
+        if mask.all():
+            self._staged.pop(worker)
+            self._complete_push(worker, jnp.asarray(buf))
+
+    # -- push completion / admission ------------------------------------
+    def _complete_push(self, worker: int, gchunks: jax.Array) -> None:
+        self.stats.pushes += 1
+        self.stats.bytes_pushed += gchunks.size * 4
+        self.stats.chunk_pushes += self.space.num_chunks
+        for shard in self.shards:
+            shard.stats.chunk_pushes += shard.num_chunks
+            shard.stats.bytes_pushed += shard.num_elems * 4
+        self.worker_clock[worker] += 1
+        if self.mode == "async":
+            self.step += 1
+            for shard in self.shards:
+                if shard.num_chunks:
+                    shard.apply(gchunks[jnp.asarray(shard.chunk_ids)][None],
+                                self.step, average=False)
+            self.stats.steps += 1
+            self._simulate_round()
+            self._flat_cache = None
+            return
+        self._inbox[worker] = gchunks
+        if len(self._inbox) >= self.min_pushes and self._barrier_met():
+            self._aggregate()
+
+    def _barrier_met(self) -> bool:
+        if self.min_pushes < self.num_workers:
+            return True  # backup-worker mode: quorum reached
+        return len(self._inbox) == self.num_workers
+
+    def _aggregate(self) -> None:
+        workers = sorted(self._inbox)
+        if len(workers) < self.num_workers:
+            self.stats.partial_aggregations += 1
+        self.step += 1
+        for shard in self.shards:
+            if not shard.num_chunks:
+                continue
+            ids = jnp.asarray(shard.chunk_ids)
+            grads = jnp.stack([self._inbox[w][ids] for w in workers])
+            shard.apply(grads, self.step, average=True)
+        self._inbox.clear()
+        self.stats.steps += 1
+        self._simulate_round()
+        self._flat_cache = None
+
+    # -- event-ordered pipeline clock ------------------------------------
+    def _simulate_round(self) -> None:
+        """Replay one aggregation round on the event clock: chunk c arrives
+        at (c+1)*wire_us; each shard aggregates its chunks in arrival order,
+        overlapping wire and engine time (chunk i aggregates while chunk i+1
+        is in flight)."""
+        wire = self.link.wire_us_per_chunk
+        agg = self.link.agg_us_per_chunk
+        c = self.space.num_chunks
+        makespan = 0.0
+        for shard in self.shards:
+            if not shard.num_chunks:
+                continue
+            arrival = (shard.chunk_ids.astype(np.float64) + 1.0) * wire
+            n = len(arrival)
+            # completion_i = max_{j<=i}(arrival_j - j*agg) + (i+1)*agg
+            shifted = arrival - np.arange(n) * agg
+            done = np.maximum.accumulate(shifted) + (np.arange(n) + 1) * agg
+            makespan = max(makespan, float(done[-1]))
+            shard.stats.sim_busy_us += n * agg
+        self.stats.sim_wire_us += c * wire
+        self.stats.sim_agg_us += c * agg
+        self.stats.sim_pipelined_us += makespan
+        self.stats.sim_serialized_us += c * wire + c * agg
+
+    # -- rebalancing hook -------------------------------------------------
+    def rebalance(self, slow_shards: Sequence[int]) -> int:
+        """Move all chunks owned by ``slow_shards`` to healthy shards
+        (balance-preserving, see runtime/straggler.rebalance_chunks).
+        Pure ownership transfer: parameters and optimizer state move with
+        their chunks, so training numerics are unchanged.  Returns the number
+        of chunks moved."""
+        from repro.runtime.straggler import rebalance_chunks
+
+        new_owner = rebalance_chunks(self.chunk_owner, list(slow_shards),
+                                     self.num_shards)
+        moved = np.where(new_owner != self.chunk_owner)[0]
+        if len(moved) == 0:
+            return 0
+        stash_p: dict[int, Any] = {}
+        stash_s: dict[int, Any] = {}
+        for shard in self.shards:
+            ids = moved[self.chunk_owner[moved] == shard.shard_id]
+            if len(ids) == 0:
+                continue
+            p_rows, s_rows = shard.release(ids)
+            for j, cid in enumerate(ids):
+                stash_p[int(cid)] = p_rows[j]
+                stash_s[int(cid)] = tuple(s[j] for s in s_rows)
+        for shard in self.shards:
+            ids = moved[new_owner[moved] == shard.shard_id]
+            if len(ids) == 0:
+                continue
+            p_rows = jnp.stack([stash_p[int(cid)] for cid in ids])
+            s_rows = tuple(
+                jnp.stack([stash_s[int(cid)][k] for cid in ids])
+                for k in range(self.spec.num_state_slots)
+            )
+            shard.adopt(ids, p_rows, s_rows)
+        self.chunk_owner = new_owner
+        self.stats.rebalances += 1
+        self.stats.chunks_moved += len(moved)
+        self._flat_cache = None
+        return len(moved)
+
+    # -- elastic / checkpoint hooks ---------------------------------------
+    def snapshot(self) -> dict:
+        state_rows = [
+            self._assemble_rows(lambda s, k=k: s.state[k])
+            for k in range(self.spec.num_state_slots)
+        ]
+        return {
+            "params": np.asarray(self.params),
+            "state": tuple(np.asarray(r.reshape(-1)) for r in state_rows),
+            "step": self.step,
+        }
+
+    def restore(self, snap: dict) -> None:
+        shape = (self.space.num_chunks, self.space.chunk_elems)
+        rows = jnp.asarray(snap["params"], jnp.float32).reshape(shape)
+        state_rows = [
+            jnp.asarray(s, jnp.float32).reshape(shape) for s in snap["state"]
+        ]
+        for shard in self.shards:
+            ids = jnp.asarray(shard.chunk_ids)
+            shard.params = rows[ids]
+            shard.state = tuple(r[ids] for r in state_rows)
+        self.step = int(snap["step"])
+        self._inbox.clear()
+        self._staged.clear()
+        self._flat_cache = None
+
+    # -- introspection -----------------------------------------------------
+    def describe(self) -> str:
+        lines = [
+            f"PBoxFabric: {self.num_shards} shards x "
+            f"{self.space.num_chunks} chunks ({self.space.chunk_elems} elems), "
+            f"mode={self.mode}, workers={self.num_workers}"
+        ]
+        for shard in self.shards:
+            lines.append(
+                f"  shard {shard.shard_id}: {shard.num_chunks} chunks, "
+                f"pushed={shard.stats.bytes_pushed >> 10} KiB, "
+                f"pulled={shard.stats.bytes_pulled >> 10} KiB"
+            )
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# worker harness
+# ---------------------------------------------------------------------------
+class WorkerHarness:
+    """Drives K logical workers against a PBoxFabric.
+
+    ``grad_fn(params_tree, batch) -> grad_tree`` is the worker compute;
+    ``speed[w]`` scales how many scheduler ticks worker w needs per step
+    (straggler modelling); ``chunk_groups > 1`` streams each push in that
+    many chunk groups through the fabric's staging path (chunk-by-chunk
+    push, as on a real NIC).
+    """
+
+    def __init__(
+        self,
+        server: PBoxFabric,
+        grad_fn: Callable,
+        batches_fn: Callable[[int, int], Any],  # (worker, step) -> batch
+        speed: list[int] | None = None,
+        chunk_groups: int = 1,
+    ):
+        self.server = server
+        self.grad_fn = grad_fn
+        self.batches_fn = batches_fn
+        k = server.num_workers
+        self.speed = list(speed) if speed else [1] * k
+        self.chunk_groups = chunk_groups
+        self._phase = [0] * k
+        self.steps_done = [0] * k
+
+    def _push(self, w: int, gflat: jax.Array) -> None:
+        srv = self.server
+        if self.chunk_groups <= 1:
+            srv.push(w, gflat)
+            return
+        rows = gflat.reshape(srv.space.num_chunks, srv.space.chunk_elems)
+        for ids in np.array_split(np.arange(srv.space.num_chunks),
+                                  self.chunk_groups):
+            if len(ids):
+                srv.push_chunks(w, ids, rows[jnp.asarray(ids)])
+
+    def tick(self) -> None:
+        """One scheduler tick: every non-blocked worker advances."""
+        srv = self.server
+        for w in range(srv.num_workers):
+            if not srv.can_proceed(w):
+                continue
+            self._phase[w] += 1
+            if self._phase[w] < self.speed[w]:
+                continue
+            self._phase[w] = 0
+            flat = srv.pull(w)
+            params = srv.space.unflatten(flat)
+            batch = self.batches_fn(w, self.steps_done[w])
+            grads = self.grad_fn(params, batch)
+            self._push(w, srv.space.flatten(grads))
+            self.steps_done[w] += 1
+
+    def run(self, worker_steps: int) -> None:
+        guard = 0
+        while min(self.steps_done) < worker_steps:
+            self.tick()
+            guard += 1
+            if guard > worker_steps * max(self.speed) * 10 + 100:
+                raise RuntimeError("scheduler livelock — staleness deadlock?")

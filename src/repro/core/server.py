@@ -1,52 +1,33 @@
-"""In-process PHub: a K-worker parameter-server simulator.
+"""Back-compat shim: the monolithic ``PHubServer`` as a 1-shard fabric.
 
-JAX SPMD has no async RDMA, so the paper's worker/server control plane is
-reproduced here as an explicit simulator: K logical workers push gradient
-slabs into the server's HBM; the server runs the *actual K-way fused
-aggregate+optimize Pallas kernel* (this is where the kernel's K>1 path is
-exercised, mirroring PHub's per-chunk aggregation buffers); workers pull
-fresh parameters.  Supports the synchronization modes the PS literature
-cares about:
-
-  sync             barrier every step (the paper's setting, BSP)
-  async            no barrier: each push is applied immediately (Hogwild-PS)
-  stale(s)         bounded staleness: a worker may run at most ``s`` steps
-                   ahead of the slowest worker (SSP); s=0 == sync
-
-The simulator is used by tests (semantics: sync == reference DP-SGD;
-staleness bound never violated) and by benchmarks (Table 1 scaling curves,
-Fig. 4 ZeroCompute throughput).  Straggler mitigation hooks: a worker can be
-declared slow and the server will (a) proceed with K-1 pushes after
-``min_push_fraction`` is met (backup-worker semantics), or (b) rebalance
-chunk ownership away from a slow *server shard* (PBox micro-shard
-re-assignment).
+The single-engine in-process PS simulator that used to live here has been
+generalized into the chunk-sharded ``PBoxFabric`` (core/fabric.py): N
+aggregation engines over the chunked flat space, event-clock pipelining,
+per-chunk accounting, and shard rebalancing.  ``PHubServer`` is kept as a
+thin alias so existing callers and checkpoints keep working — it is exactly
+``PBoxFabric(num_shards=1)``, and the fabric's sync mode is bit-identical to
+the old whole-space path (tests/test_fabric.py).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable
-
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.core.chunking import ParamSpace
-from repro.kernels.fused_agg_opt.ops import fused_aggregate_update
-from repro.optim.optimizers import OptimizerSpec, init_opt_state
+from repro.core.fabric import (  # noqa: F401  (re-exported)
+    LinkModel,
+    PBoxFabric,
+    PBoxShard,
+    ServerStats,
+    ShardStats,
+    WorkerHarness,
+)
+from repro.optim.optimizers import OptimizerSpec
 
 
-@dataclasses.dataclass
-class ServerStats:
-    steps: int = 0
-    pushes: int = 0
-    pulls: int = 0
-    bytes_pushed: int = 0
-    bytes_pulled: int = 0
-    partial_aggregations: int = 0
+class PHubServer(PBoxFabric):
+    """Central PS over a chunked flat space, K-way fused aggregation.
 
-
-class PHubServer:
-    """Central PS over a chunked flat space, K-way fused aggregation."""
+    Deprecated spelling of ``PBoxFabric(num_shards=1)``."""
 
     def __init__(
         self,
@@ -60,126 +41,14 @@ class PHubServer:
         min_push_fraction: float = 1.0,
         use_pallas: bool = True,
     ):
-        self.space = space
-        self.spec = spec
-        self.mode = mode
-        self.staleness = staleness if mode == "stale" else (0 if mode == "sync" else 1 << 30)
-        self.num_workers = num_workers
-        self.min_pushes = max(1, int(np.ceil(min_push_fraction * num_workers)))
-        self.use_pallas = use_pallas
-        self.params = init_flat.astype(jnp.float32)
-        self.state = init_opt_state(spec, self.params)
-        self.step = 0
-        self.worker_clock = np.zeros(num_workers, dtype=np.int64)
-        self._inbox: dict[int, jax.Array] = {}
-        self.stats = ServerStats()
-
-    # -- worker API ----------------------------------------------------
-    def pull(self, worker: int) -> jax.Array:
-        self.stats.pulls += 1
-        self.stats.bytes_pulled += self.params.size * 4
-        return self.params
-
-    def can_proceed(self, worker: int) -> bool:
-        """SSP admission: worker may start its next step iff it is within
-        ``staleness`` steps of the slowest worker."""
-        return self.worker_clock[worker] - self.worker_clock.min() <= self.staleness
-
-    def push(self, worker: int, gflat: jax.Array) -> None:
-        if gflat.shape != (self.space.flat_elems,):
-            raise ValueError("bad gradient shape")
-        self.stats.pushes += 1
-        self.stats.bytes_pushed += gflat.size * 4
-        self.worker_clock[worker] += 1
-        if self.mode == "async":
-            self._apply(gflat[None], average=False)
-            return
-        self._inbox[worker] = gflat
-        if len(self._inbox) >= self.min_pushes and self._barrier_met():
-            grads = jnp.stack([self._inbox[w] for w in sorted(self._inbox)])
-            if len(self._inbox) < self.num_workers:
-                self.stats.partial_aggregations += 1
-            self._inbox.clear()
-            self._apply(grads, average=True)
-
-    def _barrier_met(self) -> bool:
-        if self.min_pushes < self.num_workers:
-            return True  # backup-worker mode: quorum reached
-        return len(self._inbox) == self.num_workers
-
-    # -- server core ---------------------------------------------------
-    def _apply(self, grads: jax.Array, average: bool) -> None:
-        self.step += 1
-        self.params, self.state = fused_aggregate_update(
-            grads,
-            self.params,
-            self.state,
-            self.spec,
-            jnp.int32(self.step),
-            average=average,
-            use_pallas=self.use_pallas,
-            interpret=True,
+        super().__init__(
+            space,
+            spec,
+            init_flat,
+            num_shards=1,
+            mode=mode,
+            staleness=staleness,
+            num_workers=num_workers,
+            min_push_fraction=min_push_fraction,
+            use_pallas=use_pallas,
         )
-        self.stats.steps += 1
-
-    # -- elastic / rebalance hooks --------------------------------------
-    def snapshot(self) -> dict:
-        return {
-            "params": np.asarray(self.params),
-            "state": tuple(np.asarray(s) for s in self.state),
-            "step": self.step,
-        }
-
-    def restore(self, snap: dict) -> None:
-        self.params = jnp.asarray(snap["params"])
-        self.state = tuple(jnp.asarray(s) for s in snap["state"])
-        self.step = int(snap["step"])
-
-
-class WorkerHarness:
-    """Drives K logical workers against a PHubServer.
-
-    ``grad_fn(params_tree, batch) -> grad_tree`` is the worker compute;
-    ``speed[w]`` scales how many scheduler ticks worker w needs per step
-    (straggler modelling).
-    """
-
-    def __init__(
-        self,
-        server: PHubServer,
-        grad_fn: Callable,
-        batches_fn: Callable[[int, int], Any],  # (worker, step) -> batch
-        speed: list[int] | None = None,
-    ):
-        self.server = server
-        self.grad_fn = grad_fn
-        self.batches_fn = batches_fn
-        k = server.num_workers
-        self.speed = list(speed) if speed else [1] * k
-        self._phase = [0] * k
-        self.steps_done = [0] * k
-
-    def tick(self) -> None:
-        """One scheduler tick: every non-blocked worker advances."""
-        srv = self.server
-        for w in range(srv.num_workers):
-            if not srv.can_proceed(w):
-                continue
-            self._phase[w] += 1
-            if self._phase[w] < self.speed[w]:
-                continue
-            self._phase[w] = 0
-            flat = srv.pull(w)
-            params = srv.space.unflatten(flat)
-            batch = self.batches_fn(w, self.steps_done[w])
-            grads = self.grad_fn(params, batch)
-            srv.push(w, srv.space.flatten(grads))
-            self.steps_done[w] += 1
-
-    def run(self, worker_steps: int) -> None:
-        guard = 0
-        while min(self.steps_done) < worker_steps:
-            self.tick()
-            guard += 1
-            if guard > worker_steps * max(self.speed) * 10 + 100:
-                raise RuntimeError("scheduler livelock — staleness deadlock?")

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.chunking import ParamSpace
 from repro.core.exchange import ExchangeConfig, PSExchange
 from repro.optim.optimizers import OptimizerSpec
@@ -47,7 +48,7 @@ def make_zero_compute_step(
         new_p, new_state = exchange.device_update(gflat, pflat, state)
         return new_p, new_state
 
-    shmap = jax.shard_map(
+    shmap = shard_map(
         body,
         mesh=mesh,
         in_specs=(P(), P(), state_specs),

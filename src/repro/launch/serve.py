@@ -35,6 +35,7 @@ def main() -> None:
     from repro.models.common import Dist
     from repro.models import transformer as T
     from jax.sharding import PartitionSpec as P
+    from repro.compat import shard_map
 
     mesh = make_mesh((d, m), ("data", "model"))
     arch = get_arch(args.arch)
@@ -55,11 +56,11 @@ def main() -> None:
     cache_spec = {"k": P(None, wa, "model" if m > 1 else None),
                   "v": P(None, wa, "model" if m > 1 else None)}
 
-    pf = jax.jit(jax.shard_map(
+    pf = jax.jit(shard_map(
         lambda p, t: T.prefill(p, t, cfg, dist, tp, max_seq),
         mesh=mesh, in_specs=(specs, bspec),
         out_specs=(bspec, cache_spec), check_vma=False))
-    dc = jax.jit(jax.shard_map(
+    dc = jax.jit(shard_map(
         lambda p, t, c, pos: T.decode_step(p, t, c, pos, cfg, dist, tp),
         mesh=mesh, in_specs=(specs, bspec, cache_spec, P()),
         out_specs=(bspec, cache_spec), check_vma=False))

@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+
 from repro.configs.registry import ArchDef, ShapeCell, get_arch
 from repro.core.exchange import ExchangeConfig, PSExchange
 from repro.launch import mesh as meshlib
@@ -154,7 +156,7 @@ def build_lm_prefill(arch: ArchDef, cell: ShapeCell, mesh,
         return T.prefill(params, tokens, cfg, dist, tp, s)
 
     cache_spec = {"k": P(None, wa, "model"), "v": P(None, wa, "model")}
-    shmap = jax.shard_map(
+    shmap = shard_map(
         fn, mesh=mesh, in_specs=(specs, P(wa)),
         out_specs=(P(wa), cache_spec), check_vma=False)
     n_act = cfg.active_param_count()
@@ -188,7 +190,7 @@ def build_lm_decode(arch: ArchDef, cell: ShapeCell, mesh,
 
     cache_spec = {"k": P(None, None if batch_rep else wa, "model"),
                   "v": P(None, None if batch_rep else wa, "model")}
-    shmap = jax.shard_map(
+    shmap = shard_map(
         fn, mesh=mesh, in_specs=(specs, bspec, cache_spec, P()),
         out_specs=(bspec, cache_spec), check_vma=False)
     cache_shape = (cfg.n_layers, gb, s, cfg.n_kv_heads, cfg.head_dim)
@@ -234,7 +236,7 @@ def build_lm_decode_long(arch: ArchDef, cell: ShapeCell, mesh,
         cache_specs.append(sp)
         cache_args.append({"k": _sds(mesh, shape, cfg.dtype, sp["k"]),
                            "v": _sds(mesh, shape, cfg.dtype, sp["v"])})
-    shmap = jax.shard_map(
+    shmap = shard_map(
         fn, mesh=mesh, in_specs=(specs, P(None), cache_specs, P()),
         out_specs=(P(None), cache_specs), check_vma=False)
     n_act = cfg.active_param_count()
@@ -340,7 +342,7 @@ def build_recsys_cell(arch: ArchDef, cell: ShapeCell, mesh,
         def fn(params, batch):
             return score_f(params, batch, cfg, dist)
 
-        shmap = jax.shard_map(fn, mesh=mesh, in_specs=(specs, batch_spec),
+        shmap = shard_map(fn, mesh=mesh, in_specs=(specs, batch_spec),
                               out_specs=out_spec, check_vma=False)
         pargs = _abstract_tree(mesh, gshape, specs)
         return CellPlan(arch.arch_id, cell.name, "serve", jax.jit(shmap),
@@ -359,7 +361,7 @@ def build_recsys_cell(arch: ArchDef, cell: ShapeCell, mesh,
             return RS.bulk_retrieval(params, batch, tower_f, "t0",
                                      cfg.embed_dim, cfg, dist)
 
-        shmap = jax.shard_map(fn, mesh=mesh, in_specs=(specs, batch_spec),
+        shmap = shard_map(fn, mesh=mesh, in_specs=(specs, batch_spec),
                               out_specs=P(all_ax), check_vma=False)
         pargs = _abstract_tree(mesh, gshape, specs)
         return CellPlan(arch.arch_id, cell.name, "retrieval", jax.jit(shmap),

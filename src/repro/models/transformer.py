@@ -176,11 +176,23 @@ def init_params(cfg: TransformerConfig, key, tp: int = 1) -> dict:
             layers["ws1"] = dense_init(next(ks), (L, d, m.shared_d_ff), d, pdt)
             layers["ws3"] = dense_init(next(ks), (L, d, m.shared_d_ff), d, pdt)
             layers["ws2"] = dense_init(next(ks), (L, m.shared_d_ff, d), m.shared_d_ff, pdt)
+    # draw vocab tables at the tp-independent canonical size and zero-pad
+    # the extra tp-layout rows: init is layout-invariant (tp=1 and tp=N
+    # models are the *same* random model), and padded rows are dead (tokens
+    # never index them; the loss masks their logits)
+    vp1 = cfg.vocab_padded(1)
+
+    def vocab_init(k):
+        w = embed_init(k, (vp1, d), pdt)
+        if vp > vp1:
+            w = jnp.concatenate([w, jnp.zeros((vp - vp1, d), pdt)])
+        return w
+
     return {
-        "embed": embed_init(next(ks), (vp, d), pdt),
+        "embed": vocab_init(next(ks)),
         "layers": layers,
         "ln_f": jnp.zeros((d,), pdt),
-        "head": embed_init(next(ks), (vp, d), pdt),
+        "head": vocab_init(next(ks)),
     }
 
 

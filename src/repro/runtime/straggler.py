@@ -2,20 +2,21 @@
 
 JAX SPMD steps are bulk-synchronous, so within a step the mitigation levers
 are the PS-level ones the paper's design enables; they are implemented and
-exercised against the in-process PHub simulator (core/server.py):
+exercised against the in-process PBox fabric (core/fabric.py):
 
-  * backup-worker quorum: the server applies the update once
+  * backup-worker quorum: the fabric applies the update once
     ``min_push_fraction`` of workers have pushed (Chen et al.'s backup
     workers); stragglers' late pushes are dropped for that step.
   * bounded staleness (SSP): workers may run ahead up to ``staleness`` steps
     — hides transient slowness without losing gradients.
   * chunk rebalancing: if a PS *shard* (not worker) is persistently slow
     (flaky host, thermal throttle), its chunks are re-assigned to healthy
-    shards — with contiguous-slab ownership this is an ownership-boundary
-    shift, not a data reshuffle plan.
+    shards — parameters and optimizer state migrate with their chunks
+    (``PBoxFabric.rebalance``), so the move is numerics-neutral.
 
 ``StragglerMonitor`` detects persistent stragglers from per-step push
-latencies (median-based, robust to noise).
+latencies (median-based, robust to noise); ``ShardRebalancer`` closes the
+loop from shard latency measurements to fabric chunk re-assignment.
 """
 from __future__ import annotations
 
@@ -59,6 +60,44 @@ class StragglerMonitor:
         if fleet <= 0:
             return []
         return [i for i, m in enumerate(meds) if m > self.threshold * fleet]
+
+
+class ShardRebalancer:
+    """The fabric-side straggler loop: record per-shard aggregation
+    latencies, and when a shard is persistently slow, move its chunks to
+    healthy shards via ``PBoxFabric.rebalance``.
+
+    ``cooldown`` fabric steps must elapse between rebalances so a single
+    latency spike can't thrash chunk ownership."""
+
+    def __init__(self, fabric, *, threshold: float = 2.0, window: int = 20,
+                 cooldown: int = 10):
+        self.fabric = fabric
+        self.monitor = StragglerMonitor(fabric.num_shards, threshold, window)
+        self.cooldown = cooldown
+        self._last_rebalance_step = -cooldown
+
+    def record(self, shard: int, seconds: float) -> None:
+        self.monitor.record(shard, seconds)
+
+    def maybe_rebalance(self) -> list[int]:
+        """Returns the shards drained this call ([] if none).
+
+        The whole slow set — including shards already drained to zero
+        chunks — is passed to ``rebalance`` so a still-slow empty shard is
+        never the minimum-count *target* for another straggler's chunks.
+        (A shard that genuinely recovers stops being flagged and rejoins
+        the healthy pool.)"""
+        if self.fabric.step - self._last_rebalance_step < self.cooldown:
+            return []
+        slow = self.monitor.stragglers()
+        movable = [s for s in slow
+                   if self.fabric.shards[s].num_chunks > 0]
+        if not movable:
+            return []
+        self.fabric.rebalance(slow)
+        self._last_rebalance_step = self.fabric.step
+        return movable
 
 
 def rebalance_chunks(chunk_owner: np.ndarray, slow_shards: list[int],

@@ -25,8 +25,10 @@ from jax import lax
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.chunking import ParamSpace
 from repro.core.exchange import PSExchange
+from repro.core.fabric import ServerStats
 from repro.models.common import Dist
 
 
@@ -72,6 +74,44 @@ def apply_grad_sync(grads: Any, tags: Any, dist: Dist) -> Any:
     return jax.tree.map(fix, grads, tags)
 
 
+def attach_telemetry(
+    step_fn: Callable,
+    exchange: PSExchange,
+    space: ParamSpace,
+    mesh,
+    stats: ServerStats,
+) -> Callable:
+    """Wrap a jitted PS train step so every invocation records the modeled
+    wire traffic into a fabric-style ``ServerStats``.
+
+    The SPMD path moves bytes inside collectives, so unlike the in-process
+    ``PBoxFabric`` there is nothing to count at the host; this uses the
+    exchange's analytic wire model (``PSExchange.modeled_bytes``, the same
+    model the Fig. 4/5 benchmarks plot) scaled by the worker count, giving
+    both PS implementations one accounting surface."""
+    n_pod = mesh.shape[exchange.pod_axis] if exchange.pod_axis else 1
+    n_workers = 1
+    for a in exchange.worker_axes:
+        n_workers *= mesh.shape[a]
+    n_data = n_workers // n_pod
+    mb = exchange.modeled_bytes(space.flat_elems, n_pod, n_data)
+    push = int(mb["push"] + (mb["xpod"] or 0.0))
+    pull = int(mb["pull"])
+
+    def wrapped(*args, **kwargs):
+        out = step_fn(*args, **kwargs)
+        stats.steps += 1
+        stats.pushes += n_workers
+        stats.pulls += n_workers
+        stats.bytes_pushed += push * n_workers
+        stats.bytes_pulled += pull * n_workers
+        stats.chunk_pushes += space.num_chunks * n_workers
+        stats.chunk_pulls += space.num_chunks * n_workers
+        return out
+
+    return wrapped
+
+
 def _state_specs(exchange: PSExchange, n_state: int, has_ef: bool):
     group = "model"
     owner = P(group, exchange.owner_axes) if exchange.owner_axes else P(group, None)
@@ -98,11 +138,15 @@ def make_ps_train_step(
     lr_schedule: Callable | None = None,
     donate: bool = True,
     microbatches: int = 1,
+    telemetry: ServerStats | None = None,
 ):
     """Returns (jitted step, ParamSpace, state_specs, n_groups).
 
     step(pflat, slots, ef, step_count, batch) ->
         (new_pflat, new_slots, new_ef, new_step, metrics)
+
+    If ``telemetry`` is given, the returned step is wrapped with
+    ``attach_telemetry`` so each call records modeled wire bytes there.
     """
     tp = dist.tp if dist.model_axis is not None else 1
     n_groups = tp if dist.model_axis is not None else 1
@@ -188,12 +232,15 @@ def make_ps_train_step(
         sspecs["step"],
         P(),
     )
-    shmap = jax.shard_map(
+    shmap = shard_map(
         device_step, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
         check_vma=False,
     )
     jit_kwargs = {"donate_argnums": (0, 1, 2)} if donate else {}
-    return jax.jit(shmap, **jit_kwargs), space, sspecs, n_groups
+    step = jax.jit(shmap, **jit_kwargs)
+    if telemetry is not None:
+        step = attach_telemetry(step, exchange, space, mesh, telemetry)
+    return step, space, sspecs, n_groups
 
 
 def init_train_state(

@@ -1,0 +1,71 @@
+"""Deterministic stand-in for ``hypothesis`` when it isn't installed.
+
+Implements just the surface the test-suite uses (``given``, ``settings``,
+``st.integers/tuples/lists/sampled_from``) by drawing ``max_examples``
+pseudo-random examples from a fixed-seed generator, so `pytest -x -q` runs
+the property tests without the optional dependency.  With hypothesis
+installed, the real library is used instead (see the import guard in the
+test modules) and adds shrinking + example databases on top.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+class st:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def tuples(*strategies: _Strategy) -> _Strategy:
+        return _Strategy(lambda rng: tuple(s.draw(rng) for s in strategies))
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elements.draw(rng) for _ in range(n)]
+
+        return _Strategy(draw)
+
+    @staticmethod
+    def sampled_from(elements) -> _Strategy:
+        elements = list(elements)
+        return _Strategy(lambda rng: elements[int(rng.integers(0, len(elements)))])
+
+
+def settings(*, max_examples: int = 10, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategies):
+    def deco(fn):
+        def wrapper():
+            # @settings is applied outside @given, so read the example count
+            # off the wrapper at call time
+            n = getattr(wrapper, "_max_examples", 10)
+            rng = np.random.default_rng(20180527)  # arXiv:1805.07891 day
+            for _ in range(n):
+                fn(**{k: s.draw(rng) for k, s in strategies.items()})
+
+        # only name/doc: functools.wraps would copy the signature and make
+        # pytest hunt for fixtures named after the strategy kwargs
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return deco

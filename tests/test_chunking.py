@@ -1,10 +1,15 @@
-"""Property tests for the PHub chunk space (hypothesis)."""
-import hypothesis.strategies as st
+"""Property tests for the PHub chunk space (hypothesis, with a deterministic
+fallback when the optional dependency is missing)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:  # optional dep: fixed-seed stand-in, no shrinking
+    from _hypo_fallback import given, settings, st
 
 from repro.core.chunking import (
     DEFAULT_CHUNK_ELEMS,

@@ -1,9 +1,14 @@
-"""Data pipeline: generators deterministic, sampler invariants (hypothesis),
+"""Data pipeline: generators deterministic, sampler invariants (hypothesis,
+with a deterministic fallback when the optional dependency is missing),
 prefetcher semantics, spherical-harmonics properties."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-import hypothesis.strategies as st
+
+try:
+    from hypothesis import given, settings
+    import hypothesis.strategies as st
+except ImportError:  # optional dep: fixed-seed stand-in, no shrinking
+    from _hypo_fallback import given, settings, st
 
 from repro.data.graphs import (
     CSRGraph,

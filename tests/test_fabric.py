@@ -1,0 +1,275 @@
+"""Chunk-sharded PBox fabric semantics.
+
+The load-bearing property: sharding the chunk space over N aggregation
+engines is *bit-identical* to the single-engine path (the fused update is
+elementwise and sums workers in a fixed order), while push/pull bytes split
+~1/N per shard.  Plus: partial quorum, SSP staleness, chunk-by-chunk staged
+pushes, event-clock pipelining, and the straggler rebalance hook."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.chunking import ParamSpace, TILE_ELEMS
+from repro.core.fabric import LinkModel, PBoxFabric, WorkerHarness
+from repro.optim.optimizers import adamw, make_optimizer, momentum, sgd
+from repro.runtime.straggler import ShardRebalancer
+
+K = 4
+
+
+def quad_setup():
+    """Workers minimize ||w - target_w||^2 on per-worker targets."""
+    params = {"w": jnp.zeros((9000,)), "b": jnp.zeros((77,))}
+    targets = [
+        {"w": jnp.full((9000,), float(i + 1)), "b": jnp.arange(77.0) * (i + 1)}
+        for i in range(K)
+    ]
+
+    def grad_fn(p, batch):
+        t = targets[batch]
+        return jax.tree.map(lambda a, b: 2 * (a - b), p, t)
+
+    return params, targets, grad_fn
+
+
+def build_space(params):
+    # small chunks so 9000+77 elems span several chunks (10 of them)
+    return ParamSpace.build(params, chunk_elems=TILE_ELEMS)
+
+
+def run_fabric(space, params, grad_fn, *, num_shards, steps=5, spec=None,
+               **kw):
+    fab = PBoxFabric(space, spec or momentum(0.05, 0.9),
+                     space.flatten(params), num_shards=num_shards,
+                     num_workers=K, **kw)
+    h = WorkerHarness(fab, grad_fn, lambda w, s: w)
+    h.run(steps)
+    return fab
+
+
+@pytest.mark.parametrize("num_shards", [2, 8])
+@pytest.mark.parametrize("spec_fn", [lambda: momentum(0.05, 0.9),
+                                     lambda: adamw(3e-3)])
+def test_sync_bit_identical_to_single_server(num_shards, spec_fn):
+    params, _, grad_fn = quad_setup()
+    space = build_space(params)
+    ref = run_fabric(space, params, grad_fn, num_shards=1, spec=spec_fn())
+    fab = run_fabric(space, params, grad_fn, num_shards=num_shards,
+                     spec=spec_fn())
+    np.testing.assert_array_equal(np.asarray(ref.params),
+                                  np.asarray(fab.params))
+    # and both bit-equal the reference tree-wise DP optimizer (tolerance-free
+    # up to f32 noise: the server path flattens/averages identically)
+    init_fn, upd_fn = make_optimizer(spec_fn())
+    ref_p, st = params, init_fn(params)
+    for _ in range(5):
+        gs = [grad_fn(ref_p, w) for w in range(K)]
+        g = jax.tree.map(lambda *x: sum(x) / K, *gs)
+        ref_p, st = upd_fn(ref_p, g, st)
+    out = space.unflatten(fab.params)
+    for k in params:
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(ref_p[k]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_per_shard_byte_accounting_splits_evenly():
+    params, _, grad_fn = quad_setup()
+    space = build_space(params)
+    n = 3
+    fab = run_fabric(space, params, grad_fn, num_shards=n, steps=4)
+    assert space.num_chunks % n == 0  # 9 chunks over 3 shards
+    total_push = sum(s.stats.bytes_pushed for s in fab.shards)
+    total_pull = sum(s.stats.bytes_pulled for s in fab.shards)
+    assert total_push == fab.stats.bytes_pushed
+    assert total_pull == fab.stats.bytes_pulled
+    for shard in fab.shards:
+        assert shard.stats.bytes_pushed == total_push // n
+        assert shard.stats.bytes_pulled == total_pull // n
+    assert fab.stats.chunk_pushes == fab.stats.pushes * space.num_chunks
+
+
+def test_chunk_staged_push_equals_whole_push():
+    params, _, grad_fn = quad_setup()
+    space = build_space(params)
+    ref = run_fabric(space, params, grad_fn, num_shards=2)
+    fab = PBoxFabric(space, momentum(0.05, 0.9), space.flatten(params),
+                     num_shards=2, num_workers=K)
+    h = WorkerHarness(fab, grad_fn, lambda w, s: w, chunk_groups=4)
+    h.run(5)
+    np.testing.assert_array_equal(np.asarray(ref.params),
+                                  np.asarray(fab.params))
+
+
+def test_partial_quorum_on_fabric():
+    params, _, grad_fn = quad_setup()
+    space = build_space(params)
+    fab = PBoxFabric(space, sgd(0.01), space.flatten(params), num_shards=4,
+                     num_workers=K, min_push_fraction=0.75)
+    # only 3 of 4 workers push: quorum met, update applied on every shard
+    for w in range(3):
+        fab.push(w, space.flatten(grad_fn(params, w)))
+    assert fab.stats.steps == 1
+    assert fab.stats.partial_aggregations == 1
+    assert all(s.stats.agg_events == 1 for s in fab.shards)
+    # the straggler's late push lands in the *next* round's inbox
+    fab.push(3, space.flatten(grad_fn(params, 3)))
+    assert fab.stats.steps == 1
+    assert len(fab._inbox) == 1
+
+
+def test_ssp_staleness_bound_on_fabric():
+    params, _, grad_fn = quad_setup()
+    space = build_space(params)
+    fab = PBoxFabric(space, sgd(0.01), space.flatten(params), num_shards=2,
+                     mode="stale", staleness=2, num_workers=K)
+    h = WorkerHarness(fab, grad_fn, lambda w, s: w, speed=[1, 1, 1, 4])
+    max_gap = 0
+    for _ in range(60):
+        h.tick()
+        gap = fab.worker_clock.max() - fab.worker_clock.min()
+        max_gap = max(max_gap, gap)
+    assert max_gap <= 2 + 1, f"staleness bound violated: {max_gap}"
+
+
+def test_async_applies_per_push():
+    params, _, grad_fn = quad_setup()
+    space = build_space(params)
+    fab = PBoxFabric(space, sgd(0.02), space.flatten(params), num_shards=4,
+                     mode="async", num_workers=K)
+    h = WorkerHarness(fab, grad_fn, lambda w, s: w, speed=[1, 1, 1, 3])
+    h.run(10)
+    out = space.unflatten(fab.params)
+    assert 0.5 < float(out["w"].mean()) < 4.5
+    assert fab.stats.steps >= 10  # one server step per completed push
+
+
+def test_rebalance_is_numerics_neutral():
+    """Moving chunks (with their optimizer state) between shards mid-training
+    must not change the trained parameters at all."""
+    params, _, grad_fn = quad_setup()
+    space = build_space(params)
+    ref = run_fabric(space, params, grad_fn, num_shards=1, spec=adamw(3e-3))
+    fab = PBoxFabric(space, adamw(3e-3), space.flatten(params), num_shards=4,
+                     num_workers=K)
+    h = WorkerHarness(fab, grad_fn, lambda w, s: w)
+    h.run(3)
+    moved = fab.rebalance([0])
+    assert moved > 0
+    assert fab.shards[0].num_chunks == 0
+    assert not np.isin(fab.chunk_owner, [0]).any()
+    # healthy shards stay balanced
+    counts = np.bincount(fab.chunk_owner, minlength=4)[1:]
+    assert counts.max() - counts.min() <= 1
+    h2 = WorkerHarness(fab, grad_fn, lambda w, s: w)
+    h2.run(2)
+    np.testing.assert_array_equal(np.asarray(ref.params),
+                                  np.asarray(fab.params))
+
+
+def test_shard_rebalancer_hook():
+    params, _, grad_fn = quad_setup()
+    space = build_space(params)
+    fab = run_fabric(space, params, grad_fn, num_shards=4, steps=2)
+    reb = ShardRebalancer(fab, threshold=2.0, cooldown=0)
+    for _ in range(10):
+        for s, lat in enumerate([0.1, 0.1, 0.1, 0.9]):
+            reb.record(s, lat)
+    assert reb.maybe_rebalance() == [3]
+    assert fab.shards[3].num_chunks == 0
+    assert fab.stats.rebalances == 1
+    # drained shard still flagged but empty; nothing left to move
+    assert reb.maybe_rebalance() == []
+
+
+def test_rebalancer_never_targets_drained_slow_shard():
+    """A shard drained earlier but still slow must not become the
+    minimum-count destination when another shard goes slow later."""
+    params, _, grad_fn = quad_setup()
+    space = build_space(params)
+    fab = run_fabric(space, params, grad_fn, num_shards=4, steps=2)
+    # threshold 1.5: with 2 of 4 shards slow the fleet median sits between
+    # the two populations, and 0.9 must still clear median * threshold
+    reb = ShardRebalancer(fab, threshold=1.5, cooldown=0)
+    for _ in range(10):
+        for s, lat in enumerate([0.1, 0.1, 0.1, 0.9]):
+            reb.record(s, lat)
+    assert reb.maybe_rebalance() == [3]
+    # now shard 2 turns slow too (shard 3 stays slow, chunkless)
+    for _ in range(20):
+        for s, lat in enumerate([0.1, 0.1, 0.9, 0.9]):
+            reb.record(s, lat)
+    assert reb.maybe_rebalance() == [2]
+    assert fab.shards[2].num_chunks == 0
+    assert fab.shards[3].num_chunks == 0  # NOT refilled with 2's chunks
+    counts = np.bincount(fab.chunk_owner, minlength=4)[:2]
+    assert counts.sum() == space.num_chunks
+    assert counts.max() - counts.min() <= 1
+
+
+def test_event_clock_pipelines_wire_and_aggregation():
+    params, _, grad_fn = quad_setup()
+    space = build_space(params)
+    # aggregation-bound link: sharding + pipelining should beat the
+    # monolithic store-and-forward baseline clearly
+    link = LinkModel(wire_us_per_chunk=0.2, agg_us_per_chunk=1.0)
+    speedups = {}
+    for n in (1, 2, 8):
+        fab = PBoxFabric(space, momentum(0.05, 0.9), space.flatten(params),
+                         num_shards=n, num_workers=K, link=link,
+                         placement="round_robin")
+        h = WorkerHarness(fab, grad_fn, lambda w, s: w)
+        h.run(2)
+        assert fab.stats.sim_pipelined_us < fab.stats.sim_serialized_us
+        speedups[n] = fab.stats.pipeline_speedup
+    # more engines -> shorter pipelined makespan
+    assert speedups[2] > speedups[1]
+    assert speedups[8] > speedups[2]
+
+
+def test_trainer_telemetry_matches_wire_model():
+    """attach_telemetry gives the SPMD path the fabric's accounting surface:
+    per-call stats must equal the exchange's modeled bytes x workers."""
+    import types
+
+    from repro.core.exchange import ExchangeConfig, PSExchange
+    from repro.core.fabric import ServerStats
+    from repro.runtime.trainer import attach_telemetry
+
+    params, _, _ = quad_setup()
+    space = build_space(params)
+    ex = PSExchange(momentum(0.1, 0.9), ExchangeConfig("pbox"), ("data",))
+    mesh = types.SimpleNamespace(shape={"data": 4})  # only .shape is read
+    stats = ServerStats()
+    calls = []
+    step = attach_telemetry(lambda *a: calls.append(a) or "out", ex, space,
+                            mesh, stats)
+    for _ in range(3):
+        assert step("x") == "out"
+    mb = ex.modeled_bytes(space.flat_elems, 1, 4)
+    assert len(calls) == 3
+    assert stats.steps == 3
+    assert stats.pushes == stats.pulls == 3 * 4
+    assert stats.bytes_pushed == 3 * 4 * int(mb["push"])
+    assert stats.bytes_pulled == 3 * 4 * int(mb["pull"])
+    assert stats.chunk_pushes == 3 * 4 * space.num_chunks
+
+
+def test_snapshot_restore_across_shard_counts():
+    """A 1-shard snapshot restores into an 8-shard fabric (chunk-aligned
+    state is layout-independent) and training continues identically."""
+    params, _, grad_fn = quad_setup()
+    space = build_space(params)
+    ref = run_fabric(space, params, grad_fn, num_shards=1, steps=3,
+                     spec=adamw(3e-3))
+    snap = ref.snapshot()
+    fab = PBoxFabric(space, adamw(3e-3), space.flatten(params), num_shards=8,
+                     num_workers=K)
+    fab.restore(snap)
+    assert fab.step == ref.step
+    h1 = WorkerHarness(ref, grad_fn, lambda w, s: w)
+    h1.run(2)
+    h8 = WorkerHarness(fab, grad_fn, lambda w, s: w)
+    h8.run(2)
+    np.testing.assert_array_equal(np.asarray(ref.params),
+                                  np.asarray(fab.params))
