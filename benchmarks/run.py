@@ -23,6 +23,7 @@ def main() -> None:
         fig5_hierarchical,
         kernel_micro,
         table1_frameworks,
+        topo_rack_codec,
     )
 
     benches = {
@@ -32,6 +33,7 @@ def main() -> None:
         "fig4": fig4_zero_compute.run,
         "fig5": fig5_hierarchical.run,
         "kernel": kernel_micro.run,
+        "topo": topo_rack_codec.run,
     }
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")

@@ -1,0 +1,109 @@
+"""Topology sweep: racks x codec x shard count on the PBox fabric.
+
+The paper's in-network-aggregation story (§3, and PHub's rack-scale tier):
+aggregate inside the rack at full bisection bandwidth, ship one
+integer-compressed stream across the oversubscribed core.  This sweep runs
+the in-process fabric with precomputed gradients (ZeroComputeEngine-style —
+only the PS path runs) over every (racks, codec, shards) combination and
+reports what crosses the core link.
+
+Derived columns per config:
+  core_MiB   core-link MiB per aggregation round
+  xflat      reduction factor vs the flat fabric (no topology, f32)
+  pipe_us    event-clock pipelined makespan per round
+
+Must hold (asserted here, and unit-tested in tests/test_topology.py):
+  * f32 rack aggregation cuts core bytes by exactly workers-per-rack;
+  * int8 cuts them a further ~4x;
+  * sync-mode parameters with codec "none" are bit-identical to flat.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core.chunking import ParamSpace
+from repro.core.compression import CompressionConfig
+from repro.core.fabric import LinkModel, PBoxFabric
+from repro.core.topology import NetworkTopology
+from repro.optim.optimizers import momentum
+
+K = 8  # workers
+ROUNDS = 2
+
+
+def _make_setup():
+    params = {"w": jnp.zeros((8 * 8192 - 512,))}  # 8 chunks, some padding
+    space = ParamSpace.build(params)
+    rng = np.random.default_rng(0)
+    grads = [
+        jnp.asarray(rng.standard_normal(space.flat_elems), jnp.float32)
+        for _ in range(K)
+    ]
+    return space, grads
+
+
+def _run(space, grads, *, shards, topo=None, codec="none"):
+    fab = PBoxFabric(
+        space, momentum(0.1, 0.9), jnp.zeros((space.flat_elems,)),
+        num_shards=shards, num_workers=K, topology=topo,
+        compression=CompressionConfig(codec=codec),
+        link=LinkModel(wire_us_per_chunk=1.0, agg_us_per_chunk=0.2),
+        placement="round_robin",
+    )
+    for _ in range(ROUNDS):
+        for w in range(K):
+            fab.pull(w)  # refresh the params version the push is tagged with
+            fab.push(w, grads[w])
+    return fab
+
+
+def run() -> None:
+    space, grads = _make_setup()
+    flat = _run(space, grads, shards=1)
+    flat_core = flat.stats.bytes_core_link / ROUNDS
+    flat_params = np.asarray(flat.params)
+
+    bars = []
+    for shards in (1, 4):
+        for racks in (1, 2, 4, 8):
+            topo = NetworkTopology(num_workers=K, num_racks=racks)
+            for codec in ("none", "bf16", "int8"):
+                fab = _run(space, grads, shards=shards, topo=topo,
+                           codec=codec)
+                core = fab.stats.bytes_core_link / ROUNDS
+                xflat = flat_core / core
+                pipe = fab.stats.sim_pipelined_us / ROUNDS
+                name = f"topo/racks={racks}_codec={codec}_shards={shards}"
+                emit(name, pipe,
+                     f"core_MiB={core / 2**20:.3f};xflat={xflat:.2f}")
+                if shards == 1:
+                    bars.append((f"racks={racks} {codec:4s}", core))
+                # the paper-shaped invariants
+                wpr = topo.workers_per_rack
+                if codec == "none":
+                    assert core * wpr == flat_core, (
+                        f"{name}: f32 core bytes must shrink exactly "
+                        f"1/workers-per-rack")
+                    assert np.array_equal(flat_params,
+                                          np.asarray(fab.params)), (
+                        f"{name}: codec 'none' must be bit-identical")
+                if codec == "int8":
+                    f32_core = flat_core / wpr
+                    assert 3.9 < f32_core / core <= 4.0, (
+                        f"{name}: int8 must cut core bytes a further ~4x")
+
+    # core-link bytes per round, one bar per (racks, codec) at 1 shard
+    top = max(v for _, v in bars)
+    print("# core-link bytes per round (flat f32 = "
+          f"{flat_core / 2**20:.2f} MiB)")
+    for label, v in bars:
+        n = max(1, int(round(40 * v / top)))
+        print(f"# {label:16s} {'#' * n} {v / 2**20:.3f} MiB")
+
+
+if __name__ == "__main__":
+    run()

@@ -9,4 +9,10 @@ export PYTHONPATH="${PWD}/src${PYTHONPATH:+:$PYTHONPATH}"
 # keep CPU runs deterministic and quiet
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
-exec python -m pytest -x -q "$@"
+python -m pytest -x -q "$@"
+
+# smoke the topology benchmark: its derived-column invariants (core-link
+# bytes shrink 1/workers-per-rack, int8 a further ~4x, codec-"none"
+# bit-identity) are asserted inside and fail the run if violated
+python -m benchmarks.run --only topo >/dev/null
+

@@ -11,8 +11,11 @@ from repro.core.fabric import (
     WorkerHarness,
 )
 from repro.core.server import PHubServer
+from repro.core.topology import NetworkTopology, RackAggregator
 
 __all__ = [
+    "NetworkTopology",
+    "RackAggregator",
     "ParamSpace",
     "TensorSlot",
     "DEFAULT_CHUNK_ELEMS",

@@ -35,6 +35,22 @@ class CompressionConfig:
         raise ValueError(self.codec)
 
 
+def wire_bytes(cfg: CompressionConfig, n_elems: int) -> int:
+    """Exact wire bytes for an ``n_elems`` slab under ``cfg``.
+
+    Unlike ``wire_bytes_per_elem`` (a per-element average), this is the
+    integer byte count the fabric's ServerStats accumulate; for int8 the
+    per-chunk f32 scale is charged per started chunk, so chunk-aligned
+    slabs account exactly."""
+    if cfg.codec == "none":
+        return 4 * n_elems
+    if cfg.codec == "bf16":
+        return 2 * n_elems
+    if cfg.codec == "int8":
+        return n_elems + 4 * -(-n_elems // cfg.chunk_elems)
+    raise ValueError(cfg.codec)
+
+
 def encode(cfg: CompressionConfig, slab: jax.Array, ef: jax.Array | None):
     """slab (N,) f32 -> (payload tuple, new error-feedback state)."""
     if cfg.codec == "none":
@@ -74,6 +90,38 @@ def decode(cfg: CompressionConfig, payload: tuple) -> jax.Array:
             q, scale, cfg.chunk_elems, use_pallas=cfg.use_pallas, interpret=True
         )
     raise ValueError(cfg.codec)
+
+
+def roundtrip(
+    cfg: CompressionConfig, slab: jax.Array, ef: jax.Array | None
+) -> tuple[jax.Array, jax.Array | None]:
+    """Encode then immediately decode one hop: what the receiving end of a
+    codec'd link sees, plus the sender's updated error-feedback state.
+
+    This is the numeric model of one wire crossing (worker NIC -> ToR, or
+    ToR -> core); byte accounting is separate (``wire_bytes``).  Unlike
+    ``encode`` + ``decode`` — where the EF residual forces a second
+    dequantize of the same payload — the decoded view is computed once and
+    shared with the residual (bit-identical results, half the decode
+    kernel invocations on the int8 path)."""
+    if cfg.codec == "none":
+        return slab, ef
+    use_ef = cfg.error_feedback and ef is not None
+    if use_ef:
+        slab = slab + ef
+    if cfg.codec == "bf16":
+        dec = slab.astype(jnp.bfloat16).astype(jnp.float32)
+    elif cfg.codec == "int8":
+        q, scale = quantize_chunks(
+            slab, cfg.chunk_elems, use_pallas=cfg.use_pallas, interpret=True
+        )
+        dec = dequantize_chunks(
+            q, scale, cfg.chunk_elems, use_pallas=cfg.use_pallas,
+            interpret=True,
+        )
+    else:
+        raise ValueError(cfg.codec)
+    return dec, (slab - dec) if use_ef else ef
 
 
 def init_ef_state(cfg: CompressionConfig, n: int) -> jax.Array | None:

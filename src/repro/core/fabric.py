@@ -29,6 +29,24 @@ arrives at ``(c+1) * wire_us``; a shard aggregates its chunks in arrival
 order, overlapping the wire), and ``ServerStats`` records both the pipelined
 makespan and the monolithic store-and-forward baseline so benchmarks can plot
 shard-count scaling curves.
+
+The fabric is topology- and codec-aware (core/topology.py,
+core/compression.py): attach a ``NetworkTopology`` and each rack's worker
+pushes are combined at the ToR before crossing the oversubscribed core link
+— cross-rack bytes drop ~workers-per-rack, and an integer codec shrinks
+them a further ~4x (the paper's in-network-aggregation direction).  With
+``codec="none"`` the rack tier chains partial sums in ascending worker
+order, so rack-aggregated sync training stays *bit-identical* to the flat
+fabric (see core/topology.py's determinism note).  Byte accounting and the
+event clock split into a rack-link tier (full bisection) and a core-link
+tier (oversubscribed, codec-scaled).
+
+Backup-quorum semantics: every push carries the params version the worker
+last pulled; a sync-mode push computed against an already-superseded
+version is dropped at admission (counted in
+``ServerStats.late_pushes_dropped``), matching the documented policy in
+runtime/straggler.py — stale gradients never contaminate the next round's
+quorum, while a straggler that re-pulls contributes its fresh gradients.
 """
 from __future__ import annotations
 
@@ -40,6 +58,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.chunking import ParamSpace
+from repro.core.compression import (
+    CompressionConfig,
+    init_ef_state,
+    roundtrip,
+    wire_bytes,
+)
+from repro.core.topology import NetworkTopology, RackAggregator
 from repro.kernels.fused_agg_opt.kernel import LANES, SUBLANES
 from repro.kernels.fused_agg_opt.ops import fused_aggregate_update
 from repro.optim.optimizers import OptimizerSpec, init_opt_state
@@ -64,13 +89,19 @@ class ServerStats:
     bytes_pushed: int = 0
     bytes_pulled: int = 0
     partial_aggregations: int = 0
+    late_pushes_dropped: int = 0  # stale quorum-round pushes refused
     # chunk-granular accounting
     chunk_pushes: int = 0
     chunk_pulls: int = 0
     rebalances: int = 0
     chunks_moved: int = 0
+    # topology-tier wire accounting (codec-aware byte counts)
+    bytes_rack_link: int = 0  # worker -> ToR, full bisection
+    bytes_core_link: int = 0  # streams crossing the oversubscribed core
+    rack_streams: int = 0  # aggregated upstream streams shipped
     # event-ordered simulator clock (µs of simulated time, cumulative)
     sim_wire_us: float = 0.0
+    sim_core_wire_us: float = 0.0  # oversubscribed core stage (topology)
     sim_agg_us: float = 0.0
     sim_pipelined_us: float = 0.0  # chunk-pipelined, sharded makespan
     sim_serialized_us: float = 0.0  # monolithic store-and-forward baseline
@@ -100,7 +131,15 @@ class LinkModel:
 
     Workers stream chunks in ascending chunk order on their own links, so
     chunk ``c`` (all workers' copies) lands at ``(c+1) * wire_us_per_chunk``;
-    a shard then spends ``agg_us_per_chunk`` of engine time per chunk."""
+    a shard then spends ``agg_us_per_chunk`` of engine time per chunk.
+
+    ``wire_us_per_chunk`` is the cost of a raw f32 chunk on a rack-local
+    (full-bisection) link.  The fabric scales it by the codec's wire bytes
+    and, when a ``NetworkTopology`` is attached, adds a second pipeline
+    stage for the core uplink: per-chunk core time is the rack-link time x
+    the topology's oversubscription factor, further multiplied by the
+    number of streams sharing the uplink (1 with ToR aggregation; the rack
+    population without)."""
 
     wire_us_per_chunk: float = 1.0
     agg_us_per_chunk: float = 0.5
@@ -222,6 +261,25 @@ class PBoxFabric:
     Workers may push the whole flat gradient at once (``push``) or
     chunk-group by chunk-group (``push_chunks``); a push completes — and
     enters admission — once every chunk of the flat space has been staged.
+
+    Every push carries the params version (fabric step) the worker last
+    pulled: in sync mode a push computed against a version the rounds have
+    already superseded (backup-quorum fired without it) is dropped
+    (``ServerStats.late_pushes_dropped``) — stale gradients never count
+    toward, or contaminate, a later round's quorum, and a straggler that
+    re-pulls current params loses only the superseded gradient, never its
+    fresh ones.  SSP mode admits late pushes instead (bounded staleness
+    hides slowness *without* losing gradients); async applies every push
+    immediately.
+
+    Attach a ``NetworkTopology`` (+ optional ``CompressionConfig``) to
+    model the rack tier: worker pushes cross the codec'd rack link to their
+    ToR, are combined there, and one stream per rack crosses the
+    oversubscribed core link (see core/topology.py).  ToR combining only
+    exists where rounds exist: in ``async`` mode every completed push is
+    applied immediately, so there is nothing for the switch to batch — the
+    codec'd stream still crosses both tiers, but each worker stream pays
+    the core link individually (``rack_streams`` stays 0).
     """
 
     def __init__(
@@ -238,6 +296,8 @@ class PBoxFabric:
         use_pallas: bool = True,
         link: LinkModel | None = None,
         placement: str = "contiguous",  # | "round_robin"
+        topology: NetworkTopology | None = None,
+        compression: CompressionConfig | None = None,
     ):
         if mode not in ("sync", "async", "stale"):
             raise ValueError(f"unknown mode {mode}")
@@ -245,6 +305,11 @@ class PBoxFabric:
             raise ValueError("num_shards must be >= 1")
         if placement not in ("contiguous", "round_robin"):
             raise ValueError(f"unknown placement {placement}")
+        if topology is not None and topology.num_workers != num_workers:
+            raise ValueError(
+                f"topology is for {topology.num_workers} workers, fabric has "
+                f"{num_workers}"
+            )
         self.space = space
         self.spec = spec
         self.mode = mode
@@ -256,8 +321,37 @@ class PBoxFabric:
         self.min_pushes = max(1, int(np.ceil(min_push_fraction * num_workers)))
         self.use_pallas = use_pallas
         self.link = link or LinkModel()
+        self.topology = topology
+        # codec chunks align with PS chunks so per-chunk scales ride the
+        # same wire framing
+        self.compression = dataclasses.replace(
+            compression or CompressionConfig(codec="none"),
+            chunk_elems=space.chunk_elems,
+        )
+        self.rack_aggs: list[RackAggregator] = []
+        if topology is not None:
+            self.rack_aggs = [
+                RackAggregator(r, topology.members(r), self.compression,
+                               space.flat_elems)
+                for r in range(topology.num_racks)
+            ]
+        # without a topology the codec still runs on the worker -> PS wire
+        # (byte savings are never reported without their quantization cost);
+        # the per-worker NIC error-feedback state lives here instead of at
+        # a ToR
+        self._worker_ef: dict[int, Any] = {}
+        if topology is None and self.compression.codec != "none":
+            self._worker_ef = {
+                w: init_ef_state(self.compression, space.flat_elems)
+                for w in range(num_workers)
+            }
         self.step = 0
         self.worker_clock = np.zeros(num_workers, dtype=np.int64)
+        # params version (fabric step) each worker last pulled: the version
+        # its in-flight gradient was computed against — what sync-mode
+        # admission judges freshness by
+        self._pull_step = np.zeros(num_workers, dtype=np.int64)
+        self._drops_since_step = 0  # guards against silent all-stale halt
         self.stats = ServerStats()
 
         c = space.num_chunks
@@ -303,6 +397,7 @@ class PBoxFabric:
     # -- worker API ----------------------------------------------------
     def pull(self, worker: int) -> jax.Array:
         flat = self.params
+        self._pull_step[worker] = self.step
         self.stats.pulls += 1
         self.stats.bytes_pulled += flat.size * 4
         self.stats.chunk_pulls += self.space.num_chunks
@@ -353,14 +448,76 @@ class PBoxFabric:
             self._complete_push(worker, jnp.asarray(buf))
 
     # -- push completion / admission ------------------------------------
+    def _rack_agg_on(self) -> bool:
+        # async has no rounds, so the ToR has nothing to batch (see class
+        # docstring) — rack aggregation is a sync/SSP round concept
+        return (self.topology is not None and self.topology.rack_aggregation
+                and self.mode != "async")
+
     def _complete_push(self, worker: int, gchunks: jax.Array) -> None:
-        self.stats.pushes += 1
-        self.stats.bytes_pushed += gchunks.size * 4
-        self.stats.chunk_pushes += self.space.num_chunks
-        for shard in self.shards:
-            shard.stats.chunk_pushes += shard.num_chunks
-            shard.stats.bytes_pushed += shard.num_elems * 4
         self.worker_clock[worker] += 1
+        nbytes = wire_bytes(self.compression, gchunks.size)
+        self.stats.pushes += 1
+        self.stats.bytes_pushed += nbytes
+        self.stats.chunk_pushes += self.space.num_chunks
+        if self.topology is not None:
+            self.stats.bytes_rack_link += nbytes
+        # Backup-quorum semantics: a gradient computed against a params
+        # version older than the current one belongs to a round that
+        # already aggregated without it — drop it at admission (it is not
+        # fresh for the current round, and counting it toward the next
+        # quorum would both bias the update and let leftover stragglers
+        # alone trigger a round).  Freshness is the fabric step at the
+        # worker's last *pull* — a straggler that re-pulls and recomputes
+        # loses only the one superseded gradient, never its fresh ones.
+        # Only quorum rounds can supersede a worker's gradient, so the
+        # rule applies exactly when min_push_fraction < 1: full-barrier
+        # sync waits for everyone (dropping there would deadlock push-only
+        # callers), SSP *admits* late gradients by design
+        # (runtime/straggler.py), and async has no rounds at all.
+        if (self.mode == "sync" and self.min_pushes < self.num_workers
+                and int(self._pull_step[worker]) < self.step):
+            self.stats.late_pushes_dropped += 1
+            self._drops_since_step += 1
+            if self.topology is not None:
+                # the stale stream spent the rack link either way
+                self.rack_aggs[self.topology.rack_of[worker]].drop_stale()
+            if not self._rack_agg_on():
+                # no aggregating ToR to refuse it early: the stream crossed
+                # the core before the PS could drop it
+                self.stats.bytes_core_link += nbytes
+            if (self._drops_since_step >= self.num_workers
+                    and bool((self._pull_step < self.step).all())):
+                # every worker is pushing superseded gradients and nobody
+                # has re-pulled: the driver forgot the pull step and no
+                # round could ever fire again — fail loudly instead of
+                # silently dropping forever
+                raise RuntimeError(
+                    "all workers' pushes were computed against params "
+                    f"superseded by round {self.step}; pull between rounds "
+                    "so gradients are fresh (see PBoxFabric docstring)"
+                )
+            return
+        if not self._rack_agg_on():
+            # no ToR combining: the worker's stream crosses the core itself
+            # and reaches the shards directly (with ToR aggregation, both
+            # are charged per combined stream in _rack_aggregate instead)
+            self.stats.bytes_core_link += nbytes
+            for shard in self.shards:
+                shard.stats.chunk_pushes += shard.num_chunks
+                shard.stats.bytes_pushed += wire_bytes(self.compression,
+                                                       shard.num_elems)
+        if self.topology is not None:
+            rack = self.rack_aggs[self.topology.rack_of[worker]]
+            dec = rack.ingest(worker, gchunks.reshape(-1))
+            gchunks = dec.reshape(self.space.num_chunks,
+                                  self.space.chunk_elems)
+        elif self.compression.codec != "none":
+            dec, self._worker_ef[worker] = roundtrip(
+                self.compression, gchunks.reshape(-1),
+                self._worker_ef[worker])
+            gchunks = dec.reshape(self.space.num_chunks,
+                                  self.space.chunk_elems)
         if self.mode == "async":
             self.step += 1
             for shard in self.shards:
@@ -368,7 +525,7 @@ class PBoxFabric:
                     shard.apply(gchunks[jnp.asarray(shard.chunk_ids)][None],
                                 self.step, average=False)
             self.stats.steps += 1
-            self._simulate_round()
+            self._simulate_round(streams=1 if self.topology else None)
             self._flat_cache = None
             return
         self._inbox[worker] = gchunks
@@ -377,7 +534,9 @@ class PBoxFabric:
 
     def _barrier_met(self) -> bool:
         if self.min_pushes < self.num_workers:
-            return True  # backup-worker mode: quorum reached
+            # backup-worker mode: quorum reached (the inbox only ever holds
+            # current-round pushes — stale ones were dropped at admission)
+            return True
         return len(self._inbox) == self.num_workers
 
     def _aggregate(self) -> None:
@@ -385,41 +544,131 @@ class PBoxFabric:
         if len(workers) < self.num_workers:
             self.stats.partial_aggregations += 1
         self.step += 1
+        streams = None
+        if self._rack_agg_on():
+            streams = self._rack_aggregate(workers)
+        else:
+            if self.topology is not None:
+                streams = len(workers)  # every worker stream crosses the core
+            for shard in self.shards:
+                if not shard.num_chunks:
+                    continue
+                ids = jnp.asarray(shard.chunk_ids)
+                grads = jnp.stack([self._inbox[w][ids] for w in workers])
+                shard.apply(grads, self.step, average=True)
+        self._inbox.clear()
+        self.stats.steps += 1
+        self._drops_since_step = 0
+        self._simulate_round(streams=streams)
+        self._flat_cache = None
+
+    def _rack_aggregate(self, workers: list[int]) -> int:
+        """Combine this round's pushes rack by rack, then apply the
+        upstream stream(s) to every shard.  Returns the number of streams
+        that crossed the core link.
+
+        f32 (codec "none") chains the running partial through the racks in
+        ascending worker order — the exact add sequence of the fused
+        kernel's left fold, so it is bit-identical to the flat fabric for
+        any contiguous layout and any quorum subset.  Integer codecs are
+        associative on the wire (the paper's argument for integer switch
+        math): each rack combines independently, re-encodes at the ToR,
+        and the PBox folds the decoded rack streams in rack order.
+
+        The streams are applied through the *same* (K, n) kernel program
+        the flat fabric uses — zero rows stand in for the per-worker
+        streams the ToRs absorbed (x + 0 is exact, and the shared program
+        shape keeps XLA's fusion/FMA choices identical, which makes the
+        bit-equality structural rather than incidental).  The averaging
+        divisor is the worker count either way."""
+        streams: list[jax.Array] = []
+        shipped = 0
+        present = set(workers)
+        carry = None  # codec "none": running prefix chained through racks
+        for rack in self.rack_aggs:
+            members = [w for w in rack.members if w in present]
+            if not members:
+                continue
+            if self.compression.codec == "none":
+                for w in members:
+                    g = self._inbox[w]
+                    carry = g if carry is None else carry + g
+                relay = rack.uplink(carry.reshape(-1)).reshape(carry.shape)
+                streams = [relay]  # the chain's latest prefix supersedes
+            else:
+                local = None
+                for w in members:
+                    g = self._inbox[w]
+                    local = g if local is None else local + g
+                streams.append(
+                    rack.uplink(local.reshape(-1)).reshape(local.shape))
+            shipped += 1
+            self.stats.bytes_core_link += wire_bytes(self.compression,
+                                                     self.space.flat_elems)
+            self.stats.rack_streams += 1
+            # shard ingress: one combined stream per rack reaches the PS
+            for shard in self.shards:
+                shard.stats.chunk_pushes += shard.num_chunks
+                shard.stats.bytes_pushed += wire_bytes(self.compression,
+                                                       shard.num_elems)
+        zero = jnp.zeros((self.space.num_chunks, self.space.chunk_elems),
+                         jnp.float32)
+        rows = streams + [zero] * (len(workers) - len(streams))
         for shard in self.shards:
             if not shard.num_chunks:
                 continue
             ids = jnp.asarray(shard.chunk_ids)
-            grads = jnp.stack([self._inbox[w][ids] for w in workers])
-            shard.apply(grads, self.step, average=True)
-        self._inbox.clear()
-        self.stats.steps += 1
-        self._simulate_round()
-        self._flat_cache = None
+            shard.apply(jnp.stack([r[ids] for r in rows]), self.step,
+                        average=True)
+        return shipped
 
     # -- event-ordered pipeline clock ------------------------------------
-    def _simulate_round(self) -> None:
+    def _simulate_round(self, streams: int | None = None) -> None:
         """Replay one aggregation round on the event clock: chunk c arrives
         at (c+1)*wire_us; each shard aggregates its chunks in arrival order,
         overlapping wire and engine time (chunk i aggregates while chunk i+1
-        is in flight)."""
-        wire = self.link.wire_us_per_chunk
+        is in flight).
+
+        With a topology, the wire becomes a two-stage pipeline: the rack
+        link (codec-scaled ``wire_us_per_chunk``) feeds the ToR, then the
+        oversubscribed core link relays each chunk onward (``streams``
+        concurrent streams share a rack's uplink — 1 with ToR aggregation,
+        the rack population without)."""
+        bpe_scale = wire_bytes(self.compression, self.space.chunk_elems) / (
+            4.0 * self.space.chunk_elems
+        )
+        wire = self.link.wire_us_per_chunk * bpe_scale
         agg = self.link.agg_us_per_chunk
         c = self.space.num_chunks
+        idx = np.arange(c, dtype=np.float64)
+        core = 0.0
+        if self.topology is not None:
+            share = (1.0 if streams is None
+                     else max(1.0, streams / self.topology.num_racks))
+            core = wire * self.topology.oversubscription * share
+            edge_done = (idx + 1.0) * wire
+            # two-stage pipeline: the core relays chunk i while chunk i+1
+            # still crosses the rack link
+            arrival = (np.maximum.accumulate(edge_done - idx * core)
+                       + (idx + 1.0) * core)
+            self.stats.sim_core_wire_us += c * core
+        else:
+            arrival = (idx + 1.0) * wire
         makespan = 0.0
         for shard in self.shards:
             if not shard.num_chunks:
                 continue
-            arrival = (shard.chunk_ids.astype(np.float64) + 1.0) * wire
-            n = len(arrival)
+            arr = arrival[shard.chunk_ids]
+            n = len(arr)
             # completion_i = max_{j<=i}(arrival_j - j*agg) + (i+1)*agg
-            shifted = arrival - np.arange(n) * agg
+            shifted = arr - np.arange(n) * agg
             done = np.maximum.accumulate(shifted) + (np.arange(n) + 1) * agg
             makespan = max(makespan, float(done[-1]))
             shard.stats.sim_busy_us += n * agg
         self.stats.sim_wire_us += c * wire
         self.stats.sim_agg_us += c * agg
         self.stats.sim_pipelined_us += makespan
-        self.stats.sim_serialized_us += c * wire + c * agg
+        self.stats.sim_serialized_us += c * wire + c * core + c * agg
 
     # -- rebalancing hook -------------------------------------------------
     def rebalance(self, slow_shards: Sequence[int]) -> int:
@@ -471,9 +720,19 @@ class PBoxFabric:
             "params": np.asarray(self.params),
             "state": tuple(np.asarray(r.reshape(-1)) for r in state_rows),
             "step": self.step,
+            "worker_clock": self.worker_clock.copy(),
         }
 
     def restore(self, snap: dict) -> None:
+        """Restore a snapshot: parameters, optimizer state, the round
+        counter AND the per-worker clocks.  Restoring the clocks matters:
+        SSP admission and late-push dropping both compare ``worker_clock``
+        against ``step``, so resuming on pre-restore clocks would admit (or
+        drop) the wrong pushes.  Legacy snapshots without ``worker_clock``
+        — and elastic restores onto a different worker count — reset every
+        worker to the restored step.  Partially staged pushes and codec
+        error-feedback residuals are discarded: they belong to in-flight
+        streams that did not survive the restore."""
         shape = (self.space.num_chunks, self.space.chunk_elems)
         rows = jnp.asarray(snap["params"], jnp.float32).reshape(shape)
         state_rows = [
@@ -484,17 +743,46 @@ class PBoxFabric:
             shard.params = rows[ids]
             shard.state = tuple(r[ids] for r in state_rows)
         self.step = int(snap["step"])
+        wc = snap.get("worker_clock")
+        if wc is not None and len(np.atleast_1d(wc)) == self.num_workers:
+            self.worker_clock = np.asarray(wc, dtype=np.int64).copy()
+        else:
+            self.worker_clock = np.full(self.num_workers, self.step,
+                                        dtype=np.int64)
+        # every worker resumes against the restored params version
+        self._pull_step = np.full(self.num_workers, self.step,
+                                  dtype=np.int64)
+        self._drops_since_step = 0
         self._inbox.clear()
         self._staged.clear()
+        for rack in self.rack_aggs:
+            rack.reset()
+        self._worker_ef = {
+            w: init_ef_state(self.compression, self.space.flat_elems)
+            for w in self._worker_ef
+        }
         self._flat_cache = None
 
     # -- introspection -----------------------------------------------------
+    def rack_of(self, worker: int) -> int:
+        """Rack hosting ``worker`` (0 when no topology is attached)."""
+        return self.topology.rack_of[worker] if self.topology else 0
+
     def describe(self) -> str:
         lines = [
             f"PBoxFabric: {self.num_shards} shards x "
             f"{self.space.num_chunks} chunks ({self.space.chunk_elems} elems), "
-            f"mode={self.mode}, workers={self.num_workers}"
+            f"mode={self.mode}, workers={self.num_workers}, "
+            f"codec={self.compression.codec}"
         ]
+        if self.topology is not None:
+            lines.append("  " + self.topology.describe())
+            lines.append(
+                f"  core link: {self.stats.bytes_core_link >> 10} KiB in "
+                f"{self.stats.rack_streams} aggregated streams, rack links "
+                f"{self.stats.bytes_rack_link >> 10} KiB, late pushes "
+                f"dropped {self.stats.late_pushes_dropped}"
+            )
         for shard in self.shards:
             lines.append(
                 f"  shard {shard.shard_id}: {shard.num_chunks} chunks, "
@@ -515,6 +803,11 @@ class WorkerHarness:
     (straggler modelling); ``chunk_groups > 1`` streams each push in that
     many chunk groups through the fabric's staging path (chunk-by-chunk
     push, as on a real NIC).
+
+    Workers carry the fabric's rack assignment (``NetworkTopology``):
+    ``rack_of(w)`` exposes it and ``steps_done_by_rack()`` summarizes
+    progress per rack, so straggler experiments can slow a whole rack
+    (``speed_by_rack``) instead of hand-listing workers.
     """
 
     def __init__(
@@ -524,15 +817,42 @@ class WorkerHarness:
         batches_fn: Callable[[int, int], Any],  # (worker, step) -> batch
         speed: list[int] | None = None,
         chunk_groups: int = 1,
+        speed_by_rack: dict[int, int] | None = None,
     ):
         self.server = server
         self.grad_fn = grad_fn
         self.batches_fn = batches_fn
         k = server.num_workers
+        self.topology = server.topology
         self.speed = list(speed) if speed else [1] * k
+        if speed_by_rack:
+            if self.topology is None:
+                raise ValueError("speed_by_rack needs a fabric topology")
+            bad = [r for r in speed_by_rack if not
+                   0 <= r < self.topology.num_racks]
+            if bad:
+                raise ValueError(
+                    f"speed_by_rack names racks {bad} but the topology has "
+                    f"racks 0..{self.topology.num_racks - 1}"
+                )
+            for w in range(k):
+                r = self.topology.rack_of[w]
+                if r in speed_by_rack:
+                    self.speed[w] = speed_by_rack[r]
         self.chunk_groups = chunk_groups
         self._phase = [0] * k
         self.steps_done = [0] * k
+
+    def rack_of(self, worker: int) -> int:
+        return self.server.rack_of(worker)
+
+    def steps_done_by_rack(self) -> dict[int, int]:
+        """Total completed worker-steps per rack (rack 0 holds everyone
+        when the fabric has no topology)."""
+        out: dict[int, int] = {}
+        for w, n in enumerate(self.steps_done):
+            out[self.rack_of(w)] = out.get(self.rack_of(w), 0) + n
+        return out
 
     def _push(self, w: int, gflat: jax.Array) -> None:
         srv = self.server

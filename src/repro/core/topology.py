@@ -1,0 +1,181 @@
+"""Datacenter topology tier: racks, ToR in-network aggregation, core uplinks.
+
+The paper's §3 argues a balanced PS must exploit the physical topology:
+inside a rack, workers see full bisection bandwidth to their top-of-rack
+(ToR) switch; the ToR's uplink into the datacenter core is oversubscribed
+(commonly 1:4).  In-network aggregation — the paper's follow-on direction,
+made central by PHub (arXiv:1805.07891) — combines the rack's gradient
+streams *at the ToR* so only one stream per rack crosses the scarce core
+link, cutting cross-rack bytes by ~workers-per-rack (and, with the integer
+codec, a further ~4x).
+
+Two pieces:
+
+  ``NetworkTopology``   the static layout: workers grouped into contiguous
+                        racks, each with an oversubscribed core uplink.
+  ``RackAggregator``    one ToR's aggregation state: per-worker NIC
+                        error-feedback for the edge-link codec, switch-side
+                        error-feedback for the re-encoded upstream stream,
+                        and per-rack wire accounting.
+
+Determinism note (load-bearing — see PBoxFabric's bit-equality invariant):
+f32 addition is not associative, and a real switch adds packets in arrival
+order, so floating-point in-network aggregation is nondeterministic.  With
+``codec="none"`` the fabric therefore *chains* the partial sum through the
+racks in ascending worker order — rack r folds its members onto the prefix
+arriving from rack r-1 — which reproduces the fused kernel's left-fold
+bit-for-bit for any contiguous rack layout and any quorum subset.  Integer
+codecs are associative on the wire (the paper's argument for integer
+switch math), so each rack combines independently and re-encodes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.core.compression import (
+    CompressionConfig,
+    init_ef_state,
+    roundtrip,
+    wire_bytes,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkTopology:
+    """Workers grouped into contiguous racks with oversubscribed uplinks.
+
+    ``rack_of`` maps worker -> rack and must be non-decreasing (contiguous
+    racks): the chained f32 aggregation path relies on rack order matching
+    ascending worker order.  ``oversubscription`` is the core-uplink
+    bandwidth divisor (1:4 means the uplink moves a chunk 4x slower than a
+    rack-local link); ``rack_aggregation`` toggles ToR combining — off, the
+    topology still models the two-tier wire but every worker stream crosses
+    the core individually (the flat-fabric traffic pattern).
+    """
+
+    num_workers: int
+    num_racks: int = 1
+    oversubscription: float = 4.0
+    rack_aggregation: bool = True
+    rack_of: tuple[int, ...] = ()
+
+    def __post_init__(self):
+        if self.num_workers < 1:
+            raise ValueError("num_workers must be >= 1")
+        if not 1 <= self.num_racks <= self.num_workers:
+            raise ValueError("num_racks must be in [1, num_workers]")
+        if self.oversubscription < 1.0:
+            raise ValueError("oversubscription must be >= 1 (1 = full bisection)")
+        if not self.rack_of:
+            assign = np.repeat(
+                np.arange(self.num_racks),
+                [len(a) for a in np.array_split(np.arange(self.num_workers),
+                                                self.num_racks)],
+            )
+            object.__setattr__(self, "rack_of", tuple(int(r) for r in assign))
+        if len(self.rack_of) != self.num_workers:
+            raise ValueError("rack_of must assign every worker")
+        ranks = np.asarray(self.rack_of)
+        if ranks.min() < 0 or ranks.max() >= self.num_racks:
+            raise ValueError("rack_of entries out of range")
+        if len(np.unique(ranks)) != self.num_racks:
+            raise ValueError("every rack must contain at least one worker")
+        if np.any(np.diff(ranks) < 0):
+            raise ValueError(
+                "racks must be contiguous worker ranges (rack_of "
+                "non-decreasing): the deterministic chained aggregation "
+                "order requires it"
+            )
+
+    # -- queries -------------------------------------------------------
+    def members(self, rack: int) -> tuple[int, ...]:
+        return tuple(w for w, r in enumerate(self.rack_of) if r == rack)
+
+    @property
+    def workers_per_rack(self) -> int:
+        """Largest rack population (uniform layouts: the rack size)."""
+        return int(np.bincount(np.asarray(self.rack_of)).max())
+
+    def describe(self) -> str:
+        sizes = np.bincount(np.asarray(self.rack_of), minlength=self.num_racks)
+        return (
+            f"NetworkTopology: {self.num_workers} workers / {self.num_racks} "
+            f"racks {list(map(int, sizes))}, core 1:{self.oversubscription:g} "
+            f"oversubscribed, ToR aggregation "
+            f"{'on' if self.rack_aggregation else 'off'}"
+        )
+
+
+@dataclasses.dataclass
+class RackStats:
+    ingests: int = 0  # worker streams accepted at the ToR
+    uplinks: int = 0  # streams shipped up the core link
+    stale_drops: int = 0  # stale quorum-round streams refused at the ToR
+    bytes_in: int = 0  # worker -> ToR (rack-local, full bisection)
+    bytes_up: int = 0  # ToR -> core (oversubscribed)
+
+
+class RackAggregator:
+    """One ToR switch: accepts its rack's worker pushes over the codec'd
+    edge link and ships one (re-encoded) stream up the core link.
+
+    Error-feedback state is split the way the hardware splits it: each
+    worker's NIC keeps its own residual (``ingest``), the switch keeps one
+    residual for the re-quantized upstream sum (``uplink``)."""
+
+    def __init__(
+        self,
+        rack_id: int,
+        members: tuple[int, ...],
+        cfg: CompressionConfig,
+        n_elems: int,
+    ):
+        self.rack_id = rack_id
+        self.members = tuple(members)
+        self.cfg = cfg
+        self.n_elems = n_elems
+        self.stats = RackStats()
+        self._worker_ef = {w: init_ef_state(cfg, n_elems) for w in members}
+        self._uplink_ef = init_ef_state(cfg, n_elems)
+
+    def ingest(self, worker: int, slab: jax.Array) -> jax.Array:
+        """One worker push crossing the rack-local link: returns the slab
+        as the ToR sees it (codec round-trip, worker-NIC error feedback)."""
+        if worker not in self._worker_ef:
+            raise ValueError(f"worker {worker} is not in rack {self.rack_id}")
+        self.stats.ingests += 1
+        self.stats.bytes_in += wire_bytes(self.cfg, self.n_elems)
+        dec, self._worker_ef[worker] = roundtrip(
+            self.cfg, slab, self._worker_ef[worker]
+        )
+        return dec
+
+    def drop_stale(self) -> None:
+        """A stale quorum-round stream arrived and was refused: it spent
+        the rack link (counted here, keeping per-rack bytes in sync with
+        the fabric's ``bytes_rack_link``) but is never decoded and never
+        touches error-feedback state.  Whether it also spent the core link
+        depends on who dropped it — an aggregating ToR refuses it before
+        the uplink; otherwise the PS drops it after the core crossing (the
+        fabric accounts for both cases)."""
+        self.stats.stale_drops += 1
+        self.stats.bytes_in += wire_bytes(self.cfg, self.n_elems)
+
+    def uplink(self, slab: jax.Array) -> jax.Array:
+        """The rack's combined stream crossing the core link: identity for
+        f32 (the chain just relays the running prefix), codec round-trip
+        with switch-side error feedback otherwise."""
+        self.stats.uplinks += 1
+        self.stats.bytes_up += wire_bytes(self.cfg, self.n_elems)
+        dec, self._uplink_ef = roundtrip(self.cfg, slab, self._uplink_ef)
+        return dec
+
+    def reset(self) -> None:
+        """Clear codec residuals (elastic restore: streams restart fresh)."""
+        self._worker_ef = {
+            w: init_ef_state(self.cfg, self.n_elems) for w in self.members
+        }
+        self._uplink_ef = init_ef_state(self.cfg, self.n_elems)

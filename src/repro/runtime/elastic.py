@@ -22,14 +22,21 @@ def reshard_flat(flat: np.ndarray, old_owners: int, new_owners: int,
                  chunk_elems: int) -> np.ndarray:
     """Re-balance a flat chunk space from old_owners to new_owners.
 
-    flat: (flat_elems,) host array.  Returns the same logical array, but
-    verifies the new owner count tiles the chunk space; pads with zero
-    chunks if the new owner count requires it (payload offsets unchanged —
-    padding lives at the tail)."""
+    flat: (flat_elems,) host array, laid out for ``old_owners`` (validated:
+    the chunk count must tile over them — a mismatch means the caller is
+    resharding a buffer that was never owner-padded for that count).
+    Returns the same logical array, padded with zero chunks if the new
+    owner count requires it (payload offsets unchanged — padding lives at
+    the tail)."""
     n = flat.shape[0]
     if n % chunk_elems:
         raise ValueError("flat not chunk aligned")
     chunks = n // chunk_elems
+    if old_owners < 1 or chunks % old_owners:
+        raise ValueError(
+            f"flat has {chunks} chunks, not a valid layout for "
+            f"{old_owners} owners"
+        )
     new_chunks = -(-chunks // new_owners) * new_owners
     if new_chunks != chunks:
         flat = np.concatenate(
@@ -59,12 +66,20 @@ def rebuild_space(space: ParamSpace, new_owners: int) -> ParamSpace:
 
 def elastic_restore(host_state: dict, old_space: ParamSpace,
                     new_owners: int) -> tuple[dict, ParamSpace]:
-    """Re-target a checkpointed flat state onto a new owner count."""
+    """Re-target a checkpointed flat state onto a new owner count.
+
+    Scalar/worker-indexed keys (``step``, ``worker_clock``) pass through
+    untouched — they are not chunk-space data; ``PBoxFabric.restore``
+    resets clocks itself when the restored worker count differs."""
     new_space = rebuild_space(old_space, new_owners)
     out = {}
     for k, v in host_state.items():
-        if k == "step":
+        if k in ("step", "worker_clock"):
             out[k] = v
+            continue
+        if isinstance(v, (tuple, list)) and len(v) == 0:
+            # stateless optimizer (e.g. sgd): no slots to reshard
+            out[k] = type(v)()
             continue
         arr = np.asarray(v)
         groups = arr.reshape(arr.shape[0], -1) if arr.ndim > 1 else arr[None]

@@ -6,7 +6,14 @@ exercised against the in-process PBox fabric (core/fabric.py):
 
   * backup-worker quorum: the fabric applies the update once
     ``min_push_fraction`` of workers have pushed (Chen et al.'s backup
-    workers); stragglers' late pushes are dropped for that step.
+    workers); stragglers' late pushes are dropped for that step — enforced
+    by the fabric's pull-version tagging (a sync-mode push computed
+    against a params version the rounds have superseded is refused at
+    admission and counted in ``ServerStats.late_pushes_dropped``, so stale
+    gradients neither join a later round's quorum nor bias its average; a
+    straggler that re-pulls contributes its fresh gradients again.  With
+    ToR aggregation the drop happens at the switch, before the stale
+    stream costs core bytes).
   * bounded staleness (SSP): workers may run ahead up to ``staleness`` steps
     — hides transient slowness without losing gradients.
   * chunk rebalancing: if a PS *shard* (not worker) is persistently slow

@@ -80,6 +80,7 @@ def attach_telemetry(
     space: ParamSpace,
     mesh,
     stats: ServerStats,
+    topology=None,
 ) -> Callable:
     """Wrap a jitted PS train step so every invocation records the modeled
     wire traffic into a fabric-style ``ServerStats``.
@@ -88,15 +89,46 @@ def attach_telemetry(
     ``PBoxFabric`` there is nothing to count at the host; this uses the
     exchange's analytic wire model (``PSExchange.modeled_bytes``, the same
     model the Fig. 4/5 benchmarks plot) scaled by the worker count, giving
-    both PS implementations one accounting surface."""
+    both PS implementations one accounting surface.
+
+    Pass a ``core/topology.NetworkTopology`` to split the push traffic into
+    the two wire tiers the fabric tracks: every worker stream crosses its
+    rack link, while the oversubscribed core link carries one
+    codec-compressed stream per rack when ToR aggregation is on (or every
+    worker stream when it is off) — the same codec-exact byte model
+    (``compression.wire_bytes``) the fabric uses."""
+    from repro.core.compression import wire_bytes as _wire_bytes
+
     n_pod = mesh.shape[exchange.pod_axis] if exchange.pod_axis else 1
     n_workers = 1
     for a in exchange.worker_axes:
         n_workers *= mesh.shape[a]
+    if topology is not None and topology.num_workers != n_workers:
+        raise ValueError(
+            f"topology is for {topology.num_workers} workers, mesh worker "
+            f"axes give {n_workers}"
+        )
     n_data = n_workers // n_pod
     mb = exchange.modeled_bytes(space.flat_elems, n_pod, n_data)
     push = int(mb["push"] + (mb["xpod"] or 0.0))
     pull = int(mb["pull"])
+    # only pbox_hier actually compresses its wire, and only on the
+    # cross-pod (core) stage; every strategy's intra-pod push is raw f32,
+    # so the rack tier must never claim codec savings the exchange does
+    # not realize
+    compresses = (exchange.cfg.strategy == "pbox_hier"
+                  and exchange.cfg.compression.codec != "none")
+    raw_stream = 4 * space.flat_elems
+    core_stream = (_wire_bytes(exchange.cfg.compression, space.flat_elems)
+                   if compresses else raw_stream)
+    if topology is not None:
+        rack_bytes = raw_stream * n_workers
+        core_streams = (topology.num_racks if topology.rack_aggregation
+                        else n_workers)
+        core_bytes = core_stream * core_streams
+    else:
+        rack_bytes = 0
+        core_bytes = core_stream * n_workers
 
     def wrapped(*args, **kwargs):
         out = step_fn(*args, **kwargs)
@@ -105,6 +137,8 @@ def attach_telemetry(
         stats.pulls += n_workers
         stats.bytes_pushed += push * n_workers
         stats.bytes_pulled += pull * n_workers
+        stats.bytes_rack_link += rack_bytes
+        stats.bytes_core_link += core_bytes
         stats.chunk_pushes += space.num_chunks * n_workers
         stats.chunk_pulls += space.num_chunks * n_workers
         return out

@@ -112,10 +112,17 @@ def test_partial_quorum_on_fabric():
     assert fab.stats.steps == 1
     assert fab.stats.partial_aggregations == 1
     assert all(s.stats.agg_events == 1 for s in fab.shards)
-    # the straggler's late push lands in the *next* round's inbox
+    # the straggler's late push was computed against the superseded params:
+    # dropped at admission, never staged for the next round
     fab.push(3, space.flatten(grad_fn(params, 3)))
     assert fab.stats.steps == 1
+    assert len(fab._inbox) == 0
+    assert fab.stats.late_pushes_dropped == 1
+    # after re-pulling the current params its next gradient is fresh
+    cur = space.unflatten(fab.pull(3))
+    fab.push(3, space.flatten(grad_fn(cur, 3)))
     assert len(fab._inbox) == 1
+    assert fab.stats.steps == 1
 
 
 def test_ssp_staleness_bound_on_fabric():

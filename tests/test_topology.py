@@ -1,0 +1,622 @@
+"""Topology tier: rack ToR aggregation, the codec-aware wire path, and the
+backup-quorum / restore semantics fixes.
+
+Load-bearing properties:
+  * rack aggregation with ``codec="none"`` is *bit-identical* to the flat
+    fabric (the chained f32 fold reproduces the kernel's left fold) — for
+    1/2/4 racks, ragged layouts, and partial quorums;
+  * cross-rack (core-link) bytes shrink ~workers-per-rack with ToR
+    aggregation on, and a further ~4x with the int8 codec;
+  * int8 error feedback keeps the compressed stream unbiased over time;
+  * stale quorum pushes are dropped at admission, never re-aggregated;
+  * snapshot/restore round-trips ``worker_clock`` (elastic included).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.chunking import TILE_ELEMS, ParamSpace
+from repro.core.compression import CompressionConfig, wire_bytes
+from repro.core.fabric import LinkModel, PBoxFabric, WorkerHarness
+from repro.core.topology import NetworkTopology
+from repro.optim.optimizers import adamw, momentum, sgd
+from repro.runtime.elastic import elastic_restore, reshard_flat
+
+K = 4
+
+
+def quad_setup():
+    params = {"w": jnp.zeros((9000,)), "b": jnp.zeros((77,))}
+    targets = [
+        {"w": jnp.full((9000,), float(i + 1)), "b": jnp.arange(77.0) * (i + 1)}
+        for i in range(K)
+    ]
+
+    def grad_fn(p, batch):
+        t = targets[batch]
+        return jax.tree.map(lambda a, b: 2 * (a - b), p, t)
+
+    return params, targets, grad_fn
+
+
+def build_space(params):
+    return ParamSpace.build(params, chunk_elems=TILE_ELEMS)
+
+
+def run_fabric(space, params, grad_fn, *, steps=5, spec=None, speed=None,
+               **kw):
+    fab = PBoxFabric(space, spec or momentum(0.05, 0.9),
+                     space.flatten(params), num_workers=K, **kw)
+    h = WorkerHarness(fab, grad_fn, lambda w, s: w, speed=speed)
+    h.run(steps)
+    return fab
+
+
+# ---------------------------------------------------------------------------
+# topology layout
+# ---------------------------------------------------------------------------
+def test_topology_layout_and_validation():
+    topo = NetworkTopology(num_workers=8, num_racks=4)
+    assert topo.rack_of == (0, 0, 1, 1, 2, 2, 3, 3)
+    assert topo.members(2) == (4, 5)
+    assert topo.workers_per_rack == 2
+    ragged = NetworkTopology(num_workers=5, num_racks=3)
+    assert ragged.rack_of == (0, 0, 1, 1, 2)
+    assert ragged.workers_per_rack == 2
+    with pytest.raises(ValueError):
+        NetworkTopology(num_workers=4, num_racks=2, rack_of=(0, 1, 0, 1))
+    with pytest.raises(ValueError):
+        NetworkTopology(num_workers=4, num_racks=5)
+    with pytest.raises(ValueError):
+        NetworkTopology(num_workers=4, num_racks=2, oversubscription=0.5)
+    with pytest.raises(ValueError):
+        PBoxFabric(
+            build_space({"w": jnp.zeros((100,))}), sgd(0.1),
+            jnp.zeros((TILE_ELEMS,)), num_workers=2,
+            topology=NetworkTopology(num_workers=4, num_racks=2),
+        )
+
+
+# ---------------------------------------------------------------------------
+# bit-identity of the rack-aggregated wire path (codec "none")
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("num_racks", [1, 2, 4])
+@pytest.mark.parametrize("spec_fn", [lambda: momentum(0.05, 0.9),
+                                     lambda: adamw(3e-3)])
+def test_rack_aggregation_bit_identical_to_flat(num_racks, spec_fn):
+    params, _, grad_fn = quad_setup()
+    space = build_space(params)
+    flat = run_fabric(space, params, grad_fn, num_shards=2, spec=spec_fn())
+    racked = run_fabric(
+        space, params, grad_fn, num_shards=2, spec=spec_fn(),
+        topology=NetworkTopology(num_workers=K, num_racks=num_racks),
+    )
+    np.testing.assert_array_equal(np.asarray(flat.params),
+                                  np.asarray(racked.params))
+
+
+def test_ragged_rack_layout_bit_identical():
+    params, _, grad_fn = quad_setup()
+    space = build_space(params)
+    flat = run_fabric(space, params, grad_fn, num_shards=1)
+    racked = run_fabric(
+        space, params, grad_fn, num_shards=1,
+        topology=NetworkTopology(num_workers=K, num_racks=3),  # racks 2/1/1
+    )
+    np.testing.assert_array_equal(np.asarray(flat.params),
+                                  np.asarray(racked.params))
+
+
+def test_rack_aggregation_bit_identical_under_quorum():
+    """Backup-worker rounds aggregate a quorum subset; the chained rack fold
+    must still match the flat fabric's fold over that same subset."""
+    params, _, grad_fn = quad_setup()
+    space = build_space(params)
+    kw = dict(num_shards=2, min_push_fraction=0.75, speed=[1, 1, 1, 3],
+              steps=4, spec=sgd(0.01))
+    flat = run_fabric(space, params, grad_fn, **kw)
+    racked = run_fabric(
+        space, params, grad_fn,
+        topology=NetworkTopology(num_workers=K, num_racks=2), **kw,
+    )
+    assert flat.stats.partial_aggregations > 0
+    assert flat.stats.late_pushes_dropped == racked.stats.late_pushes_dropped
+    np.testing.assert_array_equal(np.asarray(flat.params),
+                                  np.asarray(racked.params))
+
+
+def test_rack_aggregation_with_staged_chunk_pushes():
+    """Chunk-by-chunk staged pushes complete into the same rack path."""
+    params, _, grad_fn = quad_setup()
+    space = build_space(params)
+    flat = run_fabric(space, params, grad_fn, num_shards=2)
+    fab = PBoxFabric(space, momentum(0.05, 0.9), space.flatten(params),
+                     num_shards=2, num_workers=K,
+                     topology=NetworkTopology(num_workers=K, num_racks=2))
+    h = WorkerHarness(fab, grad_fn, lambda w, s: w, chunk_groups=4)
+    h.run(5)
+    np.testing.assert_array_equal(np.asarray(flat.params),
+                                  np.asarray(fab.params))
+
+
+# ---------------------------------------------------------------------------
+# wire byte accounting: rack link vs core link, codec-aware
+# ---------------------------------------------------------------------------
+def test_core_link_bytes_shrink_with_rack_aggregation_and_codec():
+    params, _, grad_fn = quad_setup()
+    space = build_space(params)
+    steps = 3
+    flat = run_fabric(space, params, grad_fn, num_shards=2, steps=steps)
+    topo = NetworkTopology(num_workers=K, num_racks=2)
+    racked = run_fabric(space, params, grad_fn, num_shards=2, steps=steps,
+                        topology=topo)
+    int8 = run_fabric(
+        space, params, grad_fn, num_shards=2, steps=steps, topology=topo,
+        compression=CompressionConfig(codec="int8"),
+    )
+    rounds = flat.stats.steps
+    stream = 4 * space.flat_elems
+    # flat: every worker stream crosses the core
+    assert flat.stats.bytes_core_link == rounds * K * stream
+    assert flat.stats.bytes_rack_link == 0  # no topology, no rack tier
+    # rack aggregation: one stream per rack -> exactly 1/workers-per-rack
+    assert racked.stats.bytes_core_link == rounds * topo.num_racks * stream
+    assert (flat.stats.bytes_core_link
+            == racked.stats.bytes_core_link * topo.workers_per_rack)
+    # the rack link still carries every worker stream
+    assert racked.stats.bytes_rack_link == rounds * K * stream
+    assert racked.stats.rack_streams == rounds * topo.num_racks
+    # int8 shrinks the core stream a further ~4x (exact codec byte count)
+    int8_stream = wire_bytes(int8.compression, space.flat_elems)
+    assert int8.stats.bytes_core_link == rounds * topo.num_racks * int8_stream
+    ratio = racked.stats.bytes_core_link / int8.stats.bytes_core_link
+    assert 3.9 < ratio <= 4.0
+    # per-rack stats agree with the fabric totals
+    assert sum(r.stats.bytes_up for r in racked.rack_aggs) \
+        == racked.stats.bytes_core_link
+    assert sum(r.stats.bytes_in for r in racked.rack_aggs) \
+        == racked.stats.bytes_rack_link
+    # shard ingress counts the combined streams that actually reach the
+    # PS, not the per-worker streams the ToRs absorbed
+    assert sum(s.stats.bytes_pushed for s in racked.shards) \
+        == racked.stats.bytes_core_link
+    assert sum(s.stats.bytes_pushed for s in int8.shards) \
+        == int8.stats.bytes_core_link
+
+
+def test_rack_aggregation_off_still_models_two_tier_wire():
+    params, _, grad_fn = quad_setup()
+    space = build_space(params)
+    topo_off = NetworkTopology(num_workers=K, num_racks=2,
+                               rack_aggregation=False)
+    fab = run_fabric(space, params, grad_fn, num_shards=2, steps=2,
+                     topology=topo_off)
+    stream = 4 * space.flat_elems
+    # no ToR combining: every worker stream crosses the core individually
+    assert fab.stats.bytes_core_link == fab.stats.pushes * stream
+    assert fab.stats.bytes_rack_link == fab.stats.pushes * stream
+    assert fab.stats.rack_streams == 0
+    # numerics identical to the flat fabric either way
+    flat = run_fabric(space, params, grad_fn, num_shards=2, steps=2)
+    np.testing.assert_array_equal(np.asarray(flat.params),
+                                  np.asarray(fab.params))
+
+
+def test_event_clock_rewards_rack_aggregation():
+    """On the oversubscribed core, ToR aggregation shortens the pipelined
+    makespan vs shipping every worker stream up the same uplink."""
+    params, _, grad_fn = quad_setup()
+    space = build_space(params)
+    link = LinkModel(wire_us_per_chunk=1.0, agg_us_per_chunk=0.1)
+    on = run_fabric(
+        space, params, grad_fn, num_shards=2, steps=2, link=link,
+        topology=NetworkTopology(num_workers=K, num_racks=2),
+    )
+    off = run_fabric(
+        space, params, grad_fn, num_shards=2, steps=2, link=link,
+        topology=NetworkTopology(num_workers=K, num_racks=2,
+                                 rack_aggregation=False),
+    )
+    assert on.stats.sim_core_wire_us > 0
+    assert on.stats.sim_pipelined_us < off.stats.sim_pipelined_us
+    assert on.stats.sim_pipelined_us < on.stats.sim_serialized_us
+
+
+# ---------------------------------------------------------------------------
+# int8 rack path: error feedback keeps the wire unbiased
+# ---------------------------------------------------------------------------
+def _constant_grad_fabric(space, codec_cfg, lr=1.0):
+    init = jnp.zeros((space.flat_elems,))
+    return PBoxFabric(space, sgd(lr), init, num_workers=1,
+                      topology=NetworkTopology(num_workers=1, num_racks=1),
+                      compression=codec_cfg)
+
+
+def test_int8_rack_error_feedback_unbiased():
+    """With error feedback, sub-quantum gradient components survive on the
+    wire over time (residual telescoping): after T steps the applied sum
+    tracks the true sum to within a couple of quanta, independent of T.
+    Without EF the same components are rounded away every step and the
+    error grows linearly."""
+    params = {"w": jnp.zeros((2 * TILE_ELEMS,))}
+    space = ParamSpace.build(params, chunk_elems=TILE_ELEMS)
+    # per chunk: one full-scale outlier pins scale to 1/127; everything
+    # else sits below half a quantum and quantizes to zero without EF
+    g = np.full((space.flat_elems,), 0.003, np.float32)
+    g[::TILE_ELEMS] = 1.0
+    gflat = jnp.asarray(g)
+    scale = 1.0 / 127.0
+    T = 30
+
+    errs = {}
+    for ef in (True, False):
+        fab = _constant_grad_fabric(
+            space, CompressionConfig(codec="int8", error_feedback=ef))
+        p0 = np.asarray(fab.params).copy()
+        for _ in range(T):
+            fab.pull(0)  # refresh the params version, then push the grad
+            fab.push(0, gflat)
+        applied = p0 - np.asarray(fab.params)  # sgd lr=1: sum of decoded
+        errs[ef] = np.abs(applied - T * g)
+    # EF: bounded by a few quanta (worker-NIC + ToR stages), NOT growing in T
+    assert errs[True].max() <= 3 * scale
+    # no EF: the sub-quantum components never move -> linear-in-T error
+    small = np.ones(space.flat_elems, bool)
+    small[::TILE_ELEMS] = False
+    assert errs[False][small].max() == pytest.approx(T * 0.003, rel=1e-4)
+    assert errs[False].max() > 5 * errs[True].max()
+
+
+def test_codec_without_topology_models_quantization_cost():
+    """A codec'd fabric with no topology must still quantize the worker ->
+    PS wire (per-worker NIC error feedback) — smaller reported bytes never
+    come for free."""
+    params = {"w": jnp.zeros((2 * TILE_ELEMS,))}
+    space = ParamSpace.build(params, chunk_elems=TILE_ELEMS)
+    g = np.full((space.flat_elems,), 0.003, np.float32)
+    g[::TILE_ELEMS] = 1.0
+    gflat = jnp.asarray(g)
+    T = 30
+    fab = PBoxFabric(space, sgd(1.0), jnp.zeros((space.flat_elems,)),
+                     num_workers=1,
+                     compression=CompressionConfig(codec="int8"))
+    p0 = np.asarray(fab.params).copy()
+    for _ in range(T):
+        fab.pull(0)  # refresh the params version, then push the grad
+        fab.push(0, gflat)
+    applied = p0 - np.asarray(fab.params)
+    # bytes are codec-sized AND the stream was actually quantized
+    assert fab.stats.bytes_pushed == T * wire_bytes(fab.compression,
+                                                    space.flat_elems)
+    assert not np.array_equal(applied, T * g)
+    # ...but error feedback keeps it unbiased (single NIC stage)
+    assert np.abs(applied - T * g).max() <= 2 * (1.0 / 127.0)
+
+
+def test_bf16_rack_path_close_to_f32():
+    params, _, grad_fn = quad_setup()
+    space = build_space(params)
+    flat = run_fabric(space, params, grad_fn, num_shards=2, steps=3)
+    bf16 = run_fabric(
+        space, params, grad_fn, num_shards=2, steps=3,
+        topology=NetworkTopology(num_workers=K, num_racks=2),
+        compression=CompressionConfig(codec="bf16"),
+    )
+    np.testing.assert_allclose(np.asarray(flat.params),
+                               np.asarray(bf16.params), rtol=2e-2, atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# backup-quorum: stale pushes are dropped, not re-aggregated
+# ---------------------------------------------------------------------------
+def test_stale_push_dropped_and_stragglers_cannot_trigger_round():
+    params, _, grad_fn = quad_setup()
+    space = build_space(params)
+    topo = NetworkTopology(num_workers=K, num_racks=2)
+    fab = PBoxFabric(space, sgd(0.01), space.flatten(params), num_shards=2,
+                     num_workers=K, min_push_fraction=0.75, topology=topo)
+    g = [space.flatten(grad_fn(params, w)) for w in range(K)]
+    for w in range(3):
+        fab.push(w, g[w])
+    assert fab.stats.steps == 1
+    core_after_round = fab.stats.bytes_core_link
+    shard_bytes_after_round = [s.stats.bytes_pushed for s in fab.shards]
+    # the straggler's round-0 push arrives after round 0 aggregated: dropped
+    # at the ToR — no inbox entry, no core bytes, no shard ingress, no
+    # extra round
+    fab.push(3, g[3])
+    assert fab.stats.late_pushes_dropped == 1
+    assert len(fab._inbox) == 0
+    assert fab.stats.steps == 1
+    assert fab.stats.bytes_core_link == core_after_round
+    assert [s.stats.bytes_pushed for s in fab.shards] \
+        == shard_bytes_after_round
+    # the ToR records the drop, keeping per-rack bytes in sync with the
+    # fabric's rack-link total
+    drop_rack = fab.rack_aggs[topo.rack_of[3]]
+    assert drop_rack.stats.stale_drops == 1
+    assert sum(r.stats.bytes_in for r in fab.rack_aggs) \
+        == fab.stats.bytes_rack_link
+    # a lone fresh push (re-pulled params, round 1) must not meet the
+    # 3-worker quorum either
+    fab.pull(3)
+    fab.push(3, g[3])
+    assert fab.stats.steps == 1
+    assert len(fab._inbox) == 1
+    # two more fresh pushes complete the quorum -> exactly one new round
+    for w in (0, 1):
+        fab.pull(w)
+        fab.push(w, g[w])
+    assert fab.stats.steps == 2
+    assert fab.stats.partial_aggregations == 2
+    assert len(fab._inbox) == 0
+
+
+def test_full_barrier_push_only_loop_never_drops():
+    """min_push_fraction=1 (full barrier): no round can supersede a
+    worker's gradient without that worker, so PR1-style push-without-pull
+    loops keep training — the quorum drop must never deadlock them."""
+    params, _, grad_fn = quad_setup()
+    space = build_space(params)
+    fab = PBoxFabric(space, sgd(0.01), space.flatten(params), num_shards=2,
+                     num_workers=K)
+    g = [space.flatten(grad_fn(params, w)) for w in range(K)]
+    for _ in range(3):
+        for w in range(K):
+            fab.push(w, g[w])
+    assert fab.stats.steps == 3
+    assert fab.stats.late_pushes_dropped == 0
+
+
+def test_persistent_straggler_not_starved_under_quorum():
+    """The drop rule targets superseded gradients, not slow workers: a
+    straggler that pulls current params before each gradient has every
+    push admitted (regression: push-count-based staleness tagging starved
+    a persistently slow worker forever)."""
+    params, _, grad_fn = quad_setup()
+    space = build_space(params)
+    fab = PBoxFabric(space, sgd(0.01), space.flatten(params), num_shards=2,
+                     num_workers=K, min_push_fraction=0.75)
+    h = WorkerHarness(fab, grad_fn, lambda w, s: w, speed=[1, 1, 1, 4])
+    h.run(3)
+    assert h.steps_done[3] >= 3
+    assert fab.stats.late_pushes_dropped == 0
+
+
+def test_ssp_mode_admits_late_pushes_instead_of_dropping():
+    """SSP with a quorum must not starve a slow worker: bounded staleness
+    hides slowness *without* losing gradients, so a late push joins the
+    current round rather than being refused (sync-only drop semantics)."""
+    params, _, grad_fn = quad_setup()
+    space = build_space(params)
+    fab = PBoxFabric(space, sgd(0.01), space.flatten(params), num_shards=2,
+                     num_workers=K, mode="stale", staleness=2,
+                     min_push_fraction=0.75)
+    g = [space.flatten(grad_fn(params, w)) for w in range(K)]
+    for w in range(3):
+        fab.push(w, g[w])
+    assert fab.stats.steps == 1
+    # the slow worker's round-0 push arrives late: admitted, not dropped
+    fab.push(3, g[3])
+    assert fab.stats.late_pushes_dropped == 0
+    assert len(fab._inbox) == 1
+
+
+def test_stale_drop_without_tor_aggregation_still_pays_core():
+    """With no aggregating ToR the PS is the drop point, so the stale
+    stream crossed the core first — byte accounting must match the flat
+    traffic pattern the rack_aggregation=False mode models."""
+    params, _, grad_fn = quad_setup()
+    space = build_space(params)
+    g = [space.flatten(grad_fn(params, w)) for w in range(K)]
+    stream = 4 * space.flat_elems
+    for topo in (None, NetworkTopology(num_workers=K, num_racks=2,
+                                       rack_aggregation=False)):
+        fab = PBoxFabric(space, sgd(0.01), space.flatten(params),
+                         num_shards=2, num_workers=K,
+                         min_push_fraction=0.75, topology=topo)
+        for w in range(3):
+            fab.push(w, g[w])
+        fab.push(3, g[3])  # stale: dropped at the PS, core already spent
+        assert fab.stats.late_pushes_dropped == 1
+        assert fab.stats.bytes_core_link == 4 * stream
+
+
+def test_stale_drop_matches_documented_average():
+    """The round-2 update must average only the fresh quorum gradients —
+    the old buggy path folded the stale leftover in as a fresh push."""
+    params, _, grad_fn = quad_setup()
+    space = build_space(params)
+    fab = PBoxFabric(space, sgd(0.5), space.flatten(params), num_shards=1,
+                     num_workers=K, min_push_fraction=0.75)
+    g = [space.flatten(grad_fn(params, w)) for w in range(K)]
+    for w in range(3):
+        fab.push(w, g[w])
+    p1 = jnp.asarray(fab.params)
+    fab.push(3, g[3])  # stale: dropped
+    # round 2: fresh gradients from workers 1, 2, 3 (pulled at p1)
+    p1_tree = space.unflatten(p1)
+    g2 = [space.flatten(grad_fn(p1_tree, w)) for w in range(K)]
+    for w in (1, 2, 3):
+        fab.pull(w)
+        fab.push(w, g2[w])
+    assert fab.stats.steps == 2
+    expect = p1 - 0.5 * (g2[1] + g2[2] + g2[3]) / 3.0
+    np.testing.assert_allclose(np.asarray(fab.params), np.asarray(expect),
+                               rtol=1e-6, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# restore semantics: worker clocks travel with the snapshot
+# ---------------------------------------------------------------------------
+def test_restore_resets_worker_clock():
+    params, _, grad_fn = quad_setup()
+    space = build_space(params)
+    fab = run_fabric(space, params, grad_fn, num_shards=2, steps=3)
+    snap = fab.snapshot()
+    np.testing.assert_array_equal(snap["worker_clock"], [3] * K)
+    # keep training past the snapshot: clocks advance to 5
+    h = WorkerHarness(fab, grad_fn, lambda w, s: w)
+    h.run(2)
+    assert (fab.worker_clock == 5).all()
+    # the regression: restoring to step 3 must rewind the clocks too —
+    # otherwise SSP admission runs on pre-restore clocks (and with quorum
+    # drop semantics, future pushes would be judged against wrong rounds)
+    fab.restore(snap)
+    assert fab.step == 3
+    assert (fab.worker_clock == 3).all()
+    # legacy snapshot without the key: clocks reset to the restored step
+    legacy = {k: v for k, v in snap.items() if k != "worker_clock"}
+    fab.restore(legacy)
+    assert (fab.worker_clock == 3).all()
+
+
+def test_restore_into_fresh_fabric_trains_identically():
+    params, _, grad_fn = quad_setup()
+    space = build_space(params)
+    ref = run_fabric(space, params, grad_fn, num_shards=1, steps=3,
+                     spec=adamw(3e-3))
+    snap = ref.snapshot()
+    fab = PBoxFabric(space, adamw(3e-3), space.flatten(params), num_shards=4,
+                     num_workers=K,
+                     topology=NetworkTopology(num_workers=K, num_racks=2))
+    fab.restore(snap)
+    assert (fab.worker_clock == 3).all()
+    h1 = WorkerHarness(ref, grad_fn, lambda w, s: w)
+    h1.run(2)
+    h2 = WorkerHarness(fab, grad_fn, lambda w, s: w)
+    h2.run(2)
+    np.testing.assert_array_equal(np.asarray(ref.params),
+                                  np.asarray(fab.params))
+
+
+def test_elastic_restore_shrink_grow_keeps_worker_clock():
+    """Elastic shrink/grow: worker_clock passes through elastic_restore
+    untouched; PBoxFabric.restore resets clocks when the worker count
+    changed (every survivor resumes at the restored step)."""
+    params, _, grad_fn = quad_setup()
+    space = build_space(params)
+    fab = run_fabric(space, params, grad_fn, num_shards=2, steps=3)
+    snap = fab.snapshot()
+    out, new_space = elastic_restore(snap, space, new_owners=2)
+    np.testing.assert_array_equal(out["worker_clock"], snap["worker_clock"])
+    assert out["step"] == 3
+    # shrink to 2 workers: clocks reset to the restored step
+    shrunk = PBoxFabric(new_space, momentum(0.05, 0.9),
+                        jnp.asarray(out["params"]), num_shards=2,
+                        num_workers=2)
+    shrunk.restore(out)
+    assert shrunk.worker_clock.shape == (2,)
+    assert (shrunk.worker_clock == 3).all()
+    # grow to 8 workers: same rule
+    grown = PBoxFabric(new_space, momentum(0.05, 0.9),
+                       jnp.asarray(out["params"]), num_shards=2,
+                       num_workers=8,
+                       topology=NetworkTopology(num_workers=8, num_racks=2))
+    grown.restore(out)
+    assert (grown.worker_clock == 3).all()
+    # and the restored fabrics admit pushes immediately (no stale-drop trap)
+    g = jnp.zeros((new_space.flat_elems,))
+    shrunk.push(0, g)
+    shrunk.push(1, g)
+    assert shrunk.stats.late_pushes_dropped == 0
+    assert shrunk.step == 4  # one aggregation past the restored round
+
+
+def test_elastic_restore_stateless_optimizer():
+    """sgd has no optimizer slots: the empty state tuple must survive
+    elastic_restore as an empty tuple (regression: it was zero-padded into
+    a bogus flat array that crashed PBoxFabric.restore)."""
+    params, _, grad_fn = quad_setup()
+    space = build_space(params)
+    fab = run_fabric(space, params, grad_fn, num_shards=2, steps=2,
+                     spec=sgd(0.01))
+    snap = fab.snapshot()
+    assert snap["state"] == ()
+    out, new_space = elastic_restore(snap, space, new_owners=2)
+    assert out["state"] == ()
+    fab2 = PBoxFabric(new_space, sgd(0.01), jnp.asarray(out["params"]),
+                      num_shards=2, num_workers=2)
+    fab2.restore(out)
+    assert fab2.step == 2
+
+
+def test_all_stale_quorum_halt_fails_loudly():
+    """A quorum-mode driver that never re-pulls would silently drop every
+    push forever; the fabric must raise instead once every worker's latest
+    push is stale and nobody has pulled since the round."""
+    params, _, grad_fn = quad_setup()
+    space = build_space(params)
+    fab = PBoxFabric(space, sgd(0.01), space.flatten(params), num_shards=2,
+                     num_workers=K, min_push_fraction=0.75)
+    g = [space.flatten(grad_fn(params, w)) for w in range(K)]
+    for w in range(3):
+        fab.push(w, g[w])  # round 1 fires
+    with pytest.raises(RuntimeError, match="superseded"):
+        for _ in range(2):  # push-only loop: all stale, no pulls
+            for w in range(K):
+                fab.push(w, g[w])
+    # one pull resets liveness: fresh gradients flow again
+    cur = space.unflatten(fab.pull(0))
+    fab.push(0, space.flatten(grad_fn(cur, 0)))
+    assert len(fab._inbox) == 1
+
+
+def test_reshard_flat_validates_old_owners():
+    chunk = TILE_ELEMS
+    flat = np.zeros((4 * chunk,), np.float32)
+    with pytest.raises(ValueError):
+        reshard_flat(flat, old_owners=3, new_owners=2, chunk_elems=chunk)
+    out = reshard_flat(flat, old_owners=2, new_owners=3, chunk_elems=chunk)
+    assert out.shape[0] == 6 * chunk  # padded up to tile over 3 owners
+
+
+# ---------------------------------------------------------------------------
+# harness rack assignment + SPMD telemetry topology tier
+# ---------------------------------------------------------------------------
+def test_harness_rack_assignment_and_rack_speed():
+    params, _, grad_fn = quad_setup()
+    space = build_space(params)
+    topo = NetworkTopology(num_workers=K, num_racks=2)
+    fab = PBoxFabric(space, sgd(0.01), space.flatten(params), num_shards=2,
+                     num_workers=K, topology=topo)
+    h = WorkerHarness(fab, grad_fn, lambda w, s: w, speed_by_rack={1: 3})
+    assert [h.rack_of(w) for w in range(K)] == [0, 0, 1, 1]
+    assert h.speed == [1, 1, 3, 3]
+    h.run(2)
+    by_rack = h.steps_done_by_rack()
+    assert set(by_rack) == {0, 1}
+    assert by_rack[0] >= by_rack[1] == sum(h.steps_done[2:])
+    with pytest.raises(ValueError):
+        WorkerHarness(run_fabric(space, params, grad_fn, num_shards=1,
+                                 steps=1),
+                      grad_fn, lambda w, s: w, speed_by_rack={0: 2})
+    with pytest.raises(ValueError):  # typo'd rack id must not pass silently
+        WorkerHarness(fab, grad_fn, lambda w, s: w, speed_by_rack={7: 2})
+
+
+def test_trainer_telemetry_topology_tier():
+    import types
+
+    from repro.core.exchange import ExchangeConfig, PSExchange
+    from repro.core.fabric import ServerStats
+    from repro.runtime.trainer import attach_telemetry
+
+    params, _, _ = quad_setup()
+    space = build_space(params)
+    ex = PSExchange(momentum(0.1, 0.9), ExchangeConfig("pbox"), ("data",))
+    mesh = types.SimpleNamespace(shape={"data": 4})
+    topo = NetworkTopology(num_workers=4, num_racks=2)
+    stats = ServerStats()
+    step = attach_telemetry(lambda *a: "out", ex, space, mesh, stats,
+                            topology=topo)
+    for _ in range(2):
+        assert step("x") == "out"
+    stream = wire_bytes(ex.cfg.compression, space.flat_elems)
+    assert stats.bytes_rack_link == 2 * 4 * stream
+    assert stats.bytes_core_link == 2 * topo.num_racks * stream
+    # a topology sized for a different worker count is rejected up front
+    with pytest.raises(ValueError):
+        attach_telemetry(lambda *a: "out", ex, space, mesh, stats,
+                         topology=NetworkTopology(num_workers=8, num_racks=2))
