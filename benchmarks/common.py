@@ -21,5 +21,34 @@ def time_call(fn, *args, iters: int = 5, warmup: int = 2) -> float:
     return times[len(times) // 2] * 1e6
 
 
+# rows emitted since the last drain — benchmarks/run.py --json collects
+# them per bench module so the regression gate (scripts/bench_gate.py) sees
+# exactly what the CSV shows
+_ROWS: list[dict] = []
+
+
 def emit(name: str, us: float, derived: str = "") -> None:
     print(f"{name},{us:.1f},{derived}")
+    _ROWS.append({"name": name, "us_per_call": float(us), "derived": derived})
+
+
+def drain_rows() -> list[dict]:
+    """Return (and clear) the rows emitted since the last drain."""
+    rows = list(_ROWS)
+    _ROWS.clear()
+    return rows
+
+
+def parse_derived(derived: str) -> dict[str, float | str]:
+    """Parse an ``emit`` derived column (``k=v;k=v``) with numeric values
+    coerced to float — shared by the JSON writer and the bench gate."""
+    out: dict[str, float | str] = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        try:
+            out[k.strip()] = float(v)
+        except ValueError:
+            out[k.strip()] = v.strip()
+    return out

@@ -1,12 +1,15 @@
 """Benchmark harness: one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows; ``--json out.json``
+additionally writes the same rows (derived columns parsed) per bench for
+the regression gate (scripts/bench_gate.py vs BENCH_baseline.json).
 
-  PYTHONPATH=src python -m benchmarks.run [--only fig3,...]
+  PYTHONPATH=src python -m benchmarks.run [--only fig3,...] [--json out.json]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
@@ -14,14 +17,19 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma list of bench names")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write per-bench rows (us_per_call + parsed "
+                         "derived columns) as JSON")
     args = ap.parse_args()
 
     from benchmarks import (
+        common,
         fig1b_comm_fraction,
         fig3_speedup,
         fig4_zero_compute,
         fig5_hierarchical,
         kernel_micro,
+        multi_job,
         table1_frameworks,
         topo_rack_codec,
     )
@@ -34,19 +42,45 @@ def main() -> None:
         "fig5": fig5_hierarchical.run,
         "kernel": kernel_micro.run,
         "topo": topo_rack_codec.run,
+        "multijob": multi_job.run,
     }
     only = set(args.only.split(",")) if args.only else None
+    if only:
+        unknown = sorted(only - set(benches))
+        if unknown:
+            # running zero benches and exiting 0 would green-light a typo'd
+            # CI invocation — fail loudly with the registry instead
+            print(
+                f"unknown bench name(s): {', '.join(unknown)}; registered: "
+                f"{', '.join(sorted(benches))}",
+                file=sys.stderr,
+            )
+            sys.exit(2)
     print("name,us_per_call,derived")
+    results: dict[str, dict] = {}
     failed = 0
     for name, fn in benches.items():
         if only and name not in only:
             continue
+        common.drain_rows()
+        ok = True
         try:
             fn()
         except Exception:  # noqa: BLE001
             failed += 1
+            ok = False
             print(f"{name}/FAILED,0,{traceback.format_exc(limit=1)!r}",
                   file=sys.stderr)
+        rows = [
+            {**row, "derived": common.parse_derived(row["derived"])}
+            for row in common.drain_rows()
+        ]
+        results[name] = {"ok": ok, "rows": rows}
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"schema": 1, "benches": results}, f, indent=2,
+                      sort_keys=True)
+            f.write("\n")
     sys.exit(1 if failed else 0)
 
 

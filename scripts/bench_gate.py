@@ -1,0 +1,163 @@
+#!/usr/bin/env python
+"""Benchmark-regression gate: compare a ``benchmarks.run --json`` output
+against the committed baseline (BENCH_baseline.json).
+
+The gated benches (topo, multijob) report *simulated* event-clock numbers
+and exact codec byte accounting — deterministic across hosts — so the gate
+can be tight without flaking on shared CI runners.  Wall-clock benches can
+join the baseline later with a wider ``--tolerance``.
+
+Rules, per baseline row:
+  * the row must still exist in the current run (a silently vanished bench
+    is a regression of coverage);
+  * its bench module must have run green;
+  * ``us_per_call`` may not exceed baseline * (1 + tolerance) — getting
+    *faster* passes (prints a note so baselines get refreshed);
+  * numeric derived columns must stay within ``--derived-tolerance``
+    relatively (they encode invariants like core-link bytes and fair-share
+    inflation, not noise).
+
+Rows new in the current run are reported but never fail the gate; commit a
+refreshed baseline (``--update``) to start gating them.
+
+Usage:
+  python -m benchmarks.run --only topo,multijob --json out.json
+  python scripts/bench_gate.py out.json [--baseline BENCH_baseline.json]
+      [--tolerance 0.15] [--derived-tolerance 0.01] [--update]
+
+Exit codes: 0 pass, 1 regression, 2 bad invocation/inputs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+
+DEFAULT_BASELINE = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_baseline.json",
+)
+
+
+def load(path: str) -> dict:
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench-gate: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+    if doc.get("schema") != 1 or "benches" not in doc:
+        print(f"bench-gate: {path} is not a benchmarks.run --json file",
+              file=sys.stderr)
+        sys.exit(2)
+    return doc
+
+
+def index_rows(doc: dict) -> dict[str, dict]:
+    out = {}
+    for bench, payload in doc["benches"].items():
+        for row in payload.get("rows", []):
+            out[row["name"]] = {**row, "bench": bench,
+                                "ok": payload.get("ok", True)}
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="JSON from benchmarks.run --json")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--tolerance", type=float, default=0.15,
+                    help="allowed relative us_per_call regression")
+    ap.add_argument("--derived-tolerance", type=float, default=0.01,
+                    help="allowed relative drift of numeric derived columns")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from the current run")
+    args = ap.parse_args()
+
+    cur_doc = load(args.current)
+    if args.update:
+        # refuse to bake a broken run into the baseline: a bench that
+        # failed (or emitted nothing) would silently shrink gate coverage
+        bad = sorted(
+            name for name, payload in cur_doc["benches"].items()
+            if not payload.get("ok", True) or not payload.get("rows")
+        )
+        if bad:
+            print(
+                "bench-gate: refusing --update, these benches failed or "
+                f"emitted no rows: {', '.join(bad)}", file=sys.stderr)
+            return 2
+        with open(args.baseline, "w") as f:
+            json.dump(cur_doc, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"bench-gate: baseline updated -> {args.baseline}")
+        return 0
+
+    base = index_rows(load(args.baseline))
+    cur = index_rows(cur_doc)
+    if not base:
+        print("bench-gate: baseline has no rows", file=sys.stderr)
+        return 2
+
+    failures: list[str] = []
+    notes: list[str] = []
+    for name, b in sorted(base.items()):
+        c = cur.get(name)
+        if c is None:
+            failures.append(f"{name}: present in baseline but missing from "
+                            "the current run")
+            continue
+        if not c["ok"]:
+            failures.append(f"{name}: bench module {c['bench']!r} failed")
+            continue
+        b_us, c_us = b["us_per_call"], c["us_per_call"]
+        if not math.isfinite(c_us):
+            # NaN/inf compares False against everything — without this
+            # guard a corrupted metric would sail through the gate
+            failures.append(f"{name}: us_per_call is {c_us!r}")
+        elif c_us > b_us * (1.0 + args.tolerance):
+            failures.append(
+                f"{name}: us_per_call {c_us:.2f} regressed past "
+                f"{b_us:.2f} * (1+{args.tolerance:g})")
+        elif b_us > 0 and c_us < b_us * (1.0 - args.tolerance):
+            notes.append(f"{name}: faster than baseline "
+                         f"({c_us:.2f} vs {b_us:.2f}) — consider --update")
+        for key, bv in b.get("derived", {}).items():
+            cv = c.get("derived", {}).get(key)
+            if cv is None:
+                failures.append(f"{name}: derived column {key!r} vanished")
+                continue
+            if isinstance(bv, (int, float)) and isinstance(cv, (int, float)):
+                if not math.isfinite(cv):
+                    failures.append(f"{name}: derived {key} is {cv!r}")
+                    continue
+                denom = max(abs(bv), 1e-12)
+                if abs(cv - bv) / denom > args.derived_tolerance:
+                    failures.append(
+                        f"{name}: derived {key}={cv} drifted from {bv} "
+                        f"(> {args.derived_tolerance:g} rel)")
+            elif cv != bv:
+                failures.append(
+                    f"{name}: derived {key}={cv!r} != baseline {bv!r}")
+    new = sorted(set(cur) - set(base))
+    if new:
+        notes.append(f"{len(new)} row(s) not in baseline (not gated): "
+                     + ", ".join(new[:5]) + ("..." if len(new) > 5 else ""))
+
+    for n in notes:
+        print(f"bench-gate note: {n}")
+    if failures:
+        for f_ in failures:
+            print(f"bench-gate FAIL: {f_}", file=sys.stderr)
+        print(f"bench-gate: {len(failures)} regression(s) vs {args.baseline}",
+              file=sys.stderr)
+        return 1
+    print(f"bench-gate: {len(base)} row(s) within tolerance "
+          f"(us {args.tolerance:g}, derived {args.derived_tolerance:g})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,8 +11,9 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
 python -m pytest -x -q "$@"
 
-# smoke the topology benchmark: its derived-column invariants (core-link
-# bytes shrink 1/workers-per-rack, int8 a further ~4x, codec-"none"
-# bit-identity) are asserted inside and fail the run if violated
-python -m benchmarks.run --only topo >/dev/null
+# smoke the topology + multi-tenant benchmarks: their derived-column
+# invariants (core-link bytes shrink 1/workers-per-rack, int8 a further
+# ~4x, codec-"none" bit-identity; tenant isolation + priority fairness)
+# are asserted inside and fail the run if violated
+python -m benchmarks.run --only topo,multijob >/dev/null
 

@@ -47,6 +47,13 @@ version is dropped at admission (counted in
 ``ServerStats.late_pushes_dropped``), matching the documented policy in
 runtime/straggler.py — stale gradients never contaminate the next round's
 quorum, while a straggler that re-pulls contributes its fresh gradients.
+
+Multi-tenancy (core/tenancy.py): a ``MultiJobFabric`` runs many jobs'
+fabrics over one shared shard set and wire — ``namespace``/``chunk_base``
+place this fabric's chunks in the box-wide namespace, and ``shared_clock``
+inflates its wire stages for co-tenant contention (weighted fair sharing).
+Both hooks are timing/metadata only: a tenant's training stays
+bit-identical to a dedicated fabric.
 """
 from __future__ import annotations
 
@@ -298,6 +305,9 @@ class PBoxFabric:
         placement: str = "contiguous",  # | "round_robin"
         topology: NetworkTopology | None = None,
         compression: CompressionConfig | None = None,
+        namespace: str | None = None,
+        chunk_base: int = 0,
+        shared_clock: Any | None = None,
     ):
         if mode not in ("sync", "async", "stale"):
             raise ValueError(f"unknown mode {mode}")
@@ -322,6 +332,17 @@ class PBoxFabric:
         self.use_pallas = use_pallas
         self.link = link or LinkModel()
         self.topology = topology
+        # multi-tenant hooks (core/tenancy.py): ``namespace``/``chunk_base``
+        # place this fabric's chunk space inside a fabric-wide namespace
+        # (global chunk id = chunk_base + local id); ``shared_clock`` lets a
+        # MultiJobFabric inflate this job's wire stages for co-tenant
+        # contention.  Both only affect routing metadata and the event
+        # clock — numerics stay those of a dedicated fabric by construction.
+        if chunk_base < 0:
+            raise ValueError("chunk_base must be >= 0")
+        self.namespace = namespace
+        self.chunk_base = chunk_base
+        self.shared_clock = shared_clock
         # codec chunks align with PS chunks so per-chunk scales ride the
         # same wire framing
         self.compression = dataclasses.replace(
@@ -633,11 +654,22 @@ class PBoxFabric:
         link (codec-scaled ``wire_us_per_chunk``) feeds the ToR, then the
         oversubscribed core link relays each chunk onward (``streams``
         concurrent streams share a rack's uplink — 1 with ToR aggregation,
-        the rack population without)."""
+        the rack population without).
+
+        With a ``shared_clock`` attached (multi-tenant fabric), both wire
+        stages are inflated by the clock's fair-share scales before the
+        replay, and the round's link occupancy is reported back so the
+        shared per-link queues stay in sync."""
+        rack_scale = core_scale = 1.0
+        if self.shared_clock is not None:
+            rack_scale, core_scale = self.shared_clock.wire_scales(self)
+            if rack_scale < 1.0 or core_scale < 1.0:
+                raise ValueError(
+                    "shared-clock scales cannot beat a dedicated link")
         bpe_scale = wire_bytes(self.compression, self.space.chunk_elems) / (
             4.0 * self.space.chunk_elems
         )
-        wire = self.link.wire_us_per_chunk * bpe_scale
+        wire = self.link.wire_us_per_chunk * bpe_scale * rack_scale
         agg = self.link.agg_us_per_chunk
         c = self.space.num_chunks
         idx = np.arange(c, dtype=np.float64)
@@ -645,7 +677,10 @@ class PBoxFabric:
         if self.topology is not None:
             share = (1.0 if streams is None
                      else max(1.0, streams / self.topology.num_racks))
-            core = wire * self.topology.oversubscription * share
+            # rack_scale already rode in on ``wire``; apply only the extra
+            # core-tier contention on top
+            core = (wire * self.topology.oversubscription * share
+                    * (core_scale / rack_scale))
             edge_done = (idx + 1.0) * wire
             # two-stage pipeline: the core relays chunk i while chunk i+1
             # still crosses the rack link
@@ -669,6 +704,15 @@ class PBoxFabric:
         self.stats.sim_agg_us += c * agg
         self.stats.sim_pipelined_us += makespan
         self.stats.sim_serialized_us += c * wire + c * core + c * agg
+        if self.shared_clock is not None:
+            self.shared_clock.record_round(
+                self,
+                rack_us=c * wire,
+                core_us=c * core,
+                rack_demand_us=c * wire / rack_scale,
+                core_demand_us=c * core / core_scale,
+                makespan_us=makespan,
+            )
 
     # -- rebalancing hook -------------------------------------------------
     def rebalance(self, slow_shards: Sequence[int]) -> int:
@@ -768,9 +812,20 @@ class PBoxFabric:
         """Rack hosting ``worker`` (0 when no topology is attached)."""
         return self.topology.rack_of[worker] if self.topology else 0
 
+    def global_chunk_ids(self, local_ids: np.ndarray | None = None) -> np.ndarray:
+        """Map local chunk ids into the fabric-wide namespace
+        (``chunk_base`` offset; identity on a dedicated fabric)."""
+        if local_ids is None:
+            local_ids = np.arange(self.space.num_chunks)
+        ids = np.asarray(local_ids, dtype=np.int64)
+        if ids.size and (ids.min() < 0 or ids.max() >= self.space.num_chunks):
+            raise ValueError("local chunk id out of range")
+        return ids + self.chunk_base
+
     def describe(self) -> str:
         lines = [
-            f"PBoxFabric: {self.num_shards} shards x "
+            (f"[{self.namespace}] " if self.namespace else "")
+            + f"PBoxFabric: {self.num_shards} shards x "
             f"{self.space.num_chunks} chunks ({self.space.chunk_elems} elems), "
             f"mode={self.mode}, workers={self.num_workers}, "
             f"codec={self.compression.codec}"
@@ -796,7 +851,9 @@ class PBoxFabric:
 # worker harness
 # ---------------------------------------------------------------------------
 class WorkerHarness:
-    """Drives K logical workers against a PBoxFabric.
+    """Drives K logical workers against a PBoxFabric (or a tenancy
+    ``JobHandle``, which exposes the same worker API — the harness is how
+    one tenant's workers drive the shared box).
 
     ``grad_fn(params_tree, batch) -> grad_tree`` is the worker compute;
     ``speed[w]`` scales how many scheduler ticks worker w needs per step
@@ -845,6 +902,27 @@ class WorkerHarness:
 
     def rack_of(self, worker: int) -> int:
         return self.server.rack_of(worker)
+
+    @property
+    def job(self) -> str | None:
+        """Tenant namespace this harness drives (None on a dedicated
+        fabric)."""
+        return getattr(self.server, "namespace", None)
+
+    def telemetry(self) -> dict:
+        """Job-level progress snapshot: worker steps, simulated per-round
+        time (what co-tenancy inflates), and wire totals."""
+        s = self.server.stats
+        return {
+            "job": self.job,
+            "worker_steps": list(self.steps_done),
+            "server_steps": s.steps,
+            "sim_step_us": s.sim_pipelined_us / max(1, s.steps),
+            "sim_core_wire_us": s.sim_core_wire_us,
+            "bytes_pushed": s.bytes_pushed,
+            "bytes_pulled": s.bytes_pulled,
+            "steps_done_by_rack": self.steps_done_by_rack(),
+        }
 
     def steps_done_by_rack(self) -> dict[int, int]:
         """Total completed worker-steps per rack (rack 0 holds everyone

@@ -1,0 +1,402 @@
+"""Multi-tenant PBox: concurrent training jobs on one shared fabric.
+
+The paper positions PBox as *shared central PS hardware*: a balanced
+rack-scale box that many tenants' jobs drive at line rate (PHub,
+arXiv:1805.07891, makes this explicit as a rack-scale PS service).  This
+module adds that layer on top of the chunk-sharded fabric:
+
+  ``JobSpec``        one tenant's job: model, optimizer, worker set,
+                     priority weight, wire codec, admission mode.
+  ``JobHandle``      the tenant's view of the shared fabric — exposes the
+                     PBoxFabric worker API (pull/push/push_chunks), so a
+                     WorkerHarness drives it unchanged, plus job-level
+                     telemetry (per-job ``ServerStats``, simulated step
+                     time).
+  ``MultiJobFabric`` the shared box: one shard set, one physical wire.
+                     Each attached job's chunk space is mapped into a
+                     per-job *namespace* on the shared shards (global
+                     chunk id = job's ``chunk_base`` + local id; shard s
+                     holds every job's shard-s slab), and all jobs'
+                     rack-link/core-link transfers are scheduled on one
+                     shared event clock with weighted fair sharing.
+
+Fair sharing: while ``J`` jobs are attached, job ``j``'s wire stages are
+inflated by ``scale_j = sum_i(priority_i) / priority_j`` — the fluid-flow
+limit of weighted fair queueing — floored at ``1 / bandwidth_cap_j`` when
+the job is capped.  Every transfer is also booked on the per-link
+``LinkQueue``s (one per physical rack edge link + one core uplink,
+core/topology.py), so co-tenants inflate each other's ``sim_core_wire_us``
+and the queues expose fabric-wide utilization.
+
+Isolation invariant (load-bearing, tests/test_tenancy.py): contention is
+*timing only*.  A job's sync training on the shared fabric is bit-identical
+to the same job running alone on a dedicated fabric at any co-tenant
+count, shard count, and rack layout — each job's pushes are aggregated by
+its own admission state over its own namespace; nothing numeric crosses
+job boundaries.
+
+Attach/detach at runtime reuses the elastic snapshot/restore machinery
+(runtime/elastic.py): ``detach`` returns a snapshot, ``attach(snapshot=)``
+restores it — re-targeting the flat state through ``elastic_restore`` when
+the new shard count re-pads the chunk space.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from repro.core.chunking import DEFAULT_CHUNK_ELEMS, ParamSpace
+from repro.core.compression import CompressionConfig
+from repro.core.fabric import LinkModel, PBoxFabric, ServerStats
+from repro.core.topology import LinkQueue, NetworkTopology
+from repro.optim.optimizers import OptimizerSpec
+from repro.runtime.elastic import elastic_restore
+
+
+@dataclasses.dataclass(frozen=True)
+class JobSpec:
+    """One tenant job's static description.
+
+    ``priority`` is the weighted-fair-share weight (2.0 gets twice the
+    wire of 1.0 under contention); ``bandwidth_cap`` optionally caps the
+    job at that fraction of each shared link even when the fabric is
+    otherwise idle (cloud tenancy's rate limiter)."""
+
+    name: str
+    params: Any  # model parameter pytree (the job's initial state)
+    optimizer: OptimizerSpec
+    num_workers: int
+    priority: float = 1.0
+    bandwidth_cap: float | None = None  # fraction of each link in (0, 1]
+    codec: str = "none"  # "none" | "bf16" | "int8"
+    mode: str = "sync"  # "sync" | "async" | "stale"
+    staleness: int = 0
+    min_push_fraction: float = 1.0
+    chunk_elems: int = DEFAULT_CHUNK_ELEMS
+
+    def __post_init__(self):
+        if not self.name:
+            raise ValueError("job needs a non-empty name")
+        if self.num_workers < 1:
+            raise ValueError("num_workers must be >= 1")
+        if self.priority <= 0.0:
+            raise ValueError("priority must be > 0")
+        if self.bandwidth_cap is not None and not 0.0 < self.bandwidth_cap <= 1.0:
+            raise ValueError("bandwidth_cap must be in (0, 1]")
+
+
+class JobHandle:
+    """One tenant's live view of the shared fabric.
+
+    Quacks like the job's dedicated ``PBoxFabric`` (attribute access
+    delegates), so ``WorkerHarness(handle, ...)`` works unchanged; adds
+    the job-level telemetry the tenancy layer owns."""
+
+    def __init__(self, spec: JobSpec, fabric: PBoxFabric, chunk_base: int):
+        self.spec = spec
+        self.fabric = fabric
+        self.chunk_base = chunk_base
+        self.detached = False
+
+    # -- delegation: the PBoxFabric worker API ---------------------------
+    def __getattr__(self, item):
+        return getattr(self.fabric, item)
+
+    @property
+    def name(self) -> str:
+        return self.spec.name
+
+    @property
+    def stats(self) -> ServerStats:
+        """This job's own ServerStats (never mixed with co-tenants')."""
+        return self.fabric.stats
+
+    # -- namespace -------------------------------------------------------
+    def global_chunks(self) -> np.ndarray:
+        """This job's chunk ids in the fabric-wide namespace."""
+        return self.fabric.global_chunk_ids()
+
+    # -- telemetry -------------------------------------------------------
+    def sim_step_time_us(self) -> float:
+        """Simulated pipelined time per aggregation round — the number
+        co-tenancy inflates (tests assert priority ordering on it)."""
+        s = self.fabric.stats
+        return s.sim_pipelined_us / max(1, s.steps)
+
+    def telemetry(self) -> dict:
+        s = self.fabric.stats
+        return {
+            "job": self.spec.name,
+            "priority": self.spec.priority,
+            "steps": s.steps,
+            "sim_step_us": self.sim_step_time_us(),
+            "sim_core_wire_us": s.sim_core_wire_us,
+            "bytes_pushed": s.bytes_pushed,
+            "bytes_pulled": s.bytes_pulled,
+            "late_pushes_dropped": s.late_pushes_dropped,
+            "detached": self.detached,
+        }
+
+
+def _build_fabric(
+    spec: JobSpec,
+    *,
+    num_shards: int,
+    num_racks: int,
+    oversubscription: float,
+    link: LinkModel,
+    use_pallas: bool,
+    namespace: str | None = None,
+    chunk_base: int = 0,
+    shared_clock: Any | None = None,
+) -> PBoxFabric:
+    """One construction path for a job's fabric — used by BOTH the shared
+    box (``MultiJobFabric.attach``) and its dedicated counterfactual
+    (``dedicated_fabric``), so the bit-identity comparison can never
+    silently drift onto differently-configured twins."""
+    space = ParamSpace.build(
+        spec.params, chunk_elems=spec.chunk_elems, num_owners=num_shards)
+    topology = None
+    if num_racks > 1 and spec.num_workers > 1:
+        topology = NetworkTopology(
+            num_workers=spec.num_workers,
+            num_racks=min(num_racks, spec.num_workers),
+            oversubscription=oversubscription,
+        )
+    return PBoxFabric(
+        space,
+        spec.optimizer,
+        space.flatten(spec.params),
+        num_shards=num_shards,
+        mode=spec.mode,
+        staleness=spec.staleness,
+        num_workers=spec.num_workers,
+        min_push_fraction=spec.min_push_fraction,
+        use_pallas=use_pallas,
+        link=link,
+        topology=topology,
+        compression=CompressionConfig(codec=spec.codec),
+        namespace=namespace,
+        chunk_base=chunk_base,
+        shared_clock=shared_clock,
+    )
+
+
+class MultiJobFabric:
+    """The shared PBox: one balanced shard set, one physical wire, many
+    tenant jobs.
+
+    Each job gets its own ``PBoxFabric`` control plane (admission state,
+    per-job ``ServerStats``) whose chunk space is namespaced onto the
+    *shared* shard set — shard ``s`` of the box holds every job's shard-s
+    slab, and global chunk ids are disjoint across jobs.  All jobs share
+    the event clock: wire stages are inflated by weighted fair sharing
+    (see module docstring) and booked on per-link ``LinkQueue``s.
+    """
+
+    def __init__(
+        self,
+        *,
+        num_shards: int = 1,
+        num_racks: int = 1,
+        oversubscription: float = 4.0,
+        link: LinkModel | None = None,
+        use_pallas: bool = True,
+    ):
+        if num_shards < 1:
+            raise ValueError("num_shards must be >= 1")
+        if num_racks < 1:
+            raise ValueError("num_racks must be >= 1")
+        self.num_shards = num_shards
+        self.num_racks = num_racks
+        self.oversubscription = oversubscription
+        self.link = link or LinkModel()
+        self.use_pallas = use_pallas
+        self.jobs: dict[str, JobHandle] = {}
+        self._next_chunk_base = 0
+        self.links: dict[str, LinkQueue] = {
+            **{f"rack{r}": LinkQueue(f"rack{r}") for r in range(num_racks)},
+            "core": LinkQueue("core"),
+        }
+        self.rounds = 0  # aggregation rounds across all tenants
+
+    # -- tenancy lifecycle ----------------------------------------------
+    def attach(
+        self,
+        spec: JobSpec,
+        *,
+        snapshot: dict | None = None,
+        snapshot_space: ParamSpace | None = None,
+    ) -> JobHandle:
+        """Admit a job onto the shared box.
+
+        ``snapshot``/``snapshot_space`` resume a previously detached job:
+        the flat state is re-targeted through ``runtime/elastic`` when
+        this box's shard count re-pads the chunk space differently from
+        the box the snapshot was taken on."""
+        if spec.name in self.jobs:
+            raise ValueError(f"job {spec.name!r} is already attached")
+        fabric = _build_fabric(
+            spec,
+            num_shards=self.num_shards,
+            num_racks=self.num_racks,
+            oversubscription=self.oversubscription,
+            link=self.link,
+            use_pallas=self.use_pallas,
+            namespace=spec.name,
+            chunk_base=self._next_chunk_base,
+            shared_clock=self,
+        )
+        space = fabric.space
+        handle = JobHandle(spec, fabric, self._next_chunk_base)
+        self._next_chunk_base += space.num_chunks
+        if snapshot is not None:
+            if (snapshot_space is not None
+                    and snapshot_space.flat_elems != space.flat_elems):
+                snapshot, _ = elastic_restore(
+                    dict(snapshot), snapshot_space, self.num_shards)
+            fabric.restore(snapshot)
+        self.jobs[spec.name] = handle
+        return handle
+
+    def detach(self, name: str) -> dict:
+        """Evict a job; returns its snapshot (params, optimizer state,
+        step, worker clocks) so ``attach(snapshot=...)`` resumes it — on
+        this box or another one (elastic re-target included)."""
+        if name not in self.jobs:
+            raise KeyError(f"job {name!r} is not attached")
+        handle = self.jobs.pop(name)
+        handle.detached = True
+        # a detached job no longer contends (and its handle, if still
+        # driven, behaves like a dedicated fabric)
+        handle.fabric.shared_clock = None
+        return handle.fabric.snapshot()
+
+    # -- shared event clock (PBoxFabric.shared_clock protocol) -----------
+    def wire_scales(self, fabric: PBoxFabric) -> tuple[float, float]:
+        """Fair-share inflation for one job's wire stages: total active
+        priority weight over the job's own, floored by its bandwidth cap.
+        Applied to both tiers — co-tenants contend for the rack edge links
+        and the core uplink alike."""
+        handle = self.jobs.get(fabric.namespace)
+        if handle is None:
+            raise KeyError(
+                f"fabric namespace {fabric.namespace!r} is not attached")
+        total = sum(h.spec.priority for h in self.jobs.values())
+        scale = total / handle.spec.priority
+        if handle.spec.bandwidth_cap is not None:
+            scale = max(scale, 1.0 / handle.spec.bandwidth_cap)
+        return scale, scale
+
+    def record_round(
+        self,
+        fabric: PBoxFabric,
+        *,
+        rack_us: float,
+        core_us: float,
+        rack_demand_us: float,
+        core_demand_us: float,
+        makespan_us: float,
+    ) -> None:
+        """Book one job round's link occupancy on the shared queues.
+
+        A job's racks run in parallel, so each physical rack link the job
+        occupies is busy for the whole (inflated) rack stage; the single
+        core uplink carries the core stage.  ``*_demand_us`` is what the
+        transfer would have taken alone — the queues' contention factor is
+        busy/demand."""
+        handle = self.jobs.get(fabric.namespace)
+        if handle is None:  # detached mid-flight: nothing to book
+            return
+        scale = rack_us / rack_demand_us if rack_demand_us > 0 else 1.0
+        racks = (fabric.topology.num_racks if fabric.topology is not None
+                 else 1)
+        for r in range(min(racks, self.num_racks)):
+            self.links[f"rack{r}"].reserve(
+                handle.name, rack_demand_us, scale)
+        if core_us > 0.0:
+            self.links["core"].reserve(
+                handle.name, core_demand_us,
+                core_us / core_demand_us if core_demand_us > 0 else 1.0)
+        self.rounds += 1
+
+    # -- fabric-wide views ----------------------------------------------
+    def aggregate_stats(self) -> ServerStats:
+        """Sum of every attached job's ServerStats (fabric-wide load)."""
+        out = ServerStats()
+        for h in self.jobs.values():
+            for f in dataclasses.fields(ServerStats):
+                setattr(out, f.name,
+                        getattr(out, f.name) + getattr(h.stats, f.name))
+        return out
+
+    def utilization(self) -> dict:
+        """Per-link occupancy: demand vs busy µs, contention factor, and
+        per-job shares — the fabric-wide view tenancy dashboards read."""
+        return {
+            name: {
+                "demand_us": q.stats.demand_us,
+                "busy_us": q.stats.busy_us,
+                "queued_us": q.stats.queued_us,
+                "contention_factor": q.stats.contention_factor,
+                "by_job": dict(q.stats.by_job),
+            }
+            for name, q in self.links.items()
+        }
+
+    def shard_occupancy(self) -> list[dict[str, int]]:
+        """Per shared shard: chunks held per job (the namespace map made
+        visible; every shard serves every tenant)."""
+        out: list[dict[str, int]] = [{} for _ in range(self.num_shards)]
+        for h in self.jobs.values():
+            for sid in range(self.num_shards):
+                n = int(np.sum(h.fabric.chunk_owner == sid))
+                if n:
+                    out[sid][h.name] = n
+        return out
+
+    def route(self, global_chunk: int) -> tuple[str, int]:
+        """Namespace routing: (job name, owning shard) for a fabric-wide
+        chunk id."""
+        for h in self.jobs.values():
+            local = global_chunk - h.chunk_base
+            if 0 <= local < h.fabric.space.num_chunks:
+                return h.name, int(h.fabric.chunk_owner[local])
+        raise KeyError(f"global chunk {global_chunk} is in no attached "
+                       "job's namespace")
+
+    def describe(self) -> str:
+        lines = [
+            f"MultiJobFabric: {self.num_shards} shards, {self.num_racks} "
+            f"racks (1:{self.oversubscription:g} core), "
+            f"{len(self.jobs)} jobs, {self.rounds} rounds"
+        ]
+        for h in self.jobs.values():
+            t = h.telemetry()
+            lines.append(
+                f"  job {h.name}: prio={h.spec.priority:g}, "
+                f"chunks [{h.chunk_base}, "
+                f"{h.chunk_base + h.fabric.space.num_chunks}), "
+                f"steps={t['steps']}, sim_step={t['sim_step_us']:.1f}us"
+            )
+        for q in self.links.values():
+            lines.append("  " + q.describe())
+        return "\n".join(lines)
+
+
+def dedicated_fabric(spec: JobSpec, box: MultiJobFabric) -> PBoxFabric:
+    """The job's counterfactual: the same job alone on a dedicated fabric
+    with the same shard count, rack layout, link and codec — the baseline
+    the isolation invariant (and tests/test_tenancy.py) compares against.
+    Built by the exact construction path ``attach`` uses, minus the
+    tenancy hooks."""
+    return _build_fabric(
+        spec,
+        num_shards=box.num_shards,
+        num_racks=box.num_racks,
+        oversubscription=box.oversubscription,
+        link=box.link,
+        use_pallas=box.use_pallas,
+    )

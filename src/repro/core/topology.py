@@ -9,7 +9,7 @@ streams *at the ToR* so only one stream per rack crosses the scarce core
 link, cutting cross-rack bytes by ~workers-per-rack (and, with the integer
 codec, a further ~4x).
 
-Two pieces:
+Three pieces:
 
   ``NetworkTopology``   the static layout: workers grouped into contiguous
                         racks, each with an oversubscribed core uplink.
@@ -17,6 +17,11 @@ Two pieces:
                         error-feedback for the edge-link codec, switch-side
                         error-feedback for the re-encoded upstream stream,
                         and per-rack wire accounting.
+  ``LinkQueue``         one *shared* physical link's weighted-fair queue —
+                        the multi-tenant tier (core/tenancy.py) hangs one
+                        off every rack edge link and the core uplink so
+                        co-tenant jobs' transfers inflate each other's
+                        wire time realistically.
 
 Determinism note (load-bearing — see PBoxFabric's bit-equality invariant):
 f32 addition is not associative, and a real switch adds packets in arrival
@@ -106,6 +111,72 @@ class NetworkTopology:
             f"racks {list(map(int, sizes))}, core 1:{self.oversubscription:g} "
             f"oversubscribed, ToR aggregation "
             f"{'on' if self.rack_aggregation else 'off'}"
+        )
+
+
+@dataclasses.dataclass
+class LinkStats:
+    """Occupancy accounting for one shared physical link."""
+
+    reservations: int = 0
+    demand_us: float = 0.0  # single-tenant time the transfers would take
+    busy_us: float = 0.0  # actual (fair-share inflated) occupancy
+    by_job: dict = dataclasses.field(default_factory=dict)  # job -> busy µs
+
+    @property
+    def queued_us(self) -> float:
+        """Contention-added time: how long transfers sat behind (or were
+        slowed by) co-tenants' traffic on this link."""
+        return self.busy_us - self.demand_us
+
+    @property
+    def contention_factor(self) -> float:
+        """busy/demand: 1.0 on an uncontended link, >1 under co-tenancy."""
+        if self.demand_us <= 0.0:
+            return 1.0
+        return self.busy_us / self.demand_us
+
+
+class LinkQueue:
+    """Weighted-fair queue on one shared physical link (a rack's edge link
+    or the core uplink).
+
+    The fabric's event clock is round-granular, not packet-granular, so the
+    queue models weighted fair sharing the way a fluid-flow simulator does:
+    a transfer that would take ``demand_us`` alone occupies the link for
+    ``demand_us * scale``, where ``scale`` is the reserving job's fair-share
+    inflation (total active priority weight over its own, floored by its
+    bandwidth cap — see tenancy.MultiJobFabric.wire_scales).  The queue is
+    the accounting authority: per-job occupancy, aggregate demand vs busy
+    time, and the contention factor benchmarks assert on."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.stats = LinkStats()
+
+    def reserve(self, job: str, demand_us: float, scale: float) -> float:
+        """Occupy the link for one job's transfer; returns the actual
+        (inflated) occupancy in µs."""
+        if demand_us < 0.0:
+            raise ValueError("demand_us must be >= 0")
+        if scale < 1.0:
+            raise ValueError("fair-share scale cannot beat a dedicated link")
+        actual = demand_us * scale
+        s = self.stats
+        s.reservations += 1
+        s.demand_us += demand_us
+        s.busy_us += actual
+        s.by_job[job] = s.by_job.get(job, 0.0) + actual
+        return actual
+
+    def describe(self) -> str:
+        s = self.stats
+        shares = ", ".join(
+            f"{j}={v:.0f}us" for j, v in sorted(s.by_job.items()))
+        return (
+            f"link {self.name}: busy {s.busy_us:.0f}us "
+            f"(demand {s.demand_us:.0f}us, x{s.contention_factor:.2f} "
+            f"contention) [{shares}]"
         )
 
 

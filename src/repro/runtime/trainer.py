@@ -79,8 +79,9 @@ def attach_telemetry(
     exchange: PSExchange,
     space: ParamSpace,
     mesh,
-    stats: ServerStats,
+    stats: ServerStats | None = None,
     topology=None,
+    job=None,
 ) -> Callable:
     """Wrap a jitted PS train step so every invocation records the modeled
     wire traffic into a fabric-style ``ServerStats``.
@@ -96,9 +97,18 @@ def attach_telemetry(
     rack link, while the oversubscribed core link carries one
     codec-compressed stream per rack when ToR aggregation is on (or every
     worker stream when it is off) — the same codec-exact byte model
-    (``compression.wire_bytes``) the fabric uses."""
+    (``compression.wire_bytes``) the fabric uses.
+
+    Pass a tenancy ``JobHandle`` as ``job`` to default ``stats`` and
+    ``topology`` from the job — the SPMD step's modeled traffic then lands
+    in that tenant's per-job ``ServerStats`` on the shared box."""
     from repro.core.compression import wire_bytes as _wire_bytes
 
+    if job is not None:
+        stats = job.stats if stats is None else stats
+        topology = job.topology if topology is None else topology
+    if stats is None:
+        raise ValueError("attach_telemetry needs stats= or job=")
     n_pod = mesh.shape[exchange.pod_axis] if exchange.pod_axis else 1
     n_workers = 1
     for a in exchange.worker_axes:

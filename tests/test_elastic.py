@@ -1,0 +1,161 @@
+"""Direct coverage of runtime/elastic.py restore paths.
+
+The operational claims: a checkpointed flat chunk state re-targets onto
+any owner count as a pure re-slice (grow pads zero chunks at the tail,
+shrink drops only padding), legacy snapshots without ``worker_clock``
+restore safely (clocks reset to the restored step), and a worker-count
+change across restore never leaves admission judging stale clocks.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.chunking import TILE_ELEMS, ParamSpace
+from repro.core.fabric import PBoxFabric, WorkerHarness
+from repro.optim.optimizers import adamw, momentum
+from repro.runtime.elastic import (
+    elastic_restore,
+    owner_slabs,
+    rebuild_space,
+    reshard_flat,
+)
+
+K = 4
+
+
+def setup(elems=3000):
+    params = {"w": jnp.zeros((elems,)), "b": jnp.zeros((40,))}
+    targets = [
+        {"w": jnp.full((elems,), float(i + 1)),
+         "b": jnp.arange(40.0) * (i + 1)}
+        for i in range(K)
+    ]
+
+    def grad_fn(p, batch):
+        import jax
+
+        return jax.tree.map(lambda a, b: 2 * (a - b), p, targets[batch])
+
+    space = ParamSpace.build(params, chunk_elems=TILE_ELEMS, num_owners=4)
+    return params, space, grad_fn
+
+
+# ---------------------------------------------------------------------------
+# the flat re-slice primitives
+# ---------------------------------------------------------------------------
+def test_reshard_flat_grow_pads_tail_only():
+    chunk = TILE_ELEMS
+    flat = np.arange(4 * chunk, dtype=np.float32)
+    out = reshard_flat(flat, old_owners=4, new_owners=3, chunk_elems=chunk)
+    assert out.shape[0] == 6 * chunk  # 4 chunks -> padded to 6 (lcm-ish)
+    np.testing.assert_array_equal(out[: 4 * chunk], flat)  # payload intact
+    assert (out[4 * chunk:] == 0).all()  # padding at the tail
+    slabs = owner_slabs(out, 3)
+    assert len(slabs) == 3
+    assert all(s.shape[0] == 2 * chunk for s in slabs)
+
+
+def test_reshard_flat_rejects_misaligned_input():
+    chunk = TILE_ELEMS
+    with pytest.raises(ValueError, match="chunk aligned"):
+        reshard_flat(np.zeros((chunk + 1,), np.float32), 1, 2, chunk)
+    with pytest.raises(ValueError, match="not a valid layout"):
+        reshard_flat(np.zeros((4 * chunk,), np.float32), 3, 2, chunk)
+    with pytest.raises(ValueError, match="not a valid layout"):
+        reshard_flat(np.zeros((4 * chunk,), np.float32), 0, 2, chunk)
+
+
+def test_rebuild_space_repads_chunks_for_new_owner_count():
+    params, space, _ = setup()
+    assert space.num_owners == 4 and space.num_chunks == 4
+    s3 = rebuild_space(space, 3)
+    assert s3.num_owners == 3
+    assert s3.num_chunks == 3  # 3 payload chunks tile 3 owners exactly
+    assert s3.payload_elems == space.payload_elems  # layout untouched
+    assert s3.slots == space.slots
+    s8 = rebuild_space(space, 8)
+    assert s8.num_chunks == 8  # padded up to a whole chunk per owner
+    s1 = rebuild_space(space, 1)
+    assert s1.num_chunks == 3  # sheds the 4-owner padding chunk
+
+
+# ---------------------------------------------------------------------------
+# elastic_restore paths
+# ---------------------------------------------------------------------------
+def test_elastic_restore_legacy_snapshot_without_worker_clock():
+    """A pre-worker_clock snapshot passes through elastic_restore without
+    inventing the key, and PBoxFabric.restore resets every clock to the
+    restored step."""
+    params, space, grad_fn = setup()
+    fab = PBoxFabric(space, momentum(0.05, 0.9), space.flatten(params),
+                     num_shards=4, num_workers=K)
+    WorkerHarness(fab, grad_fn, lambda w, s: w).run(3)
+    snap = fab.snapshot()
+    legacy = {k: v for k, v in snap.items() if k != "worker_clock"}
+    out, new_space = elastic_restore(legacy, space, new_owners=2)
+    assert "worker_clock" not in out
+    assert out["step"] == 3
+    fab2 = PBoxFabric(new_space, momentum(0.05, 0.9),
+                      jnp.asarray(out["params"]), num_shards=2,
+                      num_workers=K)
+    fab2.restore(out)
+    assert fab2.step == 3
+    np.testing.assert_array_equal(fab2.worker_clock, [3] * K)
+    # admission is live immediately: a full round fires, nothing dropped
+    for w in range(K):
+        g = grad_fn(new_space.unflatten(fab2.pull(w)), w)
+        fab2.push(w, new_space.flatten(g))
+    assert fab2.step == 4 and fab2.stats.late_pushes_dropped == 0
+
+
+@pytest.mark.parametrize("new_workers", [2, 8])
+def test_elastic_restore_worker_count_change_resets_clocks(new_workers):
+    params, space, grad_fn = setup()
+    fab = PBoxFabric(space, adamw(3e-3), space.flatten(params),
+                     num_shards=4, num_workers=K)
+    WorkerHarness(fab, grad_fn, lambda w, s: w).run(3)
+    snap = fab.snapshot()
+    out, new_space = elastic_restore(snap, space, new_owners=2)
+    # worker-indexed keys pass through untouched...
+    np.testing.assert_array_equal(out["worker_clock"], snap["worker_clock"])
+    fab2 = PBoxFabric(new_space, adamw(3e-3), jnp.asarray(out["params"]),
+                      num_shards=2, num_workers=new_workers)
+    fab2.restore(out)
+    # ...and the fabric, seeing a different worker count, resets clocks
+    assert fab2.worker_clock.shape == (new_workers,)
+    assert (fab2.worker_clock == 3).all()
+
+
+@pytest.mark.parametrize("new_owners", [1, 3, 8])
+def test_elastic_restore_training_continues_identically(new_owners):
+    """Grow and shrink: adamw's 2-slot state re-targets with its params,
+    and post-restore training matches the uninterrupted run on the
+    payload (padding tails differ by construction)."""
+    params, space, grad_fn = setup()
+    ref = PBoxFabric(space, adamw(3e-3), space.flatten(params),
+                     num_shards=4, num_workers=K)
+    WorkerHarness(ref, grad_fn, lambda w, s: w).run(5)
+
+    fab = PBoxFabric(space, adamw(3e-3), space.flatten(params),
+                     num_shards=4, num_workers=K)
+    WorkerHarness(fab, grad_fn, lambda w, s: w).run(3)
+    out, new_space = elastic_restore(fab.snapshot(), space, new_owners)
+    assert np.asarray(out["state"]).shape == (2, new_space.flat_elems)
+    fab2 = PBoxFabric(new_space, adamw(3e-3), jnp.asarray(out["params"]),
+                      num_shards=new_owners, num_workers=K)
+    fab2.restore(out)
+    WorkerHarness(fab2, grad_fn, lambda w, s: w).run(2)
+    n = min(space.payload_elems, new_space.payload_elems)
+    np.testing.assert_array_equal(np.asarray(ref.params)[:n],
+                                  np.asarray(fab2.params)[:n])
+
+
+def test_elastic_restore_preserves_empty_state_and_scalars():
+    params, space, _ = setup()
+    snap = {"params": np.zeros((space.flat_elems,), np.float32),
+            "state": (), "step": 7, "worker_clock": np.arange(K)}
+    out, new_space = elastic_restore(snap, space, new_owners=3)
+    assert out["state"] == ()
+    assert out["step"] == 7
+    np.testing.assert_array_equal(out["worker_clock"], np.arange(K))
+    assert out["params"].shape == (new_space.flat_elems,)

@@ -1,0 +1,298 @@
+"""Multi-tenant PBox semantics (core/tenancy.py).
+
+The load-bearing property: co-tenancy is *timing only*.  Every job's sync
+training on the shared box is bit-identical to the same job running alone
+on a dedicated fabric — at any co-tenant count, shard count, and rack
+layout — while the shared event clock makes co-tenants inflate each
+other's wire time in proportion to their fair-share weights (a
+high-priority job's simulated step time under contention stays strictly
+below a low-priority one's).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.chunking import TILE_ELEMS
+from repro.core.fabric import LinkModel, WorkerHarness
+from repro.core.tenancy import (
+    JobHandle,
+    JobSpec,
+    MultiJobFabric,
+    dedicated_fabric,
+)
+from repro.optim.optimizers import adamw, momentum, sgd
+
+LINK = LinkModel(wire_us_per_chunk=1.0, agg_us_per_chunk=0.2)
+
+
+def make_job(name, target_scale, *, workers=4, elems=3000, **kw):
+    """A quadratic job: workers minimize ||w - target_w||^2 on per-worker
+    targets (batch = worker id, so runs are schedule-independent)."""
+    params = {"w": jnp.zeros((elems,)), "b": jnp.zeros((50,))}
+    targets = [
+        {"w": jnp.full((elems,), target_scale * (i + 1)),
+         "b": jnp.arange(50.0) * (i + 1)}
+        for i in range(workers)
+    ]
+
+    def grad_fn(p, batch):
+        return jax.tree.map(lambda a, b: 2 * (a - b), p, targets[batch])
+
+    kw.setdefault("optimizer", momentum(0.05, 0.9))
+    spec = JobSpec(name=name, params=params, num_workers=workers,
+                   chunk_elems=TILE_ELEMS, **kw)
+    return spec, grad_fn
+
+
+def drive(handles_and_grads, steps):
+    """Interleave the tenants' worker harnesses tick by tick."""
+    hs = [WorkerHarness(h, g, lambda w, s: w) for h, g in handles_and_grads]
+    guard = 0
+    while any(min(h.steps_done) < steps for h in hs):
+        for h in hs:
+            if min(h.steps_done) < steps:
+                h.tick()
+        guard += 1
+        assert guard < steps * 100, "tenant scheduler livelock"
+    return hs
+
+
+# ---------------------------------------------------------------------------
+# isolation: bit-identity vs a dedicated fabric
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("num_racks", [1, 2])
+@pytest.mark.parametrize("num_shards", [1, 4])
+def test_cotenants_bit_identical_to_dedicated(num_shards, num_racks):
+    box = MultiJobFabric(num_shards=num_shards, num_racks=num_racks,
+                         link=LINK)
+    spec_a, grad_a = make_job("A", 1.0, priority=3.0)
+    spec_b, grad_b = make_job("B", 2.0, optimizer=adamw(3e-3), codec="int8",
+                              elems=5000)
+    ha = box.attach(spec_a)
+    hb = box.attach(spec_b)
+    drive([(ha, grad_a), (hb, grad_b)], steps=5)
+    for spec, grad_fn, h in ((spec_a, grad_a, ha), (spec_b, grad_b, hb)):
+        ded = dedicated_fabric(spec, box)
+        WorkerHarness(ded, grad_fn, lambda w, s: w).run(5)
+        np.testing.assert_array_equal(np.asarray(ded.params),
+                                      np.asarray(h.fabric.params))
+        # co-tenancy did inflate the clock, never the numerics
+        if len(box.jobs) > 1:
+            assert h.stats.sim_pipelined_us > ded.stats.sim_pipelined_us
+
+
+def test_three_tenants_with_quorum_and_ssp_stay_isolated():
+    """Admission modes are per-job state: a quorum job and an SSP job
+    sharing the box must behave exactly as they do alone."""
+    box = MultiJobFabric(num_shards=4, num_racks=2, link=LINK)
+    spec_a, grad_a = make_job("sync", 1.0)
+    spec_b, grad_b = make_job("quorum", 1.5, optimizer=sgd(0.01),
+                              min_push_fraction=0.75)
+    spec_c, grad_c = make_job("ssp", 0.5, mode="stale", staleness=2)
+    handles = [box.attach(s) for s in (spec_a, spec_b, spec_c)]
+    drive(list(zip(handles, (grad_a, grad_b, grad_c))), steps=4)
+    for spec, grad_fn, h in zip((spec_a, spec_b, spec_c),
+                                (grad_a, grad_b, grad_c), handles):
+        # the dedicated twin sees the exact same per-job push sequence:
+        # drive() ticks each tenant under the same condition run() uses
+        ded = dedicated_fabric(spec, box)
+        WorkerHarness(ded, grad_fn, lambda w, s: w).run(4)
+        assert ded.stats.steps == h.stats.steps
+        np.testing.assert_array_equal(np.asarray(ded.params),
+                                      np.asarray(h.fabric.params))
+
+
+# ---------------------------------------------------------------------------
+# fairness: priority ordering and bandwidth caps
+# ---------------------------------------------------------------------------
+def test_priority_orders_sim_step_time_strictly():
+    box = MultiJobFabric(num_shards=2, num_racks=2, link=LINK)
+    spec_hi, grad_hi = make_job("hi", 1.0, priority=4.0)
+    spec_lo, grad_lo = make_job("lo", 1.0, priority=1.0)
+    hi = box.attach(spec_hi)
+    lo = box.attach(spec_lo)
+    drive([(hi, grad_hi), (lo, grad_lo)], steps=4)
+    assert hi.sim_step_time_us() < lo.sim_step_time_us()
+    # fair-share algebra: scales are (total/4) and (total/1)
+    assert box.wire_scales(hi.fabric) == (1.25, 1.25)
+    assert box.wire_scales(lo.fabric) == (5.0, 5.0)
+
+
+def test_bandwidth_cap_floors_the_share():
+    """A capped job pays 1/cap even with the box otherwise idle."""
+    box = MultiJobFabric(num_shards=2, num_racks=1, link=LINK)
+    spec, grad_fn = make_job("capped", 1.0, bandwidth_cap=0.25)
+    h = box.attach(spec)
+    assert box.wire_scales(h.fabric) == (4.0, 4.0)
+    drive([(h, grad_fn)], steps=3)
+    ded = dedicated_fabric(spec, box)
+    WorkerHarness(ded, grad_fn, lambda w, s: w).run(3)
+    # numerics untouched, wire time exactly 4x on the rack stage
+    np.testing.assert_array_equal(np.asarray(ded.params),
+                                  np.asarray(h.fabric.params))
+    assert h.stats.sim_wire_us == pytest.approx(4 * ded.stats.sim_wire_us)
+    assert box.links["rack0"].stats.contention_factor == pytest.approx(4.0)
+
+
+def test_link_queues_account_cotenant_occupancy():
+    box = MultiJobFabric(num_shards=2, num_racks=2, link=LINK)
+    spec_a, grad_a = make_job("A", 1.0)
+    spec_b, grad_b = make_job("B", 1.0)
+    ha = box.attach(spec_a)
+    hb = box.attach(spec_b)
+    drive([(ha, grad_a), (hb, grad_b)], steps=3)
+    util = box.utilization()
+    for name in ("rack0", "rack1", "core"):
+        u = util[name]
+        assert set(u["by_job"]) == {"A", "B"}
+        assert u["queued_us"] > 0.0  # co-tenancy showed up on the link
+        assert u["busy_us"] == pytest.approx(sum(u["by_job"].values()))
+        assert u["contention_factor"] == pytest.approx(2.0)  # equal weights
+    agg = box.aggregate_stats()
+    assert agg.steps == ha.stats.steps + hb.stats.steps
+    assert agg.sim_core_wire_us == pytest.approx(
+        ha.stats.sim_core_wire_us + hb.stats.sim_core_wire_us)
+
+
+# ---------------------------------------------------------------------------
+# namespaces on the shared shard set
+# ---------------------------------------------------------------------------
+def test_namespace_mapping_is_disjoint_and_routable():
+    box = MultiJobFabric(num_shards=4, num_racks=1)
+    ha = box.attach(make_job("A", 1.0)[0])
+    hb = box.attach(make_job("B", 1.0, elems=9000)[0])
+    ga, gb = ha.global_chunks(), hb.global_chunks()
+    assert len(np.intersect1d(ga, gb)) == 0
+    assert gb[0] == ga[-1] + 1  # dense packing of the namespace
+    for gid in (int(ga[0]), int(ga[-1])):
+        job, shard = box.route(gid)
+        assert job == "A" and 0 <= shard < 4
+    assert box.route(int(gb[0]))[0] == "B"
+    with pytest.raises(KeyError):
+        box.route(int(gb[-1]) + 1)
+    # every shared shard serves both tenants (the multiplexing claim)
+    for occ in box.shard_occupancy():
+        assert set(occ) == {"A", "B"}
+    assert sum(sum(o.values()) for o in box.shard_occupancy()) == (
+        len(ga) + len(gb))
+    assert "job A" in box.describe() and "link core" in box.describe()
+
+
+# ---------------------------------------------------------------------------
+# attach/detach at runtime (elastic snapshot/restore reuse)
+# ---------------------------------------------------------------------------
+def test_detach_reattach_resumes_bit_identically():
+    box = MultiJobFabric(num_shards=4, num_racks=2, link=LINK)
+    spec_a, grad_a = make_job("A", 1.0, optimizer=adamw(3e-3))
+    spec_b, grad_b = make_job("B", 2.0)
+    ha = box.attach(spec_a)
+    hb = box.attach(spec_b)
+    drive([(ha, grad_a), (hb, grad_b)], steps=3)
+    old_space = ha.fabric.space
+    snap = box.detach("A")
+    assert ha.detached and "A" not in box.jobs
+    # B trains on while A is away; B's fair share improves to dedicated
+    assert box.wire_scales(hb.fabric) == (1.0, 1.0)
+    drive([(hb, grad_b)], steps=5)
+    ha2 = box.attach(spec_a, snapshot=snap, snapshot_space=old_space)
+    assert ha2.fabric.step == 3
+    drive([(ha2, grad_a), (hb, grad_b)], steps=2)
+    # counterfactual: A alone, uninterrupted, same total steps
+    ded = dedicated_fabric(spec_a, box)
+    WorkerHarness(ded, grad_a, lambda w, s: w).run(5)
+    np.testing.assert_array_equal(np.asarray(ded.params),
+                                  np.asarray(ha2.fabric.params))
+
+
+def test_reattach_across_shard_counts_goes_through_elastic():
+    """A snapshot taken on a 4-shard box re-targets onto a 1-shard box:
+    the chunk space re-pads (different num_owners), so the restore runs
+    through runtime/elastic.elastic_restore — and training continues
+    bit-identically to a dedicated fabric restored the same way."""
+    box4 = MultiJobFabric(num_shards=4, num_racks=1, link=LINK)
+    spec, grad_fn = make_job("mig", 1.0, optimizer=adamw(3e-3))
+    h4 = box4.attach(spec)
+    drive([(h4, grad_fn)], steps=3)
+    space4 = h4.fabric.space
+    snap = box4.detach("mig")
+
+    box1 = MultiJobFabric(num_shards=1, num_racks=1, link=LINK)
+    h1 = box1.attach(spec, snapshot=snap, snapshot_space=space4)
+    assert h1.fabric.space.flat_elems != space4.flat_elems  # re-padded
+    assert h1.fabric.step == 3
+    drive([(h1, grad_fn)], steps=2)
+    ded = dedicated_fabric(spec, box4)
+    WorkerHarness(ded, grad_fn, lambda w, s: w).run(5)
+    # compare on the payload (padding tails differ by construction)
+    n = h1.fabric.space.payload_elems
+    np.testing.assert_array_equal(np.asarray(ded.params)[:n],
+                                  np.asarray(h1.fabric.params)[:n])
+
+
+def test_detached_handle_keeps_working_as_dedicated():
+    box = MultiJobFabric(num_shards=2, num_racks=1, link=LINK)
+    spec_a, grad_a = make_job("A", 1.0)
+    spec_b, _ = make_job("B", 1.0)
+    ha = box.attach(spec_a)
+    box.attach(spec_b)
+    box.detach("A")
+    # the orphaned handle no longer contends: its clock runs dedicated
+    WorkerHarness(ha, grad_a, lambda w, s: w).run(2)
+    ded = dedicated_fabric(spec_a, box)
+    WorkerHarness(ded, grad_a, lambda w, s: w).run(2)
+    assert ha.stats.sim_wire_us == pytest.approx(ded.stats.sim_wire_us)
+
+
+# ---------------------------------------------------------------------------
+# harness/job-handle integration + validation
+# ---------------------------------------------------------------------------
+def test_worker_harness_telemetry_carries_job_namespace():
+    box = MultiJobFabric(num_shards=2, num_racks=2, link=LINK)
+    spec, grad_fn = make_job("tenant-x", 1.0)
+    h = box.attach(spec)
+    wh = WorkerHarness(h, grad_fn, lambda w, s: w)
+    wh.run(2)
+    t = wh.telemetry()
+    assert wh.job == "tenant-x"
+    assert t["job"] == "tenant-x"
+    assert t["server_steps"] == 2 and t["worker_steps"] == [2] * 4
+    assert t["sim_step_us"] == pytest.approx(h.sim_step_time_us())
+    assert set(t["steps_done_by_rack"]) == {0, 1}
+    jt = h.telemetry()
+    assert jt["job"] == "tenant-x" and jt["steps"] == 2
+
+
+def test_jobspec_and_lifecycle_validation():
+    box = MultiJobFabric(num_shards=2)
+    spec, _ = make_job("dup", 1.0)
+    box.attach(spec)
+    with pytest.raises(ValueError, match="already attached"):
+        box.attach(spec)
+    with pytest.raises(KeyError):
+        box.detach("nope")
+    with pytest.raises(ValueError):
+        make_job("bad", 1.0, priority=0.0)
+    with pytest.raises(ValueError):
+        make_job("bad", 1.0, bandwidth_cap=1.5)
+    with pytest.raises(ValueError):
+        JobSpec(name="", params={}, optimizer=sgd(0.01), num_workers=1)
+    with pytest.raises(ValueError):
+        make_job("bad", 1.0, workers=0)
+    # a foreign fabric is rejected by the shared clock
+    with pytest.raises(KeyError):
+        box.wire_scales(dedicated_fabric(spec, box))
+
+
+def test_handle_is_a_job_handle_not_a_fabric_subclass():
+    """JobHandle is a facade: worker API delegates, tenancy API is its
+    own (guards against accidental isinstance coupling)."""
+    box = MultiJobFabric(num_shards=2)
+    spec, grad_fn = make_job("f", 1.0)
+    h = box.attach(spec)
+    assert isinstance(h, JobHandle)
+    flat = h.pull(0)
+    assert flat.shape == (h.space.flat_elems,)
+    h.push(0, jnp.zeros_like(flat))
+    assert h.num_workers == 4 and h.name == "f"
