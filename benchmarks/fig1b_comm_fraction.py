@@ -11,7 +11,7 @@ import json
 from pathlib import Path
 
 from benchmarks.common import emit
-from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+from repro.launch.roofline import ICI_BW, PEAK_FLOPS
 
 
 def run(art_dir: str = "artifacts/dryrun") -> None:

@@ -9,7 +9,6 @@ configs.  Derived: modeled speedup at 10 Gbps-class (1.25 GB/s) links.
 """
 from __future__ import annotations
 
-import jax
 
 from benchmarks.common import emit
 from repro.configs.registry import get_arch

@@ -1,0 +1,112 @@
+"""Replication sweep: factor R x shards x fault rate on the fault tier.
+
+GaDei's production argument (arXiv:1611.06213): a PS only carries a
+training service once crashes don't perturb convergence.  This sweep runs
+the chunk-sharded fabric with chain replication and a *seeded* FaultPlan
+(deterministic — every row is byte-replayable, so the regression gate can
+hold it tight) over R x shards x shard-crash-rate, and reports what fault
+tolerance costs on the wire and the event clock.
+
+Derived columns per config:
+  repl_MiB    chain-replication MiB per round (raw-f32 state streams)
+  overhead    replication bytes / gradient-push bytes
+  failovers   shard crashes survived (scheduled by the plan)
+  recov_us    event-clock re-silvering time per failover
+
+Must hold (asserted here, unit-tested in tests/test_replication.py):
+  * bit-identity: every faulted run matches the unreplicated, fault-free
+    fabric exactly (failover never perturbs convergence);
+  * exact accounting: replication ships (R-1) * (1 + slots) raw-f32
+    copies of the flat space per round, byte-for-byte;
+  * failover count == the plan's scheduled crash count, and recovery
+    time appears exactly when failovers do.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core.chunking import ParamSpace
+from repro.core.fabric import LinkModel, PBoxFabric
+from repro.core.replication import FaultPlan
+from repro.core.topology import NetworkTopology
+from repro.optim.optimizers import momentum
+
+K = 4  # workers
+ROUNDS = 6
+RACKS = 2
+LINK = LinkModel(wire_us_per_chunk=1.0, agg_us_per_chunk=0.2)
+OPT_SLOTS = 1  # momentum keeps one state slot
+
+
+def _make_setup():
+    params = {"w": jnp.zeros((8 * 8192 - 512,))}  # 8 chunks
+    space = ParamSpace.build(params)
+    rng = np.random.default_rng(0)
+    grads = [
+        jnp.asarray(rng.standard_normal(space.flat_elems), jnp.float32)
+        for _ in range(K)
+    ]
+    return space, grads
+
+
+def _run(space, grads, *, shards, replication=1, plan=None):
+    topo = NetworkTopology(num_workers=K, num_racks=RACKS)
+    fab = PBoxFabric(
+        space, momentum(0.1, 0.9), jnp.zeros((space.flat_elems,)),
+        num_shards=shards, num_workers=K, topology=topo, link=LINK,
+        replication=replication, fault_plan=plan,
+    )
+    for r in range(ROUNDS):
+        for w in range(K):
+            fab.pull(w)
+            fab.push(w, grads[(w + r) % K])
+    return fab
+
+
+def run() -> None:
+    space, grads = _make_setup()
+    for shards in (2, 8):
+        base = _run(space, grads, shards=shards)
+        base_params = np.asarray(base.params)
+        for repl in (2, 3):
+            for rate in (0.0, 0.5):
+                plan = FaultPlan.generate(
+                    0, rounds=ROUNDS, num_shards=shards, num_workers=K,
+                    num_racks=RACKS, shard_crash_rate=rate)
+                fab = _run(space, grads, shards=shards, replication=repl,
+                           plan=plan)
+                s = fab.stats
+                name = f"replication/R={repl}_shards={shards}_rate={rate:g}"
+                # the headline invariant: fault tolerance is bit-free
+                assert np.array_equal(base_params,
+                                      np.asarray(fab.params)), (
+                    f"{name}: faulted run diverged from the fault-free "
+                    "fabric")
+                # exact chain accounting: (R-1) raw-f32 state streams
+                # (params + momentum slot) per round
+                expect = ROUNDS * (repl - 1) * 4 * space.flat_elems * (
+                    1 + OPT_SLOTS)
+                assert s.bytes_replication == expect, (
+                    f"{name}: replication bytes {s.bytes_replication} != "
+                    f"{expect}")
+                scheduled = sum(
+                    e.kind == "shard_crash" for e in plan.events)
+                assert s.failovers == scheduled == s.resilvers, (
+                    f"{name}: {s.failovers} failovers for {scheduled} "
+                    "scheduled crashes")
+                assert (s.sim_recovery_us > 0.0) == (scheduled > 0), (
+                    f"{name}: recovery time must appear exactly with "
+                    "failovers")
+                repl_mib = s.bytes_replication / ROUNDS / 2**20
+                overhead = s.bytes_replication / s.bytes_pushed
+                recov = s.sim_recovery_us / max(1, s.failovers)
+                emit(name, recov,
+                     f"repl_MiB={repl_mib:.3f};overhead={overhead:.3f};"
+                     f"failovers={s.failovers};recov_us={recov:.1f}")
+
+
+if __name__ == "__main__":
+    run()

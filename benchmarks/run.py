@@ -30,6 +30,7 @@ def main() -> None:
         fig5_hierarchical,
         kernel_micro,
         multi_job,
+        replication,
         table1_frameworks,
         topo_rack_codec,
     )
@@ -43,6 +44,7 @@ def main() -> None:
         "kernel": kernel_micro.run,
         "topo": topo_rack_codec.run,
         "multijob": multi_job.run,
+        "replication": replication.run,
     }
     only = set(args.only.split(",")) if args.only else None
     if only:

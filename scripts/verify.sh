@@ -11,9 +11,10 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
 python -m pytest -x -q "$@"
 
-# smoke the topology + multi-tenant benchmarks: their derived-column
-# invariants (core-link bytes shrink 1/workers-per-rack, int8 a further
-# ~4x, codec-"none" bit-identity; tenant isolation + priority fairness)
-# are asserted inside and fail the run if violated
-python -m benchmarks.run --only topo,multijob >/dev/null
+# smoke the topology + multi-tenant + replication benchmarks: their
+# derived-column invariants (core-link bytes shrink 1/workers-per-rack,
+# int8 a further ~4x, codec-"none" bit-identity; tenant isolation +
+# priority fairness; failover bit-identity + exact chain-replication
+# byte accounting) are asserted inside and fail the run if violated
+python -m benchmarks.run --only topo,multijob,replication >/dev/null
 

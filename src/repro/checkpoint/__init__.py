@@ -1,3 +1,11 @@
-from repro.checkpoint.checkpointer import Checkpointer
+from repro.checkpoint.checkpointer import (
+    Checkpointer,
+    fabric_snapshot_to_flat,
+    flat_to_fabric_snapshot,
+)
 
-__all__ = ["Checkpointer"]
+__all__ = [
+    "Checkpointer",
+    "fabric_snapshot_to_flat",
+    "flat_to_fabric_snapshot",
+]

@@ -14,6 +14,13 @@ Design points (the large-scale story):
     overlap discipline applied to checkpoint I/O).
   * **Self-describing**: the manifest records the ParamSpace layout + mesh
     so restore can validate compatibility and re-shard.
+  * **Crash-consistent for the fabric** (fault tier, core/replication.py):
+    ``save_fabric`` persists ``PBoxFabric.snapshot()`` — safe to take
+    *mid-round*, between push-admission and apply, because the snapshot
+    rolls in-flight pushes back out of the worker clocks — plus the
+    replication metadata (factor, dead workers, fault round) a replayable
+    recovery needs.  Legacy checkpoints without that metadata still load:
+    ``restore_fabric`` treats them as an all-alive, unreplicated fabric.
 """
 from __future__ import annotations
 
@@ -112,6 +119,31 @@ class Checkpointer:
                 return int(cand.name.split("-")[1])
         return None
 
+    # -- fabric snapshots (fault tier) ---------------------------------
+    def save_fabric(self, step: int, fabric, meta: dict | None = None) -> Path:
+        """Persist a crash-consistent ``PBoxFabric.snapshot()`` (safe
+        mid-round — see module docstring) with replication metadata."""
+        snap = fabric.snapshot()
+        meta = dict(meta or {})
+        meta.update(
+            fabric_schema=2,
+            replication=int(snap.get("replication", 1)),
+            num_workers=int(fabric.num_workers),
+            fault_round=int(snap["step"]),
+            fault_events_fired=len(getattr(fabric, "fault_trace", ())),
+        )
+        return self.save(step, fabric_snapshot_to_flat(snap), meta)
+
+    def restore_fabric(self, fabric, step: int | None = None) -> dict:
+        """Load a checkpoint into a live fabric.  Legacy checkpoints —
+        written before the fault tier, without replication metadata or
+        ``worker_clock``/``dead_workers`` arrays — restore to an
+        all-alive fabric at the checkpointed step."""
+        flat, meta = self.restore(step)
+        snap = flat_to_fabric_snapshot(flat)
+        fabric.restore(snap)
+        return meta
+
     def restore(self, step: int | None = None) -> tuple[dict, dict]:
         """Returns (state dict of np arrays, manifest meta).  Partial /
         corrupted checkpoints (no manifest) are skipped by latest_step."""
@@ -126,6 +158,46 @@ class Checkpointer:
             for k, info in manifest["arrays"].items()
         }
         return state, manifest["meta"]
+
+
+def fabric_snapshot_to_flat(snap: dict) -> dict:
+    """``PBoxFabric.snapshot()`` -> flat name->array dict for the
+    checkpointer (numbered ``slot{i}`` arrays like TrainState)."""
+    out = {
+        "params": np.asarray(snap["params"]),
+        "step": np.int64(snap["step"]),
+    }
+    for i, s in enumerate(snap["state"]):
+        out[f"slot{i}"] = np.asarray(s)
+    if "worker_clock" in snap:
+        out["worker_clock"] = np.asarray(snap["worker_clock"], np.int64)
+    dead = snap.get("dead_workers")
+    if dead is not None:
+        out["dead_workers"] = np.asarray(dead, np.int64)
+    if "replication" in snap:
+        out["replication"] = np.int64(snap["replication"])
+    return out
+
+
+def flat_to_fabric_snapshot(flat: dict) -> dict:
+    """Inverse of ``fabric_snapshot_to_flat``, tolerant of legacy
+    checkpoints: missing ``worker_clock``/``dead_workers``/``replication``
+    just aren't in the returned snapshot (``PBoxFabric.restore`` defaults
+    them to all-alive, clocks at the restored step)."""
+    slots = []
+    i = 0
+    while f"slot{i}" in flat:
+        slots.append(np.asarray(flat[f"slot{i}"]))
+        i += 1
+    snap = {
+        "params": np.asarray(flat["params"]),
+        "state": tuple(slots),
+        "step": int(flat["step"]),
+    }
+    for key in ("worker_clock", "dead_workers", "replication"):
+        if key in flat:
+            snap[key] = flat[key]
+    return snap
 
 
 def train_state_to_flat(state: Any) -> dict:

@@ -2,7 +2,7 @@
 40M cap), embed 128, bot 512-256-128, top 1024-1024-512-256-1, dot."""
 from repro.configs.recsys_shapes import recsys_cells
 from repro.configs.registry import ArchDef
-from repro.models.recsys.models import CRITEO_VOCABS, DLRMConfig
+from repro.models.recsys.models import DLRMConfig
 
 CONFIG = DLRMConfig()
 

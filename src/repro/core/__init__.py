@@ -10,10 +10,20 @@ from repro.core.fabric import (
     ShardStats,
     WorkerHarness,
 )
+from repro.core.replication import (
+    FaultEvent,
+    FaultPlan,
+    ReplicaGroup,
+    ShardLost,
+)
 from repro.core.server import PHubServer
 from repro.core.topology import NetworkTopology, RackAggregator
 
 __all__ = [
+    "FaultEvent",
+    "FaultPlan",
+    "ReplicaGroup",
+    "ShardLost",
     "NetworkTopology",
     "RackAggregator",
     "ParamSpace",

@@ -17,7 +17,7 @@ Key properties (tested in tests/test_chunking.py):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Sequence
+from typing import Any
 
 import jax
 import jax.numpy as jnp

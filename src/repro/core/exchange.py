@@ -35,7 +35,6 @@ paper's thesis.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Any, Sequence
 
 import jax

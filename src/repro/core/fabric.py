@@ -54,6 +54,17 @@ place this fabric's chunks in the box-wide namespace, and ``shared_clock``
 inflates its wire stages for co-tenant contention (weighted fair sharing).
 Both hooks are timing/metadata only: a tenant's training stays
 bit-identical to a dedicated fabric.
+
+Fault tolerance (core/replication.py): ``replication=R`` chain-replicates
+every shard's slab (params + optimizer state, raw f32) to R-1 backups
+after each round, placed anti-affine to racks; a ``FaultPlan`` injects
+shard/worker/link faults deterministically at round edges on the event
+clock.  A shard crash with R >= 2 promotes the chain head bit-exactly and
+re-silvers the chain (pushes/pulls re-target the replacement
+transparently); with R = 1 it raises ``ShardLost``.  Worker crashes shrink
+the admission barrier to the surviving population and re-enter via
+``runtime/elastic.worker_reentry``.  Replication/recovery bytes land in
+the same rack/core link accounting as training traffic.
 """
 from __future__ import annotations
 
@@ -71,6 +82,7 @@ from repro.core.compression import (
     roundtrip,
     wire_bytes,
 )
+from repro.core.replication import FaultPlan, ReplicaGroup, ShardLost
 from repro.core.topology import NetworkTopology, RackAggregator
 from repro.kernels.fused_agg_opt.kernel import LANES, SUBLANES
 from repro.kernels.fused_agg_opt.ops import fused_aggregate_update
@@ -112,6 +124,18 @@ class ServerStats:
     sim_agg_us: float = 0.0
     sim_pipelined_us: float = 0.0  # chunk-pipelined, sharded makespan
     sim_serialized_us: float = 0.0  # monolithic store-and-forward baseline
+    # fault-tolerance tier (core/replication.py)
+    shards_crashed: int = 0
+    failovers: int = 0  # shard crashes survived by promoting a backup
+    resilvers: int = 0  # replacement backups rebuilt after a failover
+    workers_crashed: int = 0
+    workers_recovered: int = 0
+    link_degrades: int = 0
+    replication_rounds: int = 0  # rounds whose chain replication completed
+    bytes_replication: int = 0  # raw-f32 state streams down the chains
+    bytes_resilver: int = 0  # recovery traffic re-silvering replacements
+    sim_replication_us: float = 0.0  # chain pass (off the round's crit path)
+    sim_recovery_us: float = 0.0  # event-clock time failovers spent
 
     @property
     def pipeline_speedup(self) -> float:
@@ -308,11 +332,15 @@ class PBoxFabric:
         namespace: str | None = None,
         chunk_base: int = 0,
         shared_clock: Any | None = None,
+        replication: int = 1,
+        fault_plan: FaultPlan | None = None,
     ):
         if mode not in ("sync", "async", "stale"):
             raise ValueError(f"unknown mode {mode}")
         if num_shards < 1:
             raise ValueError("num_shards must be >= 1")
+        if replication < 1:
+            raise ValueError("replication factor must be >= 1")
         if placement not in ("contiguous", "round_robin"):
             raise ValueError(f"unknown placement {placement}")
         if topology is not None and topology.num_workers != num_workers:
@@ -328,7 +356,9 @@ class PBoxFabric:
         )
         self.num_workers = num_workers
         self.num_shards = num_shards
-        self.min_pushes = max(1, int(np.ceil(min_push_fraction * num_workers)))
+        if not 0.0 < min_push_fraction <= 1.0:
+            raise ValueError("min_push_fraction must be in (0, 1]")
+        self.min_push_fraction = min_push_fraction
         self.use_pallas = use_pallas
         self.link = link or LinkModel()
         self.topology = topology
@@ -397,6 +427,30 @@ class PBoxFabric:
         # chunk-by-chunk staging: worker -> (host rows buffer, staged mask)
         self._staged: dict[int, tuple] = {}
         self._flat_cache: jax.Array | None = None
+        # fault-tolerance tier (core/replication.py): chain replication at
+        # factor R, a deterministic fault schedule fired at round edges,
+        # and the crash bookkeeping failover routing reads
+        self.replication = replication
+        self.fault_plan = fault_plan
+        self.fault_trace: list[dict] = []
+        self.dead_workers: set[int] = set()
+        self._link_degrade: dict[int, float] = {}  # rack -> slowdown >= 1
+        self._fault_cursor = 0  # last round whose faults already fired
+        self.replicas: list[ReplicaGroup] = []
+        if replication > 1:
+            if topology is not None:
+                racks = topology.replica_racks(num_shards, replication)
+            else:
+                # no topology: everything shares one rack-local domain
+                racks = np.zeros((num_shards, replication), dtype=np.int64)
+            self.replicas = [
+                ReplicaGroup(s.shard_id, replication, racks[s.shard_id])
+                for s in self.shards
+            ]
+            # initial provisioning copies are free: they ship with the
+            # model broadcast, not on the training wire
+            for group, shard in zip(self.replicas, self.shards):
+                group.sync(shard, round_=0)
 
     # -- assembled views -----------------------------------------------
     def _assemble_rows(self, per_shard: Callable[[PBoxShard], Any]) -> jax.Array:
@@ -415,6 +469,22 @@ class PBoxFabric:
                 lambda s: s.params).reshape(-1)
         return self._flat_cache
 
+    # -- liveness / quorum ---------------------------------------------
+    @property
+    def num_alive_workers(self) -> int:
+        return self.num_workers - len(self.dead_workers)
+
+    @property
+    def min_pushes(self) -> int:
+        """Quorum size over the *alive* worker population: a crashed
+        worker shrinks the barrier (elastic semantics) instead of
+        deadlocking every surviving worker's round."""
+        return max(1, int(np.ceil(self.min_push_fraction
+                                  * self.num_alive_workers)))
+
+    def alive(self, worker: int) -> bool:
+        return worker not in self.dead_workers
+
     # -- worker API ----------------------------------------------------
     def pull(self, worker: int) -> jax.Array:
         flat = self.params
@@ -429,8 +499,17 @@ class PBoxFabric:
 
     def can_proceed(self, worker: int) -> bool:
         """SSP admission: worker may start its next step iff it is within
-        ``staleness`` steps of the slowest worker."""
-        return self.worker_clock[worker] - self.worker_clock.min() <= self.staleness
+        ``staleness`` steps of the slowest *alive* worker.  A crashed
+        worker neither proceeds nor holds the staleness window hostage —
+        its stalled clock is excluded until it re-enters."""
+        if worker in self.dead_workers:
+            return False
+        clocks = self.worker_clock
+        if self.dead_workers:
+            alive = [c for w, c in enumerate(clocks)
+                     if w not in self.dead_workers]
+            return clocks[worker] - min(alive) <= self.staleness
+        return clocks[worker] - clocks.min() <= self.staleness
 
     def push(self, worker: int, gflat: jax.Array) -> None:
         """Push the whole flat gradient in one call."""
@@ -476,6 +555,12 @@ class PBoxFabric:
                 and self.mode != "async")
 
     def _complete_push(self, worker: int, gchunks: jax.Array) -> None:
+        if worker in self.dead_workers:
+            raise RuntimeError(
+                f"worker {worker} crashed at round {self.step} and has not "
+                "re-entered; revive it (runtime/elastic.worker_reentry) "
+                "before pushing"
+            )
         self.worker_clock[worker] += 1
         nbytes = wire_bytes(self.compression, gchunks.size)
         self.stats.pushes += 1
@@ -492,11 +577,13 @@ class PBoxFabric:
         # worker's last *pull* — a straggler that re-pulls and recomputes
         # loses only the one superseded gradient, never its fresh ones.
         # Only quorum rounds can supersede a worker's gradient, so the
-        # rule applies exactly when min_push_fraction < 1: full-barrier
-        # sync waits for everyone (dropping there would deadlock push-only
-        # callers), SSP *admits* late gradients by design
+        # rule applies exactly when the quorum is a strict subset of the
+        # alive workers (see _barrier_met): full-barrier sync — including
+        # ceil(fraction * alive) == alive — waits for everyone (dropping
+        # there would deadlock push-only callers), SSP *admits* late
+        # gradients by design
         # (runtime/straggler.py), and async has no rounds at all.
-        if (self.mode == "sync" and self.min_pushes < self.num_workers
+        if (self.mode == "sync" and self.min_pushes < self.num_alive_workers
                 and int(self._pull_step[worker]) < self.step):
             self.stats.late_pushes_dropped += 1
             self._drops_since_step += 1
@@ -548,17 +635,25 @@ class PBoxFabric:
             self.stats.steps += 1
             self._simulate_round(streams=1 if self.topology else None)
             self._flat_cache = None
+            self._replicate_round()
+            self._fire_faults()
             return
         self._inbox[worker] = gchunks
         if len(self._inbox) >= self.min_pushes and self._barrier_met():
             self._aggregate()
 
     def _barrier_met(self) -> bool:
-        if self.min_pushes < self.num_workers:
+        # quorum mode exists only when the quorum is a *strict* subset of
+        # the alive population: ceil(fraction * alive) == alive is a full
+        # barrier regardless of the fraction (dropping there would let a
+        # push-only caller deadlock — the round needs everyone anyway)
+        if self.min_pushes < self.num_alive_workers:
             # backup-worker mode: quorum reached (the inbox only ever holds
             # current-round pushes — stale ones were dropped at admission)
             return True
-        return len(self._inbox) == self.num_workers
+        # full barrier: every *alive* worker (a crashed worker's missing
+        # push must not deadlock the survivors' round)
+        return len(self._inbox) == self.num_alive_workers
 
     def _aggregate(self) -> None:
         workers = sorted(self._inbox)
@@ -582,6 +677,10 @@ class PBoxFabric:
         self._drops_since_step = 0
         self._simulate_round(streams=streams)
         self._flat_cache = None
+        # chain replication completes before the round edge: a crash
+        # scheduled at this round promotes the post-round bits
+        self._replicate_round()
+        self._fire_faults()
 
     def _rack_aggregate(self, workers: list[int]) -> int:
         """Combine this round's pushes rack by rack, then apply the
@@ -669,7 +768,12 @@ class PBoxFabric:
         bpe_scale = wire_bytes(self.compression, self.space.chunk_elems) / (
             4.0 * self.space.chunk_elems
         )
-        wire = self.link.wire_us_per_chunk * bpe_scale * rack_scale
+        # fault tier: a degraded rack link slows the round's rack stage.
+        # The clock is round-granular (one wire rate per stage), so the
+        # worst active degradation gates the pipeline — the slowest rack
+        # is the barrier in a sync round anyway.  Timing only, never bits.
+        degrade = max(self._link_degrade.values(), default=1.0)
+        wire = self.link.wire_us_per_chunk * bpe_scale * rack_scale * degrade
         agg = self.link.agg_us_per_chunk
         c = self.space.num_chunks
         idx = np.arange(c, dtype=np.float64)
@@ -714,6 +818,205 @@ class PBoxFabric:
                 makespan_us=makespan,
             )
 
+    # -- fault tier: chain replication / failover / injection -------------
+    def _hop_cost(self, src_rack: int, dst_rack: int) -> float:
+        """Event-clock cost multiplier of one replication hop: rack-local
+        hops ride the full-bisection tier, cross-rack hops pay the
+        oversubscribed core (core/topology.py)."""
+        if self.topology is None:
+            return 1.0
+        return self.topology.hop_cost(src_rack, dst_rack)
+
+    def _account_state_stream(
+        self, group: ReplicaGroup, shard: PBoxShard, *, resilver: bool
+    ) -> None:
+        """Book one chain pass (or one re-silver stream) for ``shard``:
+        raw-f32 state bytes land on the same rack/core link accounting
+        training traffic uses, and the event clock records the pass in
+        ``sim_replication_us`` (chain replication overlaps the next round
+        — it bounds failover lag, not the round makespan) or
+        ``sim_recovery_us`` (re-silvering is the failover's cost)."""
+        nbytes = group.state_bytes(self.spec.num_state_slots,
+                                   shard.num_elems)
+        hops = group.hop_racks()
+        if resilver:
+            # one stream from the surviving chain onto the replacement
+            hops = hops[:1]
+        us_per_chunk = self.link.wire_us_per_chunk * (
+            1 + self.spec.num_state_slots)
+        for src, dst in hops:
+            if resilver:
+                self.stats.bytes_resilver += nbytes
+            else:
+                self.stats.bytes_replication += nbytes
+            if self.topology is not None:
+                if src == dst:
+                    self.stats.bytes_rack_link += nbytes
+                else:
+                    self.stats.bytes_core_link += nbytes
+            us = shard.num_chunks * us_per_chunk * self._hop_cost(src, dst)
+            if resilver:
+                self.stats.sim_recovery_us += us
+            else:
+                self.stats.sim_replication_us += us
+
+    def _replicate_round(self) -> None:
+        """One chain pass after a completed round: every backup now holds
+        the primary's exact post-round slab (raw f32 — see
+        ReplicaGroup.state_bytes), so a crash at this round edge fails
+        over bit-exactly."""
+        if not self.replicas:
+            return
+        for group, shard in zip(self.replicas, self.shards):
+            if shard.num_chunks:
+                self._account_state_stream(group, shard, resilver=False)
+            group.sync(shard, round_=self.step)
+        self.stats.replication_rounds += 1
+
+    def _fire_faults(self) -> None:
+        """Inject every scheduled fault whose round the event clock just
+        passed.  Rounds are the only crash points — deterministic,
+        replayable, and always after the round's chain replication."""
+        if self.fault_plan is None:
+            return
+        due = self.fault_plan.between(self._fault_cursor, self.step)
+        self._fault_cursor = self.step
+        for ev in due:
+            self._apply_fault(ev)
+
+    def _apply_fault(self, ev) -> None:
+        rec: dict[str, Any] = {"round": int(self.step), "event": ev.to_json()}
+        if ev.kind == "shard_crash":
+            self.fault_trace.append(rec)  # record before a possible raise
+            rec["action"] = self.crash_shard(ev.target)
+        elif ev.kind == "worker_crash":
+            self.crash_worker(ev.target)
+            rec["action"] = "worker_crashed"
+            self.fault_trace.append(rec)
+        elif ev.kind == "worker_recover":
+            # in-process recovery: the fabric state IS current, so revive
+            # directly (same clock alignment as elastic.worker_reentry,
+            # minus materializing a full snapshot just to discard it —
+            # worker_reentry is for callers handing the snapshot to a
+            # real replacement process)
+            self.revive_worker(ev.target)
+            rec["action"] = "worker_reentered"
+            self.fault_trace.append(rec)
+        elif ev.kind == "link_degrade":
+            if self.topology is not None and not (
+                    0 <= ev.target < self.topology.num_racks):
+                raise ValueError(f"link_degrade targets rack {ev.target}, "
+                                 "not in the topology")
+            self._link_degrade[ev.target] = ev.factor
+            self.stats.link_degrades += 1
+            rec["action"] = f"link_degraded_x{ev.factor:g}"
+            self.fault_trace.append(rec)
+        elif ev.kind == "link_restore":
+            self._link_degrade.pop(ev.target, None)
+            rec["action"] = "link_restored"
+            self.fault_trace.append(rec)
+
+    def crash_shard(self, shard_id: int) -> str:
+        """One aggregation engine dies at a round edge.
+
+        With a surviving chain (replication >= 2): promote the chain head
+        — a byte-exact copy of the post-round slab — into a replacement
+        engine, re-target routing at it (``chunk_owner`` is unchanged;
+        the shard slot is), and re-silver a fresh backup so the chain is
+        back at full strength.  Pushes/pulls in later rounds hit the
+        replacement transparently and bit-identically.
+
+        With replication == 1 the slab is simply gone: raises
+        ``ShardLost`` (diagnosable) instead of serving corrupt state."""
+        if not 0 <= shard_id < self.num_shards:
+            raise ValueError(f"no shard {shard_id}")
+        shard = self.shards[shard_id]
+        self.stats.shards_crashed += 1
+        if self.replication < 2 or not self.replicas:
+            raise ShardLost(shard_id, shard.num_chunks, self.step,
+                            self.replication)
+        group = self.replicas[shard_id]
+        chunk_ids, params, state = group.promote()
+        replacement = PBoxShard(shard_id, self.space, self.spec, chunk_ids,
+                                params, use_pallas=self.use_pallas)
+        replacement.state = tuple(state)
+        self.shards[shard_id] = replacement
+        self.stats.failovers += 1
+        # recovery: one state stream re-silvers the chain's empty slot
+        # from the promoted replica
+        if replacement.num_chunks:
+            self._account_state_stream(group, replacement, resilver=True)
+        group.sync(replacement, round_=self.step)
+        self.stats.resilvers += 1
+        self._flat_cache = None
+        return "failed_over"
+
+    def crash_worker(self, worker: int) -> None:
+        """A worker process dies: its in-flight stream (staged chunks, an
+        un-aggregated inbox entry) dies with it, and the admission barrier
+        shrinks to the surviving population.  If its missing push was the
+        only thing holding this round's barrier, the round fires now."""
+        if not 0 <= worker < self.num_workers:
+            raise ValueError(f"no worker {worker}")
+        if worker in self.dead_workers:
+            return
+        self.dead_workers.add(worker)
+        self.stats.workers_crashed += 1
+        self._staged.pop(worker, None)
+        dropped = self._inbox.pop(worker, None)
+        if dropped is not None:
+            self.worker_clock[worker] -= 1  # that push never happened
+        if (self.mode != "async" and self._inbox
+                and len(self._inbox) >= self.min_pushes
+                and self._barrier_met()):
+            self._aggregate()
+
+    def revive_worker(self, worker: int, *, clock: int | None = None) -> None:
+        """Re-admit a crashed worker (see runtime/elastic.worker_reentry:
+        re-entry restores from the fabric's current snapshot, so the
+        worker resumes on the current params version — its clock aligns
+        with the restored step and its first push is fresh)."""
+        if worker not in self.dead_workers:
+            return
+        self.dead_workers.discard(worker)
+        self.stats.workers_recovered += 1
+        self.worker_clock[worker] = self.step if clock is None else clock
+        self._pull_step[worker] = self.step
+
+    def export_fault_trace(self) -> dict:
+        """The replayable failure record: the (deterministic) plan plus
+        every injected event and the action taken — byte-for-byte replay
+        is plan + initial state (CI uploads this JSON on chaos failures).
+
+        Counts are derived from the trace, not ``ServerStats``: stats are
+        cumulative across the whole process (a restore + replay counts a
+        re-fired failover twice there, exactly like replayed rounds bump
+        ``steps`` twice), while the trace — truncated on restore — is the
+        current timeline and always matches the plan."""
+        kinds: dict[str, int] = {}
+        actions: dict[str, int] = {}
+        for rec in self.fault_trace:
+            k = rec["event"]["kind"]
+            kinds[k] = kinds.get(k, 0) + 1
+            a = rec.get("action")
+            if a is not None:
+                actions[a] = actions.get(a, 0) + 1
+        return {
+            "schema": 1,
+            "replication": self.replication,
+            "plan": self.fault_plan.to_json() if self.fault_plan else None,
+            "trace": list(self.fault_trace),
+            "round": int(self.step),
+            "stats": {
+                "shards_crashed": kinds.get("shard_crash", 0),
+                "failovers": actions.get("failed_over", 0),
+                "resilvers": actions.get("failed_over", 0),
+                "workers_crashed": kinds.get("worker_crash", 0),
+                "workers_recovered": kinds.get("worker_recover", 0),
+                "link_degrades": kinds.get("link_degrade", 0),
+            },
+        }
+
     # -- rebalancing hook -------------------------------------------------
     def rebalance(self, slow_shards: Sequence[int]) -> int:
         """Move all chunks owned by ``slow_shards`` to healthy shards
@@ -751,20 +1054,41 @@ class PBoxFabric:
         self.chunk_owner = new_owner
         self.stats.rebalances += 1
         self.stats.chunks_moved += len(moved)
+        # replica chains follow their shard's new chunk set (the move
+        # itself rides the rebalance transfer, not the replication wire)
+        for group, shard in zip(self.replicas, self.shards):
+            group.sync(shard, round_=self.step)
         self._flat_cache = None
         return len(moved)
 
     # -- elastic / checkpoint hooks ---------------------------------------
     def snapshot(self) -> dict:
-        state_rows = [
-            self._assemble_rows(lambda s, k=k: s.state[k])
-            for k in range(self.spec.num_state_slots)
-        ]
+        """Crash-consistent snapshot of the committed training state.
+
+        Taken *between* push-admission and apply (mid-round, inbox
+        non-empty), the snapshot still restores to a state from which
+        training re-converges bit-identically: params/optimizer state are
+        pre-round by construction (the inbox has not been applied), and
+        the per-worker clocks are rolled back for every in-flight push —
+        those streams die with the crash, so the restored run replays
+        them.  Chunk-by-chunk staged pushes never advanced a clock, so
+        discarding them needs no rollback."""
+        wc = self.worker_clock.copy()
+        for w in self._inbox:
+            wc[w] -= 1
         return {
             "params": np.asarray(self.params),
-            "state": tuple(np.asarray(r.reshape(-1)) for r in state_rows),
+            "state": tuple(np.asarray(r.reshape(-1)) for r in (
+                self._assemble_rows(lambda s, k=k: s.state[k])
+                for k in range(self.spec.num_state_slots)
+            )),
             "step": self.step,
-            "worker_clock": self.worker_clock.copy(),
+            "worker_clock": wc,
+            # fault-tier metadata (legacy snapshots without these restore
+            # to an all-alive fabric — see restore)
+            "dead_workers": np.asarray(sorted(self.dead_workers),
+                                       dtype=np.int64),
+            "replication": self.replication,
         }
 
     def restore(self, snap: dict) -> None:
@@ -805,6 +1129,24 @@ class PBoxFabric:
             w: init_ef_state(self.compression, self.space.flat_elems)
             for w in self._worker_ef
         }
+        # fault tier: legacy snapshots (no replication metadata) restore
+        # to an all-alive fabric; the fault cursor rewinds so a replayed
+        # plan re-fires from the restored round (byte-for-byte replay),
+        # and the trace drops the rolled-back tail so replayed events
+        # re-append exactly once — export_fault_trace stays the current
+        # timeline's record, never a mix of both passes.  (ServerStats
+        # stays cumulative across the replay, like every other stat.)
+        self.fault_trace = [r for r in self.fault_trace
+                            if r["round"] <= self.step]
+        dead = snap.get("dead_workers")
+        self.dead_workers = (
+            {int(w) for w in np.atleast_1d(dead) if 0 <= w < self.num_workers}
+            if dead is not None else set()
+        )
+        self._link_degrade.clear()
+        self._fault_cursor = self.step
+        for group, shard in zip(self.replicas, self.shards):
+            group.sync(shard, round_=self.step)  # provisioning, not wire
         self._flat_cache = None
 
     # -- introspection -----------------------------------------------------
@@ -837,6 +1179,14 @@ class PBoxFabric:
                 f"{self.stats.rack_streams} aggregated streams, rack links "
                 f"{self.stats.bytes_rack_link >> 10} KiB, late pushes "
                 f"dropped {self.stats.late_pushes_dropped}"
+            )
+        if self.replication > 1:
+            s = self.stats
+            lines.append(
+                f"  replication: R={self.replication}, "
+                f"{s.bytes_replication >> 10} KiB chained, "
+                f"{s.failovers} failovers ({s.resilvers} re-silvered), "
+                f"{len(self.dead_workers)} workers down"
             )
         for shard in self.shards:
             lines.append(
@@ -960,9 +1310,20 @@ class WorkerHarness:
             self._push(w, srv.space.flatten(grads))
             self.steps_done[w] += 1
 
+    def _alive_progress(self) -> list[int]:
+        """Completed steps of the workers still alive (fault tier: a
+        crashed worker's stalled count must not hold ``run`` hostage)."""
+        is_alive = getattr(self.server, "alive", None)
+        if is_alive is None:
+            return list(self.steps_done)
+        alive = [d for w, d in enumerate(self.steps_done) if is_alive(w)]
+        if not alive:
+            raise RuntimeError("every worker has crashed; nothing can run")
+        return alive
+
     def run(self, worker_steps: int) -> None:
         guard = 0
-        while min(self.steps_done) < worker_steps:
+        while min(self._alive_progress()) < worker_steps:
             self.tick()
             guard += 1
             if guard > worker_steps * max(self.speed) * 10 + 100:

@@ -8,10 +8,8 @@ and the MoE dispatch path.
 """
 from __future__ import annotations
 
-from typing import Sequence
 
 import jax
-import jax.numpy as jnp
 from jax import lax
 
 from repro import compat

@@ -1,0 +1,284 @@
+"""Fault-tolerant fabric tier: chain-replicated shards + deterministic faults.
+
+PBox is a *central* PS: the paper's balanced-hardware argument concentrates
+all parameter state on one box, so losing a single aggregation engine loses
+a slab of the model — catastrophic for every tenant driving the box.  GaDei
+(arXiv:1611.06213) makes the production case plainly: training-as-a-service
+only works once the PS layer tolerates crashes *without perturbing
+convergence*.  This module adds that layer for the in-process fabric:
+
+  ``ReplicaGroup``  chain (primary-backup) replication of one shard's chunk
+                    state at factor R.  After every aggregation round the
+                    primary ships its updated slab (params + optimizer
+                    state, raw f32 — state replication is never lossy) down
+                    the chain; a crash at any round boundary promotes the
+                    chain head, which by construction holds the primary's
+                    exact post-round bits.  Replica placement is
+                    anti-affine to racks (``NetworkTopology.replica_racks``)
+                    so a rack-level failure cannot take a shard and all its
+                    backups together.
+
+  ``FaultPlan``     a deterministic, seedable schedule of fault events
+                    (shard crash, worker crash / recovery, link degrade /
+                    restore) keyed on the fabric's *event clock round*, not
+                    wall-clock.  ``FaultPlan.generate(seed=...)`` draws the
+                    schedule once, at plan-build time; runtime injection is
+                    a pure table lookup, so every failure run is replayable
+                    byte-for-byte from (plan JSON, initial state).
+
+  ``ShardLost``     the diagnosable failure when a shard crashes with no
+                    surviving replica (R=1): training state is *gone* and
+                    the fabric says so loudly instead of silently serving a
+                    corrupt flat space.
+
+The headline invariant (tests/test_replication.py) extends the repo's
+signature bit-equality property: with R >= 2, a sync training run that
+crashes and fails over at any scheduled round is **bit-identical** to the
+failure-free run — across rack counts, shard counts and wire codecs —
+because failover promotes a byte-exact copy of the post-round state and
+re-silvering copies the promoted bits back onto a fresh backup.  Async/SSP
+runs keep exactly today's staleness bounds (faults there reorder timing,
+never bits beyond what the admission mode already allows).
+
+Wiring lives in ``core/fabric.py`` (failover routing, replication byte/time
+accounting on the rack/core tiers, fault injection at round boundaries),
+``core/topology.py`` (anti-affine placement, per-hop link cost),
+``core/tenancy.py`` (per-job failover isolation on the shared box) and
+``runtime/elastic.py`` (crashed-worker re-entry via snapshot/restore).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Iterable, Sequence
+
+import jax
+import numpy as np
+
+FAULT_KINDS = (
+    "shard_crash",  # target: shard id — primary engine dies at a round edge
+    "worker_crash",  # target: worker id — its in-flight stream dies with it
+    "worker_recover",  # target: worker id — re-entry via snapshot/restore
+    "link_degrade",  # target: rack id — rack link slows by ``factor``
+    "link_restore",  # target: rack id — degradation lifted
+)
+
+
+class ShardLost(RuntimeError):
+    """A shard crashed with no surviving replica: its slab of the flat
+    parameter space is unrecoverable.  Raised instead of silently serving
+    a corrupt (zero-filled or stale) flat space."""
+
+    def __init__(self, shard_id: int, num_chunks: int, round_: int,
+                 replication: int):
+        self.shard_id = shard_id
+        self.num_chunks = num_chunks
+        self.round = round_
+        self.replication = replication
+        super().__init__(
+            f"shard {shard_id} crashed at round {round_} holding "
+            f"{num_chunks} chunks with replication={replication}: no "
+            "surviving replica to fail over to. Training state is lost — "
+            "restore from the last checkpoint, or run the fabric with "
+            "replication>=2 so a chain backup can be promoted in place."
+        )
+
+
+# ---------------------------------------------------------------------------
+# fault plan
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault, keyed on the fabric's aggregation-round clock:
+    the event fires when the fabric *completes* round ``round`` (after the
+    round's update and chain replication — crash points are round edges,
+    which is what makes failover byte-exact and the schedule replayable)."""
+
+    round: int
+    kind: str
+    target: int
+    factor: float = 1.0  # link_degrade only: rack-link slowdown (>= 1)
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r}; one of {FAULT_KINDS}")
+        if self.round < 1:
+            raise ValueError("fault rounds start at 1 (after the first "
+                             "aggregation round completes)")
+        if self.target < 0:
+            raise ValueError("fault target must be >= 0")
+        if self.factor < 1.0:
+            raise ValueError("link_degrade factor must be >= 1")
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class FaultPlan:
+    """A deterministic fault schedule.
+
+    Build one explicitly from events, or draw one with ``generate(seed=)``
+    — randomness happens exactly once, at build time, with a seeded
+    generator; injection at runtime (``between``) is a pure lookup on the
+    fabric's round counter.  ``to_json``/``from_json`` round-trip the plan
+    so a failed CI run's fault trace replays byte-for-byte."""
+
+    def __init__(self, events: Iterable[FaultEvent] = ()):
+        evs = list(events)
+        for ev in evs:
+            if not isinstance(ev, FaultEvent):
+                raise TypeError(f"not a FaultEvent: {ev!r}")
+        # stable order: by round, then schedule order (ties fire in the
+        # order the plan lists them — part of the deterministic contract)
+        self.events: tuple[FaultEvent, ...] = tuple(
+            sorted(evs, key=lambda e: e.round))
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    @property
+    def max_round(self) -> int:
+        return max((e.round for e in self.events), default=0)
+
+    def between(self, after: int, upto: int) -> tuple[FaultEvent, ...]:
+        """Events with ``after < round <= upto`` in firing order — the
+        fabric advances a cursor so each event fires exactly once per
+        (replayed) pass over its round."""
+        return tuple(e for e in self.events if after < e.round <= upto)
+
+    # -- seeded generation ----------------------------------------------
+    @staticmethod
+    def generate(
+        seed: int,
+        *,
+        rounds: int,
+        num_shards: int,
+        num_workers: int,
+        num_racks: int = 1,
+        shard_crash_rate: float = 0.0,
+        worker_crash_rate: float = 0.0,
+        link_degrade_rate: float = 0.0,
+        recover_after: int = 2,
+        max_dead_workers: int = 1,
+    ) -> "FaultPlan":
+        """Draw a schedule once with ``np.random.default_rng(seed)``.
+
+        Per round, each fault class fires independently with its rate.
+        Crashed workers always get a matching ``worker_recover`` event
+        ``recover_after`` rounds later, and at most ``max_dead_workers``
+        are down at once (so quorum admission can still make rounds).
+        Link degradations are paired with a ``link_restore`` the following
+        round.  The same (seed, shape) always yields the same plan."""
+        rng = np.random.default_rng(seed)
+        events: list[FaultEvent] = []
+        down_until: dict[int, int] = {}  # worker -> recovery round
+        for r in range(1, rounds + 1):
+            down_until = {w: u for w, u in down_until.items() if u > r}
+            if shard_crash_rate and rng.random() < shard_crash_rate:
+                events.append(FaultEvent(
+                    r, "shard_crash", int(rng.integers(num_shards))))
+            if (worker_crash_rate and len(down_until) < max_dead_workers
+                    and rng.random() < worker_crash_rate):
+                alive = [w for w in range(num_workers) if w not in down_until]
+                if len(alive) > 1:
+                    w = int(alive[rng.integers(len(alive))])
+                    events.append(FaultEvent(r, "worker_crash", w))
+                    back = r + recover_after
+                    if back <= rounds:
+                        events.append(FaultEvent(back, "worker_recover", w))
+                        down_until[w] = back
+                    else:
+                        down_until[w] = rounds + 1
+            if link_degrade_rate and rng.random() < link_degrade_rate:
+                rack = int(rng.integers(num_racks))
+                factor = float(2.0 + 2.0 * rng.random())  # 2x-4x slowdown
+                events.append(FaultEvent(r, "link_degrade", rack, factor))
+                if r + 1 <= rounds:
+                    events.append(FaultEvent(r + 1, "link_restore", rack))
+        return FaultPlan(events)
+
+    # -- replayable serialization ---------------------------------------
+    def to_json(self) -> dict:
+        return {"schema": 1, "events": [e.to_json() for e in self.events]}
+
+    @classmethod
+    def from_json(cls, doc: dict | str) -> "FaultPlan":
+        if isinstance(doc, str):
+            doc = json.loads(doc)
+        if doc.get("schema") != 1:
+            raise ValueError("not a FaultPlan JSON document")
+        return cls(FaultEvent(**e) for e in doc["events"])
+
+    def describe(self) -> str:
+        kinds: dict[str, int] = {}
+        for e in self.events:
+            kinds[e.kind] = kinds.get(e.kind, 0) + 1
+        parts = ", ".join(f"{k}={v}" for k, v in sorted(kinds.items()))
+        return (f"FaultPlan: {len(self.events)} events over rounds "
+                f"1..{self.max_round} ({parts or 'empty'})")
+
+
+# ---------------------------------------------------------------------------
+# replica chain
+# ---------------------------------------------------------------------------
+class ReplicaGroup:
+    """Chain replication state for one shard: ``factor - 1`` backups, each
+    holding a byte-exact copy of the primary's (chunk ids, params,
+    optimizer state) as of the last completed ``sync``.
+
+    ``racks[0]`` is the primary's rack, ``racks[1:]`` the backups' —
+    anti-affine placement is the caller's job (the fabric asks
+    ``NetworkTopology.replica_racks``); the group just records it so byte
+    accounting knows which hops cross the core.  Copies reference
+    immutable jax arrays, so a "copy" is O(1) and trivially bit-exact —
+    what the chain guarantees is *which version* each backup holds."""
+
+    def __init__(self, shard_id: int, factor: int, racks: Sequence[int]):
+        if factor < 2:
+            raise ValueError("a ReplicaGroup needs factor >= 2")
+        if len(racks) != factor:
+            raise ValueError("racks must place every replica (primary first)")
+        self.shard_id = shard_id
+        self.factor = factor
+        self.racks = tuple(int(r) for r in racks)
+        self.synced_round = -1
+        # chain order: copies[0] is the chain head (first to be promoted)
+        self.copies: list[tuple[np.ndarray, jax.Array, tuple]] = []
+
+    @property
+    def num_backups(self) -> int:
+        return len(self.copies)
+
+    def state_bytes(self, num_state_slots: int, num_elems: int) -> int:
+        """Raw f32 bytes one chain hop ships: the slab's params plus every
+        optimizer-state slot.  Never codec-compressed — a lossy replica
+        could not be promoted bit-exactly."""
+        return 4 * num_elems * (1 + num_state_slots)
+
+    def hop_racks(self) -> tuple[tuple[int, int], ...]:
+        """(src, dst) rack per chain hop: primary -> backup 1 -> ... ."""
+        return tuple(
+            (self.racks[i], self.racks[i + 1])
+            for i in range(self.factor - 1)
+        )
+
+    def sync(self, shard: Any, round_: int) -> None:
+        """One chain pass: every backup now holds the primary's exact
+        post-round state (the fabric accounts bytes/time per hop)."""
+        copy = (shard.chunk_ids.copy(), shard.params, tuple(shard.state))
+        self.copies = [copy for _ in range(self.factor - 1)]
+        self.synced_round = round_
+
+    def promote(self) -> tuple[np.ndarray, jax.Array, tuple]:
+        """Fail over: pop the chain head's copy (the new primary's state).
+        The caller rebuilds the engine from it and then ``sync``s to
+        re-silver the chain back to full strength."""
+        if not self.copies:
+            raise ShardLost(self.shard_id, 0, -1, self.factor)
+        return self.copies.pop(0)
+
+    def describe(self) -> str:
+        return (f"ReplicaGroup(shard {self.shard_id}): factor {self.factor}, "
+                f"{self.num_backups} backups on racks {self.racks[1:]}, "
+                f"synced at round {self.synced_round}")

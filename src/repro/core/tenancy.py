@@ -35,6 +35,13 @@ count, shard count, and rack layout — each job's pushes are aggregated by
 its own admission state over its own namespace; nothing numeric crosses
 job boundaries.
 
+Failover isolation (fault tier, core/replication.py): each job's slab is
+chain-replicated at the job's own ``JobSpec.replication`` factor and fails
+over independently — a co-tenant's shard crash, failover and re-silvering
+are timing events on the shared wire, never numeric ones; with R >= 2 the
+crashing tenant itself stays bit-identical too, and ``ShardLost`` from an
+under-replicated tenant never blocks the others' recovery.
+
 Attach/detach at runtime reuses the elastic snapshot/restore machinery
 (runtime/elastic.py): ``detach`` returns a snapshot, ``attach(snapshot=)``
 restores it — re-targeting the flat state through ``elastic_restore`` when
@@ -75,6 +82,12 @@ class JobSpec:
     staleness: int = 0
     min_push_fraction: float = 1.0
     chunk_elems: int = DEFAULT_CHUNK_ELEMS
+    # fault tier (core/replication.py): chain-replicate this job's shard
+    # slabs at factor R, and optionally drive a deterministic fault
+    # schedule.  Both are per-job: one tenant's crashes and failovers
+    # must never perturb a co-tenant's bits (tests/test_replication.py)
+    replication: int = 1
+    fault_plan: Any | None = None  # replication.FaultPlan
 
     def __post_init__(self):
         if not self.name:
@@ -85,6 +98,8 @@ class JobSpec:
             raise ValueError("priority must be > 0")
         if self.bandwidth_cap is not None and not 0.0 < self.bandwidth_cap <= 1.0:
             raise ValueError("bandwidth_cap must be in (0, 1]")
+        if self.replication < 1:
+            raise ValueError("replication factor must be >= 1")
 
 
 class JobHandle:
@@ -181,6 +196,8 @@ def _build_fabric(
         namespace=namespace,
         chunk_base=chunk_base,
         shared_clock=shared_clock,
+        replication=spec.replication,
+        fault_plan=spec.fault_plan,
     )
 
 
@@ -273,6 +290,33 @@ class MultiJobFabric:
         # driven, behaves like a dedicated fabric)
         handle.fabric.shared_clock = None
         return handle.fabric.snapshot()
+
+    # -- fault tier (core/replication.py) --------------------------------
+    def crash_shard(self, shard_id: int) -> dict[str, str]:
+        """The physical engine ``shard_id`` dies for *every* tenant: each
+        attached job holds a slab on it, so each job's fabric fails over
+        its slab independently (promoting its own chain replica — per-job
+        failover isolation means one tenant's recovery never touches a
+        co-tenant's bits, only the shared engine's identity).
+
+        Returns job -> action.  Tenants are processed in attach order;
+        an under-replicated tenant (replication == 1) raises ``ShardLost``
+        *after* every replicated tenant has failed over, so one tenant's
+        missing backups never block the others' recovery."""
+        if not 0 <= shard_id < self.num_shards:
+            raise ValueError(f"no shard {shard_id}")
+        actions: dict[str, str] = {}
+        lost = None
+        for h in list(self.jobs.values()):
+            try:
+                actions[h.name] = h.fabric.crash_shard(shard_id)
+            except Exception as e:  # ShardLost: record, keep failing over
+                actions[h.name] = f"lost: {e}"
+                if lost is None:
+                    lost = e
+        if lost is not None:
+            raise lost
+        return actions
 
     # -- shared event clock (PBoxFabric.shared_clock protocol) -----------
     def wire_scales(self, fabric: PBoxFabric) -> tuple[float, float]:

@@ -23,6 +23,11 @@ Three pieces:
                         co-tenant jobs' transfers inflate each other's
                         wire time realistically.
 
+The fault tier (core/replication.py) also leans on the topology: replica
+placement is anti-affine to racks (``NetworkTopology.replica_racks``) and
+replication chain hops are priced per link tier (``hop_cost`` — rack-local
+1.0, cross-rack the oversubscription factor).
+
 Determinism note (load-bearing — see PBoxFabric's bit-equality invariant):
 f32 addition is not associative, and a real switch adds packets in arrival
 order, so floating-point in-network aggregation is nondeterministic.  With
@@ -98,6 +103,34 @@ class NetworkTopology:
     # -- queries -------------------------------------------------------
     def members(self, rack: int) -> tuple[int, ...]:
         return tuple(w for w, r in enumerate(self.rack_of) if r == rack)
+
+    def replica_racks(self, num_shards: int, factor: int) -> np.ndarray:
+        """Anti-affine replica placement for the fault tier
+        (core/replication.py): ``(num_shards, factor)`` rack ids where
+        replica ``r`` of shard ``s`` lives in rack ``(s + r) % num_racks``
+        — column 0 is the primary's home rack, and consecutive chain hops
+        land in *distinct* racks while ``factor <= num_racks``, so a
+        rack-level failure can never take a shard and all its backups at
+        once.  With ``factor > num_racks`` the chain wraps (full
+        anti-affinity is impossible); the extra copies share racks."""
+        if num_shards < 1:
+            raise ValueError("num_shards must be >= 1")
+        if factor < 1:
+            raise ValueError("replication factor must be >= 1")
+        home = np.arange(num_shards, dtype=np.int64) % self.num_racks
+        return (home[:, None]
+                + np.arange(factor, dtype=np.int64)[None, :]) % self.num_racks
+
+    def hop_cost(self, src_rack: int, dst_rack: int) -> float:
+        """Relative wire cost of moving one chunk between two racks'
+        domains: rack-local transfers ride the full-bisection edge tier
+        (1.0); anything crossing rack boundaries pays the oversubscribed
+        core uplink.  Replication traffic (core/replication.py) prices
+        its chain hops with this."""
+        for rack in (src_rack, dst_rack):
+            if not 0 <= rack < self.num_racks:
+                raise ValueError(f"rack {rack} not in the topology")
+        return 1.0 if src_rack == dst_rack else self.oversubscription
 
     @property
     def workers_per_rack(self) -> int:

@@ -8,17 +8,12 @@ HLO, (c) benchmark μs/step on CPU at small scale.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Sequence
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.core.chunking import ParamSpace
-from repro.core.exchange import ExchangeConfig, PSExchange
-from repro.optim.optimizers import OptimizerSpec
+from repro.core.exchange import PSExchange
 
 
 def make_zero_compute_step(

@@ -20,7 +20,6 @@ closed over as Python constants.
 """
 from __future__ import annotations
 
-import math
 from functools import partial
 
 import jax

@@ -87,7 +87,6 @@ def collective_bytes(hlo_text: str) -> dict:
 def run_cell(arch_id: str, shape: str, multi_pod: bool, strategy: str,
              out_dir: Path, force: bool = False,
              variant: str | None = None) -> dict:
-    import jax
 
     from repro.configs.registry import get_arch
     from repro.launch.mesh import make_production_mesh

@@ -8,7 +8,7 @@ the same plan drives real execution when given concrete arrays.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp

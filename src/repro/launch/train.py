@@ -39,7 +39,6 @@ def main() -> None:
         )
     import jax
     import jax.numpy as jnp
-    import numpy as np
 
     from repro.checkpoint import Checkpointer
     from repro.checkpoint.checkpointer import flat_to_train_state, train_state_to_flat

@@ -11,7 +11,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp

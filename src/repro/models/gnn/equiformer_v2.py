@@ -22,7 +22,6 @@ features are all-gathered per layer (the baseline whose collective term the
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Any
 
 import jax

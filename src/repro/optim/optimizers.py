@@ -17,7 +17,6 @@ regardless of the model's compute dtype.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Callable
 
 import jax

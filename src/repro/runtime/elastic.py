@@ -10,12 +10,24 @@ Covers the two production events:
   * node loss (shrink): restore latest checkpoint onto the smaller mesh
   * capacity add (grow): re-slice onto more owners; chunk padding already
     guarantees divisibility for any owner count dividing num_chunks
+
+plus the fault tier's third one (core/replication.py):
+  * worker crash + re-entry: ``worker_reentry`` re-admits a crashed
+    worker onto a *live* fabric through the same snapshot/restore
+    contract — the replacement process restores the fabric's current
+    snapshot, so its clock and pull version align with the committed
+    round and its first gradient is fresh by construction.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from repro.core.chunking import ParamSpace
+
+# snapshot keys that are not chunk-space data: scalars, worker-indexed
+# clocks and fault-tier metadata pass through elastic re-targeting
+# untouched (PBoxFabric.restore revalidates them against the new fabric)
+METADATA_KEYS = ("step", "worker_clock", "dead_workers", "replication")
 
 
 def reshard_flat(flat: np.ndarray, old_owners: int, new_owners: int,
@@ -74,7 +86,7 @@ def elastic_restore(host_state: dict, old_space: ParamSpace,
     new_space = rebuild_space(old_space, new_owners)
     out = {}
     for k, v in host_state.items():
-        if k in ("step", "worker_clock"):
+        if k in METADATA_KEYS:
             out[k] = v
             continue
         if isinstance(v, (tuple, list)) and len(v) == 0:
@@ -95,3 +107,19 @@ def elastic_restore(host_state: dict, old_space: ParamSpace,
             resized.append(g)
         out[k] = np.stack(resized) if arr.ndim > 1 else resized[0]
     return out, new_space
+
+
+def worker_reentry(fabric, worker: int) -> dict:
+    """Re-admit a crashed worker onto a live fabric (fault tier).
+
+    Reuses the snapshot/restore contract rather than inventing a third
+    state channel: the fabric's *current* snapshot is exactly what the
+    worker's replacement process restores (params, optimizer state, the
+    committed round, crash-consistent clocks), and ``revive_worker``
+    aligns the worker's admission state to that snapshot — clock at the
+    restored step, pull version current, so its first gradient is fresh
+    and SSP's staleness window is never tripped by the outage.  Returns
+    the snapshot handed to the replacement worker."""
+    snap = fabric.snapshot()
+    fabric.revive_worker(worker, clock=int(snap["step"]))
+    return snap

@@ -82,6 +82,7 @@ def attach_telemetry(
     stats: ServerStats | None = None,
     topology=None,
     job=None,
+    replication: int | None = None,
 ) -> Callable:
     """Wrap a jitted PS train step so every invocation records the modeled
     wire traffic into a fabric-style ``ServerStats``.
@@ -99,14 +100,27 @@ def attach_telemetry(
     worker stream when it is off) — the same codec-exact byte model
     (``compression.wire_bytes``) the fabric uses.
 
-    Pass a tenancy ``JobHandle`` as ``job`` to default ``stats`` and
-    ``topology`` from the job — the SPMD step's modeled traffic then lands
-    in that tenant's per-job ``ServerStats`` on the shared box."""
+    Pass a tenancy ``JobHandle`` as ``job`` to default ``stats``,
+    ``topology`` and ``replication`` from the job — the SPMD step's
+    modeled traffic then lands in that tenant's per-job ``ServerStats``
+    on the shared box.
+
+    ``replication`` models the fault tier's chain traffic
+    (core/replication.py) on this accounting surface too: each step ships
+    ``R - 1`` raw-f32 state streams (params + optimizer slots — state
+    replication is never lossy) into ``bytes_replication``, crossing the
+    core when the topology's anti-affine placement puts backups in other
+    racks."""
     from repro.core.compression import wire_bytes as _wire_bytes
 
     if job is not None:
         stats = job.stats if stats is None else stats
         topology = job.topology if topology is None else topology
+        if replication is None:
+            replication = getattr(job, "replication", None)
+    replication = 1 if replication is None else replication
+    if replication < 1:
+        raise ValueError("replication factor must be >= 1")
     if stats is None:
         raise ValueError("attach_telemetry needs stats= or job=")
     n_pod = mesh.shape[exchange.pod_axis] if exchange.pod_axis else 1
@@ -139,6 +153,12 @@ def attach_telemetry(
     else:
         rack_bytes = 0
         core_bytes = core_stream * n_workers
+    # fault tier: R-1 chain hops per step, each shipping the full slab
+    # state raw (params + optimizer slots); anti-affine placement means
+    # the hops cross racks whenever there is more than one rack
+    repl_stream = 4 * space.flat_elems * (1 + exchange.spec.num_state_slots)
+    repl_bytes = repl_stream * (replication - 1)
+    repl_cross_rack = topology is not None and topology.num_racks > 1
 
     def wrapped(*args, **kwargs):
         out = step_fn(*args, **kwargs)
@@ -151,6 +171,13 @@ def attach_telemetry(
         stats.bytes_core_link += core_bytes
         stats.chunk_pushes += space.num_chunks * n_workers
         stats.chunk_pulls += space.num_chunks * n_workers
+        if repl_bytes:
+            stats.bytes_replication += repl_bytes
+            stats.replication_rounds += 1
+            if repl_cross_rack:
+                stats.bytes_core_link += repl_bytes
+            elif topology is not None:
+                stats.bytes_rack_link += repl_bytes
         return out
 
     return wrapped

@@ -4,7 +4,6 @@ import jax, jax.numpy as jnp, numpy as np
 from repro import compat
 from jax.sharding import PartitionSpec as P
 
-from repro.core.chunking import ParamSpace
 from repro.core.exchange import ExchangeConfig, PSExchange
 from repro.core.compression import CompressionConfig
 from repro.optim.optimizers import adam, make_optimizer

@@ -4,10 +4,9 @@ import jax, jax.numpy as jnp, numpy as np
 from repro import compat
 from jax.sharding import PartitionSpec as P
 from repro.models import transformer as T
-from repro.models.moe import MoEConfig
 from repro.models.common import Dist
 from repro.core.exchange import ExchangeConfig, PSExchange
-from repro.optim.optimizers import adam, sgd, make_optimizer
+from repro.optim.optimizers import sgd, make_optimizer
 from repro.runtime.trainer import make_ps_train_step, init_train_state
 
 mesh = compat.make_mesh((2,4), ("data","model"))

@@ -1,6 +1,5 @@
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import jax, traceback
 from repro.launch.mesh import make_mesh
 from repro.launch.steps import build_cell
 from repro.configs.registry import list_cells, get_arch

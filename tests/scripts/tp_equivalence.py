@@ -4,7 +4,7 @@ import jax, jax.numpy as jnp, numpy as np
 from repro import compat
 from jax.sharding import PartitionSpec as P
 from repro.models.transformer import (TransformerConfig, init_params, lm_loss, prefill,
-    decode_step, init_cache, make_param_specs)
+    decode_step, make_param_specs)
 from repro.models.moe import MoEConfig
 from repro.models.common import Dist
 

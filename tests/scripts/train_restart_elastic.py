@@ -7,17 +7,15 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as P
 
 from repro.checkpoint import Checkpointer
 from repro.checkpoint.checkpointer import flat_to_train_state, train_state_to_flat
 from repro.configs.registry import get_arch
-from repro.core.exchange import ExchangeConfig, PSExchange
 from repro.data.synthetic import lm_batches
 from repro.launch.mesh import make_mesh
 from repro.launch.steps import build_cell, make_exchange
 from repro.models import transformer as T
-from repro.runtime.elastic import elastic_restore, rebuild_space
+from repro.runtime.elastic import elastic_restore
 from repro.runtime.trainer import TrainState, init_train_state
 
 mesh = make_mesh((2, 4), ("data", "model"))

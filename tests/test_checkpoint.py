@@ -1,14 +1,15 @@
 """Checkpointer: roundtrip, atomicity, async, corruption recovery, GC,
-elastic resharding."""
-import json
-import shutil
-from pathlib import Path
-
+elastic resharding, crash-consistent fabric snapshots (fault tier)."""
 import numpy as np
-import pytest
 
 from repro.checkpoint import Checkpointer
-from repro.core.chunking import ParamSpace
+from repro.checkpoint.checkpointer import (
+    fabric_snapshot_to_flat,
+    flat_to_fabric_snapshot,
+)
+from repro.core.chunking import ParamSpace, TILE_ELEMS
+from repro.core.fabric import PBoxFabric
+from repro.optim.optimizers import momentum
 from repro.runtime.elastic import elastic_restore, rebuild_space
 import jax.numpy as jnp
 
@@ -77,6 +78,120 @@ def test_elastic_reshard_roundtrip():
     np.testing.assert_array_equal(
         out2["pflat"][0][: space.payload_elems], flat[: space.payload_elems]
     )
+
+
+# ---------------------------------------------------------------------------
+# crash-consistent fabric checkpoints (fault tier, core/replication.py)
+# ---------------------------------------------------------------------------
+K = 4
+
+
+def _fabric_setup(seed=0):
+    space = ParamSpace.build({"w": jnp.zeros((4 * TILE_ELEMS - 100,))},
+                             chunk_elems=TILE_ELEMS)
+    rng = np.random.default_rng(seed)
+    grads = [jnp.asarray(rng.standard_normal(space.flat_elems), jnp.float32)
+             for _ in range(K)]
+    fab = PBoxFabric(space, momentum(0.1, 0.9),
+                     jnp.zeros((space.flat_elems,)), num_shards=2,
+                     num_workers=K)
+    return space, grads, fab
+
+
+def _round(fab, grads, r):
+    for w in range(K):
+        fab.pull(w)
+        fab.push(w, grads[(w + r) % K])
+
+
+def test_mid_round_checkpoint_reconverges_bit_identically(tmp_path):
+    """The satellite invariant: a Checkpointer snapshot taken between
+    push-admission and apply (two pushes staged, the round not fired)
+    restores to a state from which training re-converges bit-identically
+    to the failure-free run — the in-flight pushes are rolled back and
+    replayed, never half-applied."""
+    space, grads, fab = _fabric_setup()
+    _round(fab, grads, 0)
+    _round(fab, grads, 1)
+    # stage a partial round: 2 of 4 pushes admitted, barrier not met
+    for w in range(2):
+        fab.pull(w)
+        fab.push(w, grads[(w + 2) % K])
+    assert fab.stats.steps == 2
+    ck = Checkpointer(tmp_path)
+    meta = {}
+    path = ck.save_fabric(2, fab, meta={"note": "mid-round"})
+    assert path.exists()
+    # "crash": a fresh fabric restores the checkpoint and replays
+    _, _, fab2 = _fabric_setup()
+    meta = ck.restore_fabric(fab2)
+    assert meta["fabric_schema"] == 2
+    assert meta["fault_round"] == 2
+    assert meta["note"] == "mid-round"
+    assert (fab2.worker_clock == 2).all()  # in-flight pushes rolled back
+    for r in (2, 3):
+        _round(fab2, grads, r)
+    # failure-free twin: 4 clean rounds, no crash
+    _, _, twin = _fabric_setup()
+    for r in range(4):
+        _round(twin, grads, r)
+    np.testing.assert_array_equal(np.asarray(twin.params),
+                                  np.asarray(fab2.params))
+    assert twin.step == fab2.step == 4
+
+
+def test_fabric_checkpoint_roundtrips_replication_metadata(tmp_path):
+    space, grads, _ = _fabric_setup()
+    fab = PBoxFabric(space, momentum(0.1, 0.9),
+                     jnp.zeros((space.flat_elems,)), num_shards=2,
+                     num_workers=K, replication=2)
+    _round(fab, grads, 0)
+    fab.crash_worker(3)
+    ck = Checkpointer(tmp_path)
+    ck.save_fabric(1, fab)
+    fab2 = PBoxFabric(space, momentum(0.1, 0.9),
+                      jnp.zeros((space.flat_elems,)), num_shards=2,
+                      num_workers=K, replication=2)
+    meta = ck.restore_fabric(fab2)
+    assert meta["replication"] == 2
+    assert fab2.dead_workers == {3}
+    np.testing.assert_array_equal(np.asarray(fab.params),
+                                  np.asarray(fab2.params))
+
+
+def test_legacy_fabric_checkpoint_without_replication_metadata(tmp_path):
+    """Checkpoints written before the fault tier carry no worker_clock /
+    dead_workers / replication arrays: they must still load, restoring an
+    all-alive fabric with clocks at the checkpointed step."""
+    space, grads, fab = _fabric_setup()
+    _round(fab, grads, 0)
+    snap = fab.snapshot()
+    flat = fabric_snapshot_to_flat(snap)
+    legacy = {k: v for k, v in flat.items()
+              if k not in ("worker_clock", "dead_workers", "replication")}
+    ck = Checkpointer(tmp_path)
+    ck.save(1, legacy)  # raw save: no fabric meta either
+    _, _, fab2 = _fabric_setup()
+    fab2.crash_worker(0)  # restore must clear pre-existing crash state
+    meta = ck.restore_fabric(fab2)
+    assert meta == {}
+    assert not fab2.dead_workers
+    assert (fab2.worker_clock == 1).all()
+    np.testing.assert_array_equal(np.asarray(fab.params),
+                                  np.asarray(fab2.params))
+
+
+def test_flat_snapshot_helpers_roundtrip():
+    space, grads, fab = _fabric_setup()
+    _round(fab, grads, 0)
+    snap = fab.snapshot()
+    back = flat_to_fabric_snapshot(fabric_snapshot_to_flat(snap))
+    np.testing.assert_array_equal(back["params"], snap["params"])
+    assert len(back["state"]) == len(snap["state"])
+    for a, b in zip(back["state"], snap["state"]):
+        np.testing.assert_array_equal(a, b)
+    assert back["step"] == snap["step"]
+    assert int(back["replication"]) == snap["replication"]
 
 
 def test_rebuild_space_preserves_layout():

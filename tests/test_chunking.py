@@ -1,6 +1,5 @@
 """Property tests for the PHub chunk space (hypothesis, with a deterministic
 fallback when the optional dependency is missing)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -12,7 +11,6 @@ except ImportError:  # optional dep: fixed-seed stand-in, no shrinking
     from _hypo_fallback import given, settings, st
 
 from repro.core.chunking import (
-    DEFAULT_CHUNK_ELEMS,
     TILE_ELEMS,
     ParamSpace,
     tensor_chunk_map,

@@ -11,14 +11,13 @@ except ImportError:  # optional dep: fixed-seed stand-in, no shrinking
     from _hypo_fallback import given, settings, st
 
 from repro.data.graphs import (
-    CSRGraph,
     fanout_sample,
     random_csr_graph,
     random_graph,
     random_molecule_batch,
 )
 from repro.data.pipeline import Prefetcher
-from repro.data.synthetic import lm_batches, recsys_batches
+from repro.data.synthetic import lm_batches
 from repro.models.gnn.spherical import (
     real_sph_harm,
     rotation_to_z,

@@ -1,7 +1,6 @@
 """Trip-count-aware HLO analyzer vs ground truth (unrolled scans)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch.hlo_analysis import analyze_hlo

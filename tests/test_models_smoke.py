@@ -1,13 +1,12 @@
 """Per-arch smoke tests: reduced config, one forward/train step on CPU,
 output shapes + finite values.  LMs also check decode==prefill consistency."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.registry import get_arch, list_archs
+from repro.configs.registry import get_arch
 from repro.models.common import Dist
 
 LM_ARCHS = ["gemma3-1b", "internlm2-1.8b", "qwen2-72b", "granite-moe-1b-a400m",

@@ -3,7 +3,6 @@ quorum; chunk rebalancing invariants."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.chunking import ParamSpace
 from repro.core.server import PHubServer, WorkerHarness
