@@ -31,6 +31,7 @@ def main() -> None:
         kernel_micro,
         multi_job,
         replication,
+        serve_load,
         table1_frameworks,
         topo_rack_codec,
     )
@@ -45,6 +46,7 @@ def main() -> None:
         "topo": topo_rack_codec.run,
         "multijob": multi_job.run,
         "replication": replication.run,
+        "serve_load": serve_load.run,
     }
     only = set(args.only.split(",")) if args.only else None
     if only:

@@ -1,0 +1,198 @@
+"""Serve-load sweep: open-loop reads against the read plane under live
+training (core/serving.py on the tenancy tier).
+
+An open-loop generator fires read requests at a fixed arrival rate —
+arrivals never wait for completions, the closed-loop trap load benches
+fall into — against a ``ReadPlane`` serving a training tenant on a shared
+2-rack box.  Training rounds keep firing on the same event clock, so
+refreshes contend with push/pull through the weighted-fair-share scales
+and the per-link queues.  Requests queue FIFO per frontend and batch up to
+``BATCH_MAX`` while the frontend is busy; per-request latency is
+``completion - arrival`` on the event clock, reported as p50/p99.
+
+Derived columns per config:
+  p50, p99    read latency percentiles (simulated µs)
+  hit         frontend cache hit rate
+  reads       requests served
+  stale_max   worst staleness actually served (rounds)
+
+Must hold (asserted here, unit-tested in tests/test_serving.py):
+  * every read's bits == the training fabric's flat space at the read's
+    stamped version (version-stamped bit-identity);
+  * no read is served staler than the plane's bound;
+  * the training tenant's final params are bit-identical to the same job
+    run on a dedicated fabric with no serving attached (reads never
+    perturb training);
+  * p50 <= p99, and cache hits are never slower than misses in aggregate.
+
+Everything is event-clock simulated and seeded — rows are deterministic
+across hosts, so the regression gate holds this bench to a tight band.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core.fabric import LinkModel
+from repro.core.tenancy import JobSpec, MultiJobFabric, dedicated_fabric
+from repro.optim.optimizers import momentum
+
+K = 4  # training workers
+RACKS = 2
+SHARDS = 2
+ROUNDS = 8  # training rounds the load runs under
+N_REQUESTS = 120
+INTERARRIVAL_US = 3.0
+ROUND_PERIOD_US = 40.0  # a training round completes every this often
+BATCH_MAX = 4
+LINK = LinkModel(wire_us_per_chunk=1.0, agg_us_per_chunk=0.2)
+
+
+def _spec():
+    params = {"w": jnp.zeros((8 * 8192 - 512,))}  # 8 chunks
+    return JobSpec(name="train", params=params,
+                   optimizer=momentum(0.1, 0.9), num_workers=K,
+                   replication=2)
+
+
+def _grads(space):
+    rng = np.random.default_rng(0)
+    return [
+        jnp.asarray(rng.standard_normal(space.flat_elems), jnp.float32)
+        for _ in range(K)
+    ]
+
+
+def _round(handle, grads, rnd: int) -> None:
+    for w in range(K):
+        handle.pull(w)
+    for w in range(K):
+        handle.push(w, grads[(w + rnd) % K])
+
+
+def run_load(
+    *,
+    frontends: int,
+    max_staleness: int,
+    n_requests: int = N_REQUESTS,
+    interarrival_us: float = INTERARRIVAL_US,
+    round_period_us: float = ROUND_PERIOD_US,
+    rounds: int = ROUNDS,
+    batch_max: int = BATCH_MAX,
+) -> dict:
+    """One open-loop run; returns latencies + plane stats + the invariant
+    witnesses (param history, final fabric bits) for the caller to assert
+    on.  Deterministic: arrivals, gradients and the event clock carry no
+    randomness beyond the fixed seed."""
+    spec = _spec()
+    box = MultiJobFabric(num_shards=SHARDS, num_racks=RACKS, link=LINK)
+    handle = box.attach(spec)
+    plane = box.attach_serving(
+        JobSpec(name="serve", params=None, optimizer=None,
+                num_workers=frontends, priority=1.0),
+        "train", max_staleness=max_staleness,
+    )
+    space = handle.fabric.space
+    grads = _grads(space)
+    history = {handle.fabric.step: np.asarray(handle.fabric.params)}
+
+    fired = 0
+    next_round_at = round_period_us
+
+    def fire_due(now: float) -> None:
+        nonlocal fired, next_round_at
+        while fired < rounds and next_round_at <= now:
+            _round(handle, grads, fired)
+            history[handle.fabric.step] = np.asarray(handle.fabric.params)
+            fired += 1
+            next_round_at += round_period_us
+
+    # open loop: request i arrives at i * interarrival, assigned to
+    # frontend i % F; each frontend serves FIFO, batching what queued up
+    # while it was busy
+    free_at = [0.0] * frontends
+    queues: list[list[float]] = [[] for _ in range(frontends)]
+    for i in range(n_requests):
+        queues[i % frontends].append(i * interarrival_us)
+    latencies: list[float] = []
+    reads = []
+    for f, queue in enumerate(queues):
+        i = 0
+        while i < len(queue):
+            start = max(queue[i], free_at[f])
+            fire_due(start)
+            n = 1
+            while (i + n < len(queue) and n < batch_max
+                   and queue[i + n] <= start):
+                n += 1
+            batch = plane.read_batch(f, n)
+            service = batch[0].sim_us
+            done = start + service
+            for j in range(n):
+                latencies.append(done - queue[i + j])
+            reads.extend(batch)
+            free_at[f] = done
+            i += n
+    # drain the training run to its full length so every config trains
+    # identically regardless of serve load shape
+    while fired < rounds:
+        fire_due(next_round_at)
+
+    lat = np.asarray(latencies)
+    return {
+        "plane": plane,
+        "handle": handle,
+        "box": box,
+        "spec": spec,
+        "history": history,
+        "reads": reads,
+        "p50": float(np.percentile(lat, 50)),
+        "p99": float(np.percentile(lat, 99)),
+        "latencies": lat,
+    }
+
+
+def run() -> None:
+    final_bits: np.ndarray | None = None
+    for frontends, stale in ((1, 0), (2, 0), (2, 4), (4, 4)):
+        out = run_load(frontends=frontends, max_staleness=stale)
+        plane, handle = out["plane"], out["handle"]
+        history = out["history"]
+        name = f"serve_load/front={frontends}_stale={stale}"
+        # version-stamped bit-identity: every read == the fabric's flat
+        # space at the read's stamped round
+        for r in out["reads"]:
+            assert np.array_equal(np.asarray(r.flat), history[r.version]), (
+                f"{name}: read at version {r.version} diverged from the "
+                "fabric's params at that round")
+            assert 0 <= r.staleness <= stale, (
+                f"{name}: read served {r.staleness} rounds stale, bound "
+                f"{stale}")
+        assert plane.stats.max_staleness_served <= stale
+        # serving never perturbs training: final bits match a dedicated,
+        # serve-free fabric — and every config trains identically
+        ded = dedicated_fabric(out["spec"], out["box"])
+        grads = _grads(ded.space)
+        for rnd in range(ROUNDS):
+            _round(ded, grads, rnd)
+        assert np.array_equal(np.asarray(ded.params),
+                              np.asarray(handle.fabric.params)), (
+            f"{name}: training diverged under serve load")
+        bits = np.asarray(handle.fabric.params)
+        if final_bits is None:
+            final_bits = bits
+        else:
+            assert np.array_equal(final_bits, bits), (
+                f"{name}: serve-load shape changed training bits")
+        p50, p99 = out["p50"], out["p99"]
+        assert p50 <= p99, f"{name}: p50 {p50} > p99 {p99}"
+        s = plane.stats
+        emit(name, p99,
+             f"p50={p50:.2f};p99={p99:.2f};hit={s.hit_rate:.3f};"
+             f"reads={s.reads};stale_max={s.max_staleness_served}")
+
+
+if __name__ == "__main__":
+    run()

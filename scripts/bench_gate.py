@@ -2,10 +2,11 @@
 """Benchmark-regression gate: compare a ``benchmarks.run --json`` output
 against the committed baseline (BENCH_baseline.json).
 
-The gated benches (topo, multijob) report *simulated* event-clock numbers
-and exact codec byte accounting — deterministic across hosts — so the gate
-can be tight without flaking on shared CI runners.  Wall-clock benches can
-join the baseline later with a wider ``--tolerance``.
+The gated benches (topo, multijob, replication, serve_load) report
+*simulated* event-clock numbers and exact codec byte accounting —
+deterministic across hosts — so the gate can be tight without flaking on
+shared CI runners.  Wall-clock benches can join the baseline later with a
+wider ``--tolerance``.
 
 Rules, per baseline row:
   * the row must still exist in the current run (a silently vanished bench
@@ -26,11 +27,17 @@ name=value``) tightens it for benches whose us_per_call is a pure
 event-clock number — ``replication`` reports simulated recovery time, so
 any drift at all is a semantic change, not runner noise.
 
+When ``$GITHUB_STEP_SUMMARY`` is set (or ``--summary PATH`` is given), the
+gate also appends a markdown verdict table (bench, baseline, measured,
+band, verdict) so CI regressions are readable from the run page without
+downloading the bench-results artifact.
+
 Usage:
-  python -m benchmarks.run --only topo,multijob,replication --json out.json
+  python -m benchmarks.run --only topo,multijob,replication,serve_load \
+      --json out.json
   python scripts/bench_gate.py out.json [--baseline BENCH_baseline.json]
       [--tolerance 0.15] [--derived-tolerance 0.01]
-      [--bench-tolerance replication=0.05] [--update]
+      [--bench-tolerance replication=0.05] [--summary PATH] [--update]
 
 Exit codes: 0 pass, 1 regression, 2 bad invocation/inputs.
 """
@@ -52,6 +59,7 @@ DEFAULT_BASELINE = os.path.join(
 # runners.  CLI --bench-tolerance overrides these.
 PER_BENCH_TOLERANCE = {
     "replication": 0.05,
+    "serve_load": 0.05,  # p99 read latency is pure event-clock time
 }
 
 
@@ -78,6 +86,33 @@ def index_rows(doc: dict) -> dict[str, dict]:
     return out
 
 
+def write_summary(path: str, table: list[tuple], failures: int) -> None:
+    """Render the gate's verdicts as a markdown table (bench, baseline,
+    measured, band, verdict) — appended to ``$GITHUB_STEP_SUMMARY`` so a
+    regression is readable from the run page without downloading the
+    bench-results artifact."""
+    lines = [
+        "### Bench regression gate",
+        "",
+        f"**{'FAIL' if failures else 'PASS'}** — {len(table)} gated row(s), "
+        f"{failures} regression(s)",
+        "",
+        "| bench row | baseline µs | measured µs | band | verdict |",
+        "| --- | ---: | ---: | ---: | --- |",
+    ]
+    for name, base_us, cur_us, band, verdict in table:
+        b = f"{base_us:.2f}" if base_us is not None else "—"
+        c = f"{cur_us:.2f}" if cur_us is not None else "—"
+        tol = f"±{band:.0%}" if band is not None else "—"
+        lines.append(f"| `{name}` | {b} | {c} | {tol} | {verdict} |")
+    try:
+        with open(path, "a") as f:
+            f.write("\n".join(lines) + "\n")
+    except OSError as e:
+        print(f"bench-gate: cannot write summary {path}: {e}",
+              file=sys.stderr)
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("current", help="JSON from benchmarks.run --json")
@@ -90,6 +125,10 @@ def main() -> int:
                     metavar="NAME=VAL",
                     help="per-bench us_per_call band override (repeatable); "
                          f"defaults: {PER_BENCH_TOLERANCE}")
+    ap.add_argument("--summary", default=os.environ.get("GITHUB_STEP_SUMMARY"),
+                    metavar="PATH",
+                    help="append a markdown verdict table here (defaults to "
+                         "$GITHUB_STEP_SUMMARY when set)")
     ap.add_argument("--update", action="store_true",
                     help="rewrite the baseline from the current run")
     args = ap.parse_args()
@@ -131,28 +170,37 @@ def main() -> int:
 
     failures: list[str] = []
     notes: list[str] = []
+    table: list[tuple] = []  # (name, base_us, cur_us, band, verdict)
     for name, b in sorted(base.items()):
         c = cur.get(name)
+        tol = bench_tol.get(b["bench"], args.tolerance)
         if c is None:
             failures.append(f"{name}: present in baseline but missing from "
                             "the current run")
+            table.append((name, b["us_per_call"], None, tol, "❌ missing"))
             continue
         if not c["ok"]:
             failures.append(f"{name}: bench module {c['bench']!r} failed")
+            table.append((name, b["us_per_call"], None, tol,
+                          "❌ bench failed"))
             continue
-        tol = bench_tol.get(b["bench"], args.tolerance)
         b_us, c_us = b["us_per_call"], c["us_per_call"]
+        fails_before = len(failures)
+        verdict = "✅ ok"
         if not math.isfinite(c_us):
             # NaN/inf compares False against everything — without this
             # guard a corrupted metric would sail through the gate
             failures.append(f"{name}: us_per_call is {c_us!r}")
+            verdict = "❌ non-finite"
         elif c_us > b_us * (1.0 + tol):
             failures.append(
                 f"{name}: us_per_call {c_us:.2f} regressed past "
                 f"{b_us:.2f} * (1+{tol:g})")
+            verdict = "❌ regressed"
         elif b_us > 0 and c_us < b_us * (1.0 - tol):
             notes.append(f"{name}: faster than baseline "
                          f"({c_us:.2f} vs {b_us:.2f}) — consider --update")
+            verdict = "⚡ faster"
         for key, bv in b.get("derived", {}).items():
             cv = c.get("derived", {}).get(key)
             if cv is None:
@@ -170,11 +218,19 @@ def main() -> int:
             elif cv != bv:
                 failures.append(
                     f"{name}: derived {key}={cv!r} != baseline {bv!r}")
+        if len(failures) > fails_before and verdict.startswith(("✅", "⚡")):
+            verdict = "❌ derived drift"
+        table.append((name, b_us, c_us, tol, verdict))
     new = sorted(set(cur) - set(base))
     if new:
         notes.append(f"{len(new)} row(s) not in baseline (not gated): "
                      + ", ".join(new[:5]) + ("..." if len(new) > 5 else ""))
+        for name in new:
+            table.append((name, None, cur[name]["us_per_call"], None,
+                          "➕ new (ungated)"))
 
+    if args.summary:
+        write_summary(args.summary, table, len(failures))
     for n in notes:
         print(f"bench-gate note: {n}")
     if failures:

@@ -17,6 +17,13 @@ from repro.core.replication import (
     ShardLost,
 )
 from repro.core.server import PHubServer
+from repro.core.serving import (
+    FabricSource,
+    ReadPlane,
+    ReadResult,
+    ServeStats,
+    SnapshotSource,
+)
 from repro.core.topology import NetworkTopology, RackAggregator
 
 __all__ = [
@@ -39,4 +46,9 @@ __all__ = [
     "ShardStats",
     "PHubServer",
     "WorkerHarness",
+    "FabricSource",
+    "ReadPlane",
+    "ReadResult",
+    "ServeStats",
+    "SnapshotSource",
 ]

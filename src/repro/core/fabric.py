@@ -65,6 +65,12 @@ transparently); with R = 1 it raises ``ShardLost``.  Worker crashes shrink
 the admission barrier to the surviving population and re-enter via
 ``runtime/elastic.worker_reentry``.  Replication/recovery bytes land in
 the same rack/core link accounting as training traffic.
+
+Read plane (core/serving.py): a ``ReadPlane`` serves version-stamped,
+staleness-bounded parameter reads from the chain replica *tails* while
+training runs — it registers in ``read_planes`` only so ``restore`` can
+invalidate its caches; it never writes fabric state, so attaching it
+leaves training bit-identical.
 """
 from __future__ import annotations
 
@@ -436,6 +442,12 @@ class PBoxFabric:
         self.dead_workers: set[int] = set()
         self._link_degrade: dict[int, float] = {}  # rack -> slowdown >= 1
         self._fault_cursor = 0  # last round whose faults already fired
+        # read plane (core/serving.py): attached ReadPlanes register here
+        # (as weakrefs — a dropped plane's caches must stay collectable)
+        # so restore() can invalidate their version-stamped caches.  The
+        # serving tier never writes fabric state — attaching a plane
+        # leaves training bit-identical by construction.
+        self.read_planes: list[Any] = []  # list[weakref.ref[ReadPlane]]
         self.replicas: list[ReplicaGroup] = []
         if replication > 1:
             if topology is not None:
@@ -1147,6 +1159,15 @@ class PBoxFabric:
         self._fault_cursor = self.step
         for group, shard in zip(self.replicas, self.shards):
             group.sync(shard, round_=self.step)  # provisioning, not wire
+        # serving caches stamped with rounds from the abandoned timeline
+        # must never serve again (the restored counter may rewind past
+        # them, and the same round number will hold different bits);
+        # dead planes are pruned as a side effect
+        self.read_planes = [r for r in self.read_planes if r() is not None]
+        for ref in self.read_planes:
+            plane = ref()
+            if plane is not None:
+                plane.invalidate()
         self._flat_cache = None
 
     # -- introspection -----------------------------------------------------
@@ -1188,6 +1209,10 @@ class PBoxFabric:
                 f"{s.failovers} failovers ({s.resilvers} re-silvered), "
                 f"{len(self.dead_workers)} workers down"
             )
+        for ref in self.read_planes:
+            plane = ref()
+            if plane is not None:
+                lines.append("  " + plane.describe())
         for shard in self.shards:
             lines.append(
                 f"  shard {shard.shard_id}: {shard.num_chunks} chunks, "

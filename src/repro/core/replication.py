@@ -270,6 +270,16 @@ class ReplicaGroup:
         self.copies = [copy for _ in range(self.factor - 1)]
         self.synced_round = round_
 
+    def tail(self) -> tuple[np.ndarray, jax.Array, tuple]:
+        """The chain tail's copy (chunk ids, params, optimizer state) —
+        what the read plane (core/serving.py) serves from: the replica
+        furthest from the primary, so serving load never queues on the
+        engine the training hot path is writing.  Byte-exact for the last
+        ``sync``ed round by construction."""
+        if not self.copies:
+            raise ShardLost(self.shard_id, 0, self.synced_round, self.factor)
+        return self.copies[-1]
+
     def promote(self) -> tuple[np.ndarray, jax.Array, tuple]:
         """Fail over: pop the chain head's copy (the new primary's state).
         The caller rebuilds the engine from it and then ``sync``s to

@@ -1,0 +1,515 @@
+"""Read plane: replica-backed parameter serving under live training.
+
+The paper evaluates PBox on its write path (push -> aggregate -> optimize),
+but a central parameter store's other half is reads at scale: a live model
+store serving version-stamped parameters to inference frontends while
+training keeps mutating them.  PHub (arXiv:1805.07891) frames the PS as
+rack-scale *service* hardware and GaDei (arXiv:1611.06213) runs training
+and serving against one store; this module adds that read plane on top of
+the fabric without touching its training hot path:
+
+  ``ReadPlane``      the serving tier: N frontends, each with a pull cache
+                     invalidated by round version, serving staleness-bounded
+                     batched reads.  Cache misses refresh from *chain
+                     replica tails* (core/replication.py) routed to the
+                     rack-local replica (``NetworkTopology.hop_cost``), so
+                     serve traffic never queues behind — or ahead of — the
+                     primary aggregation engines.
+  ``FabricSource``   adapter over a live ``PBoxFabric`` (or a tenancy
+                     ``JobHandle``): version = the fabric's round counter,
+                     bits = the replica tails' post-round slabs (the
+                     primary slabs when replication is 1).
+  ``SnapshotSource`` adapter over a frozen flat space (a checkpoint, or a
+                     host-side copy of SPMD train state): a single
+                     published version, optionally re-published/advanced
+                     by the training loop (runtime/trainer.attach_telemetry
+                     advances it per step).
+  ``ServeStats``     read-plane accounting: hits/misses, replica vs primary
+                     refreshes, rack/core serve bytes, staleness ceiling.
+
+Serving semantics (load-bearing, tests/test_serving.py):
+
+  * **Version stamping** — every read returns ``ReadResult.version``, the
+    fabric round its bits belong to, and the bits are *bit-identical* to
+    ``fabric.params`` as of that round (replica tails hold byte-exact
+    post-round copies; with R = 1 the read comes from the primary slab).
+  * **Staleness bound** — a read's ``staleness`` (rounds between the
+    stamped version and the store's current version at serve time) never
+    exceeds ``max_staleness``: the frontend cache serves hits only inside
+    the bound and refreshes otherwise.  ``max_staleness=0`` is
+    read-your-round consistency; larger bounds trade freshness for cache
+    hit rate (SSP for the read side).
+  * **Cache invalidation rule** — a frontend's cache is keyed by the round
+    version it pulled; it is invalidated exactly when
+    ``current_version - cached_version > max_staleness`` (and wholesale by
+    ``invalidate()``, which the fabric calls on ``restore`` — a rewound
+    round counter must not leave forward-dated cache entries behind).
+  * **Training isolation** — the read plane never writes fabric state:
+    attaching it and serving any number of reads leaves training
+    bit-identical to an unserved run.  Contention is timing-only, via the
+    tenancy tier: a serve job attached through
+    ``MultiJobFabric.attach_serving`` carries a ``JobSpec`` priority /
+    bandwidth cap, joins the weighted-fair-share totals, and books its
+    refresh streams on the shared per-link ``LinkQueue``s.
+
+The event-clock model prices a cache miss as one raw-f32 stream per shard
+from its serving replica's rack into the frontend's rack (rack-local hops
+ride the full-bisection tier, cross-rack hops pay the oversubscribed core
+— same ``hop_cost`` the replication chains use), inflated by the serve
+job's fair share; ``benchmarks/serve_load.py`` drives an open-loop load
+generator against this clock and reports p50/p99 read latency.
+"""
+from __future__ import annotations
+
+import dataclasses
+import weakref
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# stats
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class ServeStats:
+    """Read-plane accounting (the serve-side twin of fabric ServerStats)."""
+
+    reads: int = 0  # requests served (batch members count individually)
+    batches: int = 0  # read_batch calls
+    cache_hits: int = 0  # requests served from a frontend's pull cache
+    cache_misses: int = 0  # requests that forced a refresh
+    refreshes: int = 0  # replica pulls (one per miss batch)
+    replica_streams: int = 0  # refresh streams served by chain backups
+    primary_streams: int = 0  # refresh streams served by primary slabs (R=1)
+    snapshot_streams: int = 0  # refresh streams served by a SnapshotSource
+    bytes_refreshed: int = 0  # replica/primary -> frontend (raw f32)
+    bytes_rack_link: int = 0  # refresh bytes on rack-local links
+    bytes_core_link: int = 0  # refresh bytes crossing the core
+    bytes_served: int = 0  # frontend -> client
+    max_staleness_served: int = 0  # staleness ceiling actually observed
+    sim_serve_us: float = 0.0  # cumulative event-clock service time
+
+    @property
+    def hit_rate(self) -> float:
+        if self.reads == 0:
+            return 0.0
+        return self.cache_hits / self.reads
+
+
+@dataclasses.dataclass(frozen=True)
+class ReadResult:
+    """One served read: the full flat parameter space plus its provenance.
+
+    ``version`` is the fabric round the bits belong to; ``staleness`` is
+    how many rounds behind the *upstream* round counter this read was at
+    serve time.  The enforced ``max_staleness`` bound is measured against
+    the newest **servable** version — identical for a fabric source, but
+    a snapshot-backed store may itself lag upstream training
+    (``SnapshotSource.advance``), and that lag is reported here on top of
+    the bounded part."""
+
+    version: int
+    flat: jax.Array
+    staleness: int
+    cache_hit: bool
+    frontend: int
+    sim_us: float
+
+
+@dataclasses.dataclass(frozen=True)
+class _Stream:
+    """One refresh stream: ``num_chunks`` chunks out of ``src_rack``."""
+
+    num_chunks: int
+    src_rack: int
+    kind: str  # "replica" | "primary" | "snapshot"
+
+
+# ---------------------------------------------------------------------------
+# parameter sources
+# ---------------------------------------------------------------------------
+class FabricSource:
+    """Read-side adapter over a live ``PBoxFabric`` (or a tenancy
+    ``JobHandle``, which delegates the same surface).
+
+    With replication >= 2 the bits come from each shard's *chain tail*
+    (``ReplicaGroup.tail``) — byte-exact post-round copies, synced at every
+    round edge, so serving never reads the primary engines the training
+    hot path is writing.  With replication 1 there is no chain and reads
+    fall back to the primary slabs (still bit-exact: the fabric only
+    mutates them at round edges).  Refresh streams are routed from the
+    replica rack nearest the reading frontend (anti-affine placement means
+    most racks have a local replica of most shards)."""
+
+    def __init__(self, fabric: Any):
+        if not hasattr(fabric, "shards") or not hasattr(fabric, "space"):
+            raise TypeError(
+                "FabricSource wraps a PBoxFabric (or a JobHandle delegating "
+                f"one); got {type(fabric).__name__}"
+            )
+        self.fabric = fabric
+
+    @property
+    def version(self) -> int:
+        return int(self.fabric.step)
+
+    @property
+    def space(self):
+        return self.fabric.space
+
+    @property
+    def num_racks(self) -> int:
+        topo = self.fabric.topology
+        return topo.num_racks if topo is not None else 1
+
+    @property
+    def wire_us_per_chunk(self) -> float:
+        return self.fabric.link.wire_us_per_chunk
+
+    def _replicated(self) -> bool:
+        return bool(self.fabric.replication > 1 and self.fabric.replicas)
+
+    def _primary_racks(self) -> np.ndarray:
+        """Home rack per shard (the only serving option at R = 1)."""
+        topo = self.fabric.topology
+        if topo is None:
+            return np.zeros(self.fabric.num_shards, dtype=np.int64)
+        return topo.replica_racks(self.fabric.num_shards, 1)[:, 0]
+
+    def hop_cost(self, src_rack: int, dst_rack: int) -> float:
+        topo = self.fabric.topology
+        if topo is None:
+            return 1.0
+        return topo.hop_cost(src_rack, dst_rack)
+
+    def serve_rack(self, shard_id: int, frontend_rack: int) -> int:
+        """The rack whose replica serves ``frontend_rack``'s refreshes of
+        shard ``shard_id``: the cheapest hop among the chain's *backup*
+        racks (every backup holds the same bits, so routing is free to be
+        locality-greedy); the primary's home rack when R = 1."""
+        if not self._replicated():
+            return int(self._primary_racks()[shard_id])
+        racks = self.fabric.replicas[shard_id].racks[1:]
+        topo = self.fabric.topology
+        if topo is None:
+            return int(racks[0])
+        return topo.nearest_rack(racks, frontend_rack)
+
+    def streams(self, frontend_rack: int) -> list[_Stream]:
+        kind = "replica" if self._replicated() else "primary"
+        return [
+            _Stream(shard.num_chunks, self.serve_rack(shard.shard_id,
+                                                      frontend_rack), kind)
+            for shard in self.fabric.shards
+            if shard.num_chunks
+        ]
+
+    def assemble(self) -> jax.Array:
+        """The full flat space at the current version, assembled from the
+        serving replicas (bit-identical to ``fabric.params`` — asserted
+        structurally: tails are synced references to the post-round slabs).
+        """
+        fabric = self.fabric
+        if not self._replicated():
+            return fabric.params
+        space = fabric.space
+        rows = jnp.zeros((space.num_chunks, space.chunk_elems), jnp.float32)
+        for group, shard in zip(fabric.replicas, fabric.shards):
+            if group.synced_round != fabric.step:
+                raise RuntimeError(
+                    f"shard {shard.shard_id}'s chain is synced at round "
+                    f"{group.synced_round}, fabric is at {fabric.step}: "
+                    "replica tails cannot serve an unsynced round"
+                )
+            ids, params, _state = group.tail()
+            if len(ids):
+                rows = rows.at[jnp.asarray(ids)].set(params)
+        return rows.reshape(-1)
+
+
+class SnapshotSource:
+    """A frozen flat parameter space as a read-plane source.
+
+    Built from a checkpointed fabric snapshot (``from_snapshot``) or any
+    host/device flat array — the live-training story's other half: a
+    serving tier warmed from the last checkpoint, later re-published in
+    place (``publish``) or version-advanced per SPMD train step
+    (``advance``, driven by ``runtime/trainer.attach_telemetry``)."""
+
+    def __init__(self, flat: Any, *, version: int = 0,
+                 wire_us_per_chunk: float = 1.0, chunk_elems: int = 8192):
+        self._flat = jnp.asarray(flat, jnp.float32).reshape(-1)
+        self._version = int(version)
+        self._upstream = int(version)
+        self.wire_us_per_chunk = float(wire_us_per_chunk)
+        self.chunk_elems = int(chunk_elems)
+        self.num_racks = 1
+
+    @classmethod
+    def from_snapshot(cls, snap: dict, **kw) -> "SnapshotSource":
+        """Wrap a ``PBoxFabric.snapshot()`` (or ``Checkpointer``-restored)
+        dict: the stamped version is the snapshot's round counter."""
+        return cls(snap["params"], version=int(snap["step"]), **kw)
+
+    @property
+    def version(self) -> int:
+        return self._version
+
+    def publish(self, flat: Any, version: int) -> None:
+        """Replace the served bits (a newer checkpoint landed).  Versions
+        are strictly monotone: re-publishing an already-served version
+        with different bits would break version-stamped bit-identity."""
+        if version <= self._version:
+            raise ValueError(
+                f"cannot publish version {version} over {self._version}: "
+                "the read plane's versions only move forward"
+            )
+        self._flat = jnp.asarray(flat, jnp.float32).reshape(-1)
+        self._version = int(version)
+        self._upstream = max(self._upstream, self._version)
+
+    def advance(self, rounds: int = 1) -> None:
+        """The upstream trainer completed ``rounds`` more rounds without
+        re-publishing bits here: reported read staleness grows (the store
+        itself lags — exactly what a checkpoint-warmed serving tier does
+        between checkpoint publishes)."""
+        if rounds < 0:
+            raise ValueError("rounds must be >= 0")
+        self._upstream += rounds
+
+    @property
+    def upstream_version(self) -> int:
+        """The newest version known to exist upstream (== the published
+        version until ``advance`` says training moved past it)."""
+        return self._upstream
+
+    def hop_cost(self, src_rack: int, dst_rack: int) -> float:
+        return 1.0
+
+    def streams(self, frontend_rack: int) -> list[_Stream]:
+        n = max(1, -(-self._flat.size // self.chunk_elems))
+        return [_Stream(n, 0, "snapshot")]
+
+    def assemble(self) -> jax.Array:
+        return self._flat
+
+
+# ---------------------------------------------------------------------------
+# the read plane
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class _Frontend:
+    """One serving frontend: its rack and its version-keyed pull cache."""
+
+    fid: int
+    rack: int
+    version: int | None = None
+    flat: jax.Array | None = None
+
+
+class ReadPlane:
+    """Staleness-bounded, version-stamped parameter serving over a live
+    fabric (or a checkpointed snapshot) — see the module docstring for the
+    serving semantics.
+
+    ``source`` may be a ``PBoxFabric``, a tenancy ``JobHandle`` (both are
+    wrapped in a ``FabricSource``), or any source object (``FabricSource``
+    / ``SnapshotSource``).  ``num_frontends`` serving frontends are placed
+    round-robin over the topology's racks; each keeps one cached flat
+    space keyed by the round version it pulled.
+
+    Tenancy: ``MultiJobFabric.attach_serving`` sets ``shared`` so refresh
+    streams are inflated by the serve job's weighted fair share and booked
+    on the shared per-link queues; standalone planes serve uncontended
+    (``bandwidth_cap`` still applies)."""
+
+    def __init__(
+        self,
+        source: Any,
+        *,
+        max_staleness: int = 0,
+        num_frontends: int = 1,
+        name: str = "serve",
+        priority: float = 1.0,
+        bandwidth_cap: float | None = None,
+        serve_us_per_read: float = 0.05,
+        shared: Any | None = None,
+    ):
+        if max_staleness < 0:
+            raise ValueError("max_staleness must be >= 0")
+        if num_frontends < 1:
+            raise ValueError("num_frontends must be >= 1")
+        if priority <= 0.0:
+            raise ValueError("priority must be > 0")
+        if bandwidth_cap is not None and not 0.0 < bandwidth_cap <= 1.0:
+            raise ValueError("bandwidth_cap must be in (0, 1]")
+        if serve_us_per_read < 0.0:
+            raise ValueError("serve_us_per_read must be >= 0")
+        if not hasattr(source, "assemble"):
+            source = FabricSource(source)
+        self.source = source
+        self.max_staleness = max_staleness
+        self.name = name
+        self.priority = priority
+        self.bandwidth_cap = bandwidth_cap
+        self.serve_us_per_read = serve_us_per_read
+        self.shared = shared
+        racks = max(1, source.num_racks)
+        self.frontends = [
+            _Frontend(f, f % racks) for f in range(num_frontends)
+        ]
+        self.stats = ServeStats()
+        # assembled-flat memo: assembling the full space from replica
+        # tails is O(space); every frontend missing on the same round
+        # reuses one assembly
+        self._assembled: tuple[int, jax.Array] | None = None
+        # let the fabric invalidate caches on restore (a rewound round
+        # counter must not leave forward-dated cache entries behind).
+        # Registered as a weakref: a dropped plane must not be pinned —
+        # its frontend caches hold full O(model) flat arrays — and the
+        # fabric prunes dead entries as it notifies.
+        fabric = getattr(source, "fabric", None)
+        if fabric is not None and hasattr(fabric, "read_planes"):
+            fabric.read_planes.append(weakref.ref(self))
+
+    # -- refresh plumbing ------------------------------------------------
+    @property
+    def current_version(self) -> int:
+        """The newest round known to exist upstream.  For a fabric source
+        this is also the newest *servable* round; a snapshot source may
+        lag behind it (``SnapshotSource.advance``), in which case reported
+        staleness includes the store's own lag while the enforced bound is
+        measured against what the store can actually serve."""
+        return getattr(self.source, "upstream_version", self.source.version)
+
+    def _scale(self) -> float:
+        """Fair-share inflation of this plane's refresh streams: the
+        tenancy clock's serve share when attached to a shared box, the
+        bandwidth-cap floor always."""
+        scale = 1.0
+        if self.shared is not None:
+            scale = self.shared.serve_scale(self)
+        if self.bandwidth_cap is not None:
+            scale = max(scale, 1.0 / self.bandwidth_cap)
+        return scale
+
+    def _flat_now(self) -> jax.Array:
+        version = self.source.version
+        if self._assembled is None or self._assembled[0] != version:
+            self._assembled = (version, self.source.assemble())
+        return self._assembled[1]
+
+    def _refresh(self, fe: _Frontend) -> float:
+        """Pull the current version into ``fe``'s cache; returns the
+        event-clock cost (fair-share inflated) and books every stream on
+        the shared per-link queues."""
+        streams = self.source.streams(fe.rack)
+        chunk_elems = getattr(self.source, "space", None)
+        elems = (chunk_elems.chunk_elems if chunk_elems is not None
+                 else getattr(self.source, "chunk_elems", 8192))
+        wire = getattr(self.source, "wire_us_per_chunk", 1.0)
+        scale = self._scale()
+        total_us = 0.0
+        for st in streams:
+            nbytes = 4 * st.num_chunks * elems
+            demand = st.num_chunks * wire * self.source.hop_cost(
+                st.src_rack, fe.rack)
+            total_us += demand * scale
+            self.stats.bytes_refreshed += nbytes
+            if st.src_rack == fe.rack:
+                self.stats.bytes_rack_link += nbytes
+            else:
+                self.stats.bytes_core_link += nbytes
+            key = f"{st.kind}_streams"
+            setattr(self.stats, key, getattr(self.stats, key) + 1)
+            if self.shared is not None:
+                link = (f"rack{st.src_rack}" if st.src_rack == fe.rack
+                        else "core")
+                queue = self.shared.links.get(link)
+                if queue is not None:
+                    queue.reserve(self.name, demand, scale)
+        fe.version = self.source.version
+        fe.flat = self._flat_now()
+        self.stats.refreshes += 1
+        return total_us
+
+    # -- serving API -----------------------------------------------------
+    def read(self, frontend: int = 0) -> ReadResult:
+        """Serve one read from ``frontend``'s cache (refreshing it first
+        when the cached version breaks the staleness bound)."""
+        return self.read_batch(frontend, 1)[0]
+
+    def read_batch(self, frontend: int, n: int) -> list[ReadResult]:
+        """Serve ``n`` requests in one batch: at most one replica refresh,
+        amortized over the batch; every member is stamped with the same
+        version (a batch is one consistent snapshot)."""
+        if not 0 <= frontend < len(self.frontends):
+            raise ValueError(f"no frontend {frontend}")
+        if n < 1:
+            raise ValueError("batch size must be >= 1")
+        fe = self.frontends[frontend]
+        servable = self.source.version
+        # invalidation rule: the cache serves iff its round version is
+        # within the staleness bound of the newest servable round (a
+        # forward-dated entry — impossible outside a restore that forgot
+        # invalidate() — also refreshes)
+        hit = (fe.version is not None
+               and 0 <= servable - fe.version <= self.max_staleness)
+        sim_us = 0.0 if hit else self._refresh(fe)
+        sim_us += n * self.serve_us_per_read
+        bound_staleness = servable - int(fe.version)
+        staleness = self.current_version - int(fe.version)
+        flat = fe.flat
+        self.stats.batches += 1
+        self.stats.reads += n
+        self.stats.cache_hits += n if hit else 0
+        self.stats.cache_misses += 0 if hit else n
+        self.stats.bytes_served += n * flat.size * 4
+        self.stats.max_staleness_served = max(
+            self.stats.max_staleness_served, bound_staleness)
+        self.stats.sim_serve_us += sim_us
+        if not 0 <= bound_staleness <= self.max_staleness:
+            raise RuntimeError(
+                f"read served {bound_staleness} rounds stale with "
+                f"max_staleness={self.max_staleness} — refresh logic broke "
+                "its own bound"
+            )
+        return [
+            ReadResult(int(fe.version), flat, staleness, hit, frontend,
+                       sim_us if i == 0 else 0.0)
+            for i in range(n)
+        ]
+
+    def invalidate(self) -> None:
+        """Drop every frontend cache and the assembly memo.  The fabric
+        calls this from ``restore`` (the round counter may rewind, and a
+        cache stamped with a round from the abandoned timeline must never
+        serve again)."""
+        for fe in self.frontends:
+            fe.version = None
+            fe.flat = None
+        self._assembled = None
+
+    def notify_round(self, rounds: int = 1) -> None:
+        """Upstream training advanced without new bits landing here — only
+        meaningful for snapshot-backed planes (``SnapshotSource.advance``);
+        fabric-backed planes read the live round counter directly."""
+        adv = getattr(self.source, "advance", None)
+        if adv is not None:
+            adv(rounds)
+
+    def describe(self) -> str:
+        s = self.stats
+        racks = ",".join(str(fe.rack) for fe in self.frontends)
+        return (
+            f"ReadPlane[{self.name}]: {len(self.frontends)} frontends "
+            f"(racks {racks}), bound {self.max_staleness} rounds, "
+            f"{s.reads} reads ({s.hit_rate:.0%} cache hit, "
+            f"{s.refreshes} refreshes, max staleness "
+            f"{s.max_staleness_served}), {s.bytes_refreshed >> 10} KiB "
+            f"refreshed ({s.bytes_rack_link >> 10} rack / "
+            f"{s.bytes_core_link >> 10} core KiB)"
+        )

@@ -46,6 +46,13 @@ Attach/detach at runtime reuses the elastic snapshot/restore machinery
 (runtime/elastic.py): ``detach`` returns a snapshot, ``attach(snapshot=)``
 restores it — re-targeting the flat state through ``elastic_restore`` when
 the new shard count re-pads the chunk space.
+
+Serve tenants (core/serving.py): ``attach_serving`` admits a read plane as
+a co-tenant on the same ``JobSpec`` surface — its priority joins the
+fair-share totals (serve refreshes inflate training wire stages and vice
+versa, booked on the same per-link queues) while it owns no chunk space
+and never writes fabric state, so every training tenant stays
+bit-identical with serving attached.
 """
 from __future__ import annotations
 
@@ -232,6 +239,11 @@ class MultiJobFabric:
         self.link = link or LinkModel()
         self.use_pallas = use_pallas
         self.jobs: dict[str, JobHandle] = {}
+        # serve tenants (core/serving.py): read planes attached as
+        # co-tenants — they join the fair-share priority totals and book
+        # refresh streams on the shared links, but own no chunk space
+        self.serving: dict[str, Any] = {}
+        self._serve_source: dict[str, str] = {}  # serve name -> job name
         self._next_chunk_base = 0
         self.links: dict[str, LinkQueue] = {
             **{f"rack{r}": LinkQueue(f"rack{r}") for r in range(num_racks)},
@@ -253,8 +265,11 @@ class MultiJobFabric:
         the flat state is re-targeted through ``runtime/elastic`` when
         this box's shard count re-pads the chunk space differently from
         the box the snapshot was taken on."""
-        if spec.name in self.jobs:
-            raise ValueError(f"job {spec.name!r} is already attached")
+        if spec.name in self.jobs or spec.name in self.serving:
+            # tenant names are one namespace across training and serve
+            # jobs: the per-link by_job accounting and the priority
+            # totals key on them
+            raise ValueError(f"tenant {spec.name!r} is already attached")
         fabric = _build_fabric(
             spec,
             num_shards=self.num_shards,
@@ -281,7 +296,9 @@ class MultiJobFabric:
     def detach(self, name: str) -> dict:
         """Evict a job; returns its snapshot (params, optimizer state,
         step, worker clocks) so ``attach(snapshot=...)`` resumes it — on
-        this box or another one (elastic re-target included)."""
+        this box or another one (elastic re-target included).  Serve
+        tenants reading the job detach with it (their planes keep working
+        against the now-dedicated fabric, uncontended)."""
         if name not in self.jobs:
             raise KeyError(f"job {name!r} is not attached")
         handle = self.jobs.pop(name)
@@ -289,7 +306,74 @@ class MultiJobFabric:
         # a detached job no longer contends (and its handle, if still
         # driven, behaves like a dedicated fabric)
         handle.fabric.shared_clock = None
+        for sname, src in list(self._serve_source.items()):
+            if src == name:
+                self.detach_serving(sname)
         return handle.fabric.snapshot()
+
+    # -- serve tenants (core/serving.py) ---------------------------------
+    def attach_serving(
+        self,
+        spec: JobSpec,
+        source: str,
+        *,
+        max_staleness: int = 0,
+        serve_us_per_read: float = 0.05,
+    ):
+        """Attach a read plane as a co-tenant serving ``source``'s params.
+
+        The serve job rides the same ``JobSpec`` surface as a training
+        tenant — ``priority`` joins the weighted-fair-share totals (so
+        serve traffic inflates co-tenants' wire stages and vice versa),
+        ``bandwidth_cap`` floors its own share, and ``num_workers`` is the
+        frontend count.  ``params``/``optimizer`` are ignored (a serve
+        tenant owns no chunk space — it reads the source job's replica
+        tails).  Contention is timing-only: attaching a serve tenant
+        leaves every training tenant bit-identical."""
+        from repro.core.serving import ReadPlane
+
+        if spec.name in self.jobs or spec.name in self.serving:
+            raise ValueError(f"tenant {spec.name!r} is already attached")
+        if source not in self.jobs:
+            raise KeyError(f"serve source job {source!r} is not attached")
+        plane = ReadPlane(
+            self.jobs[source],
+            max_staleness=max_staleness,
+            num_frontends=spec.num_workers,
+            name=spec.name,
+            priority=spec.priority,
+            bandwidth_cap=spec.bandwidth_cap,
+            serve_us_per_read=serve_us_per_read,
+            shared=self,
+        )
+        self.serving[spec.name] = plane
+        self._serve_source[spec.name] = source
+        return plane
+
+    def detach_serving(self, name: str):
+        """Detach a serve tenant: its plane keeps serving (standalone,
+        uncontended) but stops contending on the shared wire."""
+        if name not in self.serving:
+            raise KeyError(f"serve tenant {name!r} is not attached")
+        plane = self.serving.pop(name)
+        self._serve_source.pop(name, None)
+        plane.shared = None
+        return plane
+
+    def serve_scale(self, plane) -> float:
+        """Fair-share inflation for one serve tenant's refresh streams:
+        total active priority weight (training + serve tenants) over the
+        plane's own — the same fluid-flow WFQ rule ``wire_scales`` applies
+        to training transfers.  The plane applies its own bandwidth-cap
+        floor on top."""
+        if self.serving.get(plane.name) is not plane:
+            raise KeyError(
+                f"serve tenant {plane.name!r} is not attached to this box")
+        return self._total_priority() / plane.priority
+
+    def _total_priority(self) -> float:
+        return (sum(h.spec.priority for h in self.jobs.values())
+                + sum(p.priority for p in self.serving.values()))
 
     # -- fault tier (core/replication.py) --------------------------------
     def crash_shard(self, shard_id: int) -> dict[str, str]:
@@ -328,7 +412,7 @@ class MultiJobFabric:
         if handle is None:
             raise KeyError(
                 f"fabric namespace {fabric.namespace!r} is not attached")
-        total = sum(h.spec.priority for h in self.jobs.values())
+        total = self._total_priority()
         scale = total / handle.spec.priority
         if handle.spec.bandwidth_cap is not None:
             scale = max(scale, 1.0 / handle.spec.bandwidth_cap)
@@ -424,6 +508,11 @@ class MultiJobFabric:
                 f"chunks [{h.chunk_base}, "
                 f"{h.chunk_base + h.fabric.space.num_chunks}), "
                 f"steps={t['steps']}, sim_step={t['sim_step_us']:.1f}us"
+            )
+        for name, plane in self.serving.items():
+            lines.append(
+                f"  serve {name} (reads {self._serve_source.get(name)}): "
+                + plane.describe()
             )
         for q in self.links.values():
             lines.append("  " + q.describe())

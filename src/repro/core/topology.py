@@ -132,6 +132,20 @@ class NetworkTopology:
                 raise ValueError(f"rack {rack} not in the topology")
         return 1.0 if src_rack == dst_rack else self.oversubscription
 
+    def nearest_rack(self, candidates, to_rack: int) -> int:
+        """The candidate rack cheapest to reach from ``to_rack`` by
+        ``hop_cost``, ties broken to the lowest rack id (deterministic
+        routing).  The read plane (core/serving.py) picks each shard's
+        serving replica with this — anti-affine placement means most
+        racks hold a local replica of most shards."""
+        cands = tuple(int(c) for c in candidates)
+        if not cands:
+            raise ValueError("nearest_rack needs at least one candidate")
+        for c in cands:
+            if not 0 <= c < self.num_racks:
+                raise ValueError(f"rack {c} not in the topology")
+        return min(cands, key=lambda r: (self.hop_cost(r, to_rack), r))
+
     @property
     def workers_per_rack(self) -> int:
         """Largest rack population (uniform layouts: the rack size)."""

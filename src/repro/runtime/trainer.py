@@ -83,6 +83,7 @@ def attach_telemetry(
     topology=None,
     job=None,
     replication: int | None = None,
+    read_plane=None,
 ) -> Callable:
     """Wrap a jitted PS train step so every invocation records the modeled
     wire traffic into a fabric-style ``ServerStats``.
@@ -110,7 +111,13 @@ def attach_telemetry(
     ``R - 1`` raw-f32 state streams (params + optimizer slots — state
     replication is never lossy) into ``bytes_replication``, crossing the
     core when the topology's anti-affine placement puts backups in other
-    racks."""
+    racks.
+
+    Pass a ``core/serving.ReadPlane`` as ``read_plane`` to keep a
+    snapshot-backed serving tier's round clock in sync with SPMD training:
+    each step calls ``read_plane.notify_round()``, so reads served between
+    checkpoint publishes report their true staleness (the in-process
+    fabric path needs no hook — its planes read the live round counter)."""
     from repro.core.compression import wire_bytes as _wire_bytes
 
     if job is not None:
@@ -178,6 +185,8 @@ def attach_telemetry(
                 stats.bytes_core_link += repl_bytes
             elif topology is not None:
                 stats.bytes_rack_link += repl_bytes
+        if read_plane is not None:
+            read_plane.notify_round()
         return out
 
     return wrapped

@@ -1,0 +1,70 @@
+"""launch/serve.py: generation through the read plane, in-process.
+
+The driver's contract: generation's parameters come from a version-stamped
+read plane over a live fabric or a checkpoint (bit-verified against the
+source inside the driver), the legacy freestanding-model path still works,
+and a fabric that ran zero training rounds serves exactly the init params
+— so fabric-served and freestanding generation agree token-for-token.
+"""
+import numpy as np
+import pytest
+
+from repro.launch.serve import build_argparser, main
+
+FAST = ["--arch", "gemma3-1b", "--mesh", "1x1", "--batch", "2",
+        "--prompt-len", "8", "--tokens", "3", "--seed", "0"]
+
+
+def test_fabric_source_serves_verified_read():
+    out = main(FAST + ["--source", "fabric", "--train-rounds", "2",
+                       "--serve-shards", "2", "--serve-replication", "2"])
+    assert out["source"] == "fabric"
+    assert out["generated"].shape == (2, 3)
+    info = out["read"]
+    assert info["version"] == 2 and info["staleness"] == 0
+    assert info["replication"] == 2 and info["shards"] == 2
+    assert "ReadPlane" in info["plane"]
+
+
+def test_fabric_zero_rounds_matches_freestanding_model():
+    served = main(FAST + ["--source", "fabric", "--train-rounds", "0"])
+    legacy = main(FAST + ["--source", "model"])
+    assert legacy["read"] is None
+    np.testing.assert_array_equal(served["generated"], legacy["generated"])
+    assert served["read"]["version"] == 0
+
+
+def test_checkpoint_source_roundtrips_fabric_bits(tmp_path):
+    args = FAST + ["--train-rounds", "1", "--serve-shards", "2"]
+    live = main(args + ["--source", "fabric"])
+    ckpt = main(args + ["--source", "checkpoint",
+                        "--checkpoint", str(tmp_path)])
+    # the checkpoint round-trips the fabric's bits, so generation agrees
+    np.testing.assert_array_equal(live["generated"], ckpt["generated"])
+    assert ckpt["read"]["version"] == 1
+    # a second invocation with --train-rounds 0 serves the saved
+    # checkpoint as-is (no new training, same bits)
+    again = main(FAST + ["--source", "checkpoint", "--train-rounds", "0",
+                         "--checkpoint", str(tmp_path)])
+    np.testing.assert_array_equal(again["generated"], ckpt["generated"])
+
+
+def test_checkpoint_source_serves_its_own_save_not_latest(tmp_path):
+    # a longer previous run left step-3 in the dir; a new 1-round run
+    # must serve the step-1 checkpoint it just wrote, not run A's latest
+    main(FAST + ["--source", "checkpoint", "--train-rounds", "3",
+                 "--checkpoint", str(tmp_path)])
+    out = main(FAST + ["--source", "checkpoint", "--train-rounds", "1",
+                       "--checkpoint", str(tmp_path)])
+    assert out["read"]["version"] == 1
+
+
+def test_checkpoint_source_requires_dir():
+    with pytest.raises(SystemExit):
+        main(FAST + ["--source", "checkpoint"])
+
+
+def test_argparser_defaults_route_through_the_fabric():
+    args = build_argparser().parse_args([])
+    assert args.source == "fabric"
+    assert args.serve_replication >= 2  # replica-backed by default

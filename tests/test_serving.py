@@ -1,0 +1,471 @@
+"""Read-plane semantics (core/serving.py).
+
+The headline invariants:
+  * every read is bit-identical to ``fabric.params`` at its stamped
+    version — across rack counts, shard counts and replication factors;
+  * the staleness bound is never exceeded, under sync, SSP and async
+    training alike;
+  * attaching the read plane (and serving any number of reads) leaves
+    training bit-identical to an unserved run.
+
+Plus: cache invalidation by round version, request batching, restore
+invalidation, rack-local replica routing with exact byte split, the serve
+tenant on the shared box (fair-share contention, link booking), snapshot/
+checkpoint sources, and the serve_load open-loop generator.
+"""
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.chunking import ParamSpace, TILE_ELEMS
+from repro.core.fabric import PBoxFabric, WorkerHarness
+from repro.core.serving import FabricSource, ReadPlane, SnapshotSource
+from repro.core.tenancy import JobSpec, MultiJobFabric, dedicated_fabric
+from repro.core.topology import NetworkTopology
+from repro.optim.optimizers import momentum, sgd
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+K = 4
+
+
+def quad_setup():
+    params = {"w": jnp.zeros((9000,)), "b": jnp.zeros((77,))}
+    targets = [
+        {"w": jnp.full((9000,), float(i + 1)), "b": jnp.arange(77.0) * (i + 1)}
+        for i in range(K)
+    ]
+
+    def grad_fn(p, batch):
+        t = targets[batch]
+        return jax.tree.map(lambda a, b: 2 * (a - b), p, t)
+
+    return params, grad_fn
+
+
+def build_fabric(space, params, *, racks=1, shards=1, replication=1, **kw):
+    topo = (NetworkTopology(num_workers=K, num_racks=racks)
+            if racks > 1 else None)
+    return PBoxFabric(space, momentum(0.05, 0.9), space.flatten(params),
+                      num_shards=shards, num_workers=K, topology=topo,
+                      replication=replication, **kw)
+
+
+# ---------------------------------------------------------------------------
+# headline: version-stamped bit-identity across the whole config grid
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("racks", [1, 2, 4])
+@pytest.mark.parametrize("shards", [1, 2, 8])
+@pytest.mark.parametrize("replication", [1, 2])
+def test_reads_bit_identical_at_stamped_version(racks, shards, replication):
+    params, grad_fn = quad_setup()
+    space = ParamSpace.build(params, chunk_elems=TILE_ELEMS)
+    fab = build_fabric(space, params, racks=racks, shards=shards,
+                       replication=replication)
+    plane = ReadPlane(fab, max_staleness=1, num_frontends=2)
+    h = WorkerHarness(fab, grad_fn, lambda w, s: w)
+    history = {fab.step: np.asarray(fab.params)}
+    reads = []
+    for step in range(3):
+        h.run(step + 1)
+        history[fab.step] = np.asarray(fab.params)
+        for f in range(2):
+            reads.append(plane.read(f))
+    assert len(reads) == 6 and plane.stats.reads == 6
+    for r in reads:
+        np.testing.assert_array_equal(np.asarray(r.flat),
+                                      history[r.version])
+        assert 0 <= r.staleness <= 1
+    # replica-backed: with a chain, refreshes come off the tails, never
+    # the primaries; without one, the primary slabs serve
+    if replication > 1:
+        assert plane.stats.replica_streams > 0
+        assert plane.stats.primary_streams == 0
+    else:
+        assert plane.stats.primary_streams > 0
+        assert plane.stats.replica_streams == 0
+
+
+@pytest.mark.parametrize("mode,kw", [
+    ("stale", {"mode": "stale", "staleness": 2}),
+    ("async", {"mode": "async"}),
+])
+def test_staleness_bound_under_ssp_and_async(mode, kw):
+    params, grad_fn = quad_setup()
+    space = ParamSpace.build(params, chunk_elems=TILE_ELEMS)
+    fab = build_fabric(space, params, racks=2, shards=2, replication=2, **kw)
+    bound = 3
+    plane = ReadPlane(fab, max_staleness=bound, num_frontends=2)
+    h = WorkerHarness(fab, grad_fn, lambda w, s: w, speed=[1, 1, 1, 3])
+    history = {fab.step: np.asarray(fab.params)}
+    reads = []
+    for _ in range(25):
+        h.tick()
+        history[fab.step] = np.asarray(fab.params)
+        reads.append(plane.read(0))
+    assert fab.step > 0  # training actually advanced under the reads
+    for r in reads:
+        assert 0 <= r.staleness <= bound
+        np.testing.assert_array_equal(np.asarray(r.flat),
+                                      history[r.version])
+    assert plane.stats.max_staleness_served <= bound
+
+
+def test_training_bit_identical_with_read_plane_attached():
+    params, grad_fn = quad_setup()
+    space = ParamSpace.build(params, chunk_elems=TILE_ELEMS)
+    ref = build_fabric(space, params, racks=2, shards=2, replication=2)
+    WorkerHarness(ref, grad_fn, lambda w, s: w).run(5)
+
+    fab = build_fabric(space, params, racks=2, shards=2, replication=2)
+    plane = ReadPlane(fab, max_staleness=0, num_frontends=2)
+    h = WorkerHarness(fab, grad_fn, lambda w, s: w)
+    for step in range(5):
+        h.run(step + 1)
+        plane.read(0)
+        plane.read_batch(1, 5)
+    np.testing.assert_array_equal(np.asarray(ref.params),
+                                  np.asarray(fab.params))
+    # serving also never perturbs the training-side accounting
+    assert fab.stats.steps == ref.stats.steps
+    assert fab.stats.bytes_pushed == ref.stats.bytes_pushed
+
+
+# ---------------------------------------------------------------------------
+# cache semantics
+# ---------------------------------------------------------------------------
+def test_cache_invalidated_by_round_version():
+    params, grad_fn = quad_setup()
+    space = ParamSpace.build(params, chunk_elems=TILE_ELEMS)
+    fab = build_fabric(space, params, shards=2)
+    plane = ReadPlane(fab, max_staleness=1)
+    h = WorkerHarness(fab, grad_fn, lambda w, s: w)
+    r0 = plane.read()
+    assert not r0.cache_hit and r0.version == 0
+    assert plane.read().cache_hit  # same round: cache serves
+    h.run(1)
+    r1 = plane.read()  # one round behind: inside the bound, still cached
+    assert r1.cache_hit and r1.version == 0 and r1.staleness == 1
+    h.run(2)
+    r2 = plane.read()  # two rounds behind: invalidated, refreshed
+    assert not r2.cache_hit and r2.version == fab.step and r2.staleness == 0
+    assert plane.stats.refreshes == 2
+    with pytest.raises(ValueError):
+        plane.read(frontend=5)
+    with pytest.raises(ValueError):
+        plane.read_batch(0, 0)
+
+
+def test_read_batch_amortizes_one_refresh():
+    params, grad_fn = quad_setup()
+    space = ParamSpace.build(params, chunk_elems=TILE_ELEMS)
+    fab = build_fabric(space, params, shards=2)
+    WorkerHarness(fab, grad_fn, lambda w, s: w).run(1)
+    plane = ReadPlane(fab, serve_us_per_read=0.5)
+    batch = plane.read_batch(0, 8)
+    assert len(batch) == 8
+    assert plane.stats.refreshes == 1 and plane.stats.reads == 8
+    versions = {r.version for r in batch}
+    assert versions == {fab.step}  # one consistent snapshot
+    # the batch's event-clock cost rides on its first member
+    assert batch[0].sim_us > 8 * 0.5
+    assert all(r.sim_us == 0.0 for r in batch[1:])
+    assert plane.stats.sim_serve_us == batch[0].sim_us
+
+
+def test_restore_invalidates_serving_caches():
+    params, grad_fn = quad_setup()
+    space = ParamSpace.build(params, chunk_elems=TILE_ELEMS)
+    fab = build_fabric(space, params, shards=2, replication=2)
+    plane = ReadPlane(fab, max_staleness=5)
+    h = WorkerHarness(fab, grad_fn, lambda w, s: w)
+    h.run(2)
+    snap = fab.snapshot()
+    h.run(4)
+    cached = plane.read(0)
+    assert cached.version == fab.step
+    fab.restore(snap)
+    # the cache held round 6 from the abandoned timeline; after the
+    # rewind to round 2 it must refresh, not serve forward-dated bits
+    r = plane.read(0)
+    assert not r.cache_hit and r.version == fab.step == 2
+    np.testing.assert_array_equal(np.asarray(r.flat),
+                                  np.asarray(fab.params))
+
+
+# ---------------------------------------------------------------------------
+# routing + accounting
+# ---------------------------------------------------------------------------
+def test_rack_local_replica_routing_and_byte_split():
+    params, grad_fn = quad_setup()
+    space = ParamSpace.build(params, chunk_elems=TILE_ELEMS)
+    fab = build_fabric(space, params, racks=2, shards=2, replication=2)
+    WorkerHarness(fab, grad_fn, lambda w, s: w).run(1)
+    # anti-affine placement: shard 0's backup sits in rack 1, shard 1's in
+    # rack 0 — a frontend in either rack has exactly one rack-local and
+    # one cross-rack stream per refresh
+    src = FabricSource(fab)
+    assert src.serve_rack(0, frontend_rack=1) == 1
+    assert src.serve_rack(1, frontend_rack=0) == 0
+    # the routing primitive: cheapest hop wins, ties break low
+    topo = fab.topology
+    assert topo.nearest_rack([0, 1], to_rack=1) == 1
+    assert topo.nearest_rack([0, 1], to_rack=0) == 0
+    assert topo.nearest_rack([1], to_rack=0) == 1
+    with pytest.raises(ValueError):
+        topo.nearest_rack([], to_rack=0)
+    with pytest.raises(ValueError):
+        topo.nearest_rack([7], to_rack=0)
+    plane = ReadPlane(fab, num_frontends=1)  # frontend 0 -> rack 0
+    plane.read(0)
+    elems = {s.shard_id: s.num_elems for s in fab.shards}
+    assert plane.stats.bytes_rack_link == 4 * elems[1]
+    assert plane.stats.bytes_core_link == 4 * elems[0]
+    assert plane.stats.bytes_refreshed == 4 * space.flat_elems
+    # cross-rack streams pay the oversubscribed core on the event clock
+    local_chunks = fab.shards[1].num_chunks
+    cross_chunks = fab.shards[0].num_chunks
+    wire = fab.link.wire_us_per_chunk
+    expect = (local_chunks * wire
+              + cross_chunks * wire * fab.topology.oversubscription)
+    assert plane.stats.sim_serve_us == pytest.approx(
+        expect + plane.serve_us_per_read)
+
+
+def test_reads_survive_failover_bit_exactly():
+    params, grad_fn = quad_setup()
+    space = ParamSpace.build(params, chunk_elems=TILE_ELEMS)
+    fab = build_fabric(space, params, racks=2, shards=2, replication=2)
+    plane = ReadPlane(fab)
+    h = WorkerHarness(fab, grad_fn, lambda w, s: w)
+    h.run(2)
+    before = np.asarray(fab.params)
+    fab.crash_shard(0)
+    r = plane.read(0)
+    assert r.version == fab.step
+    np.testing.assert_array_equal(np.asarray(r.flat), before)
+    np.testing.assert_array_equal(np.asarray(r.flat),
+                                  np.asarray(fab.params))
+
+
+# ---------------------------------------------------------------------------
+# tenancy: serve jobs as co-tenants
+# ---------------------------------------------------------------------------
+def test_serve_tenant_contends_but_never_perturbs_training():
+    params, grad_fn = quad_setup()
+    spec = JobSpec(name="train", params=params,
+                   optimizer=momentum(0.05, 0.9), num_workers=K,
+                   chunk_elems=TILE_ELEMS, replication=2)
+    box = MultiJobFabric(num_shards=2, num_racks=2)
+    handle = box.attach(spec)
+    plane = box.attach_serving(
+        JobSpec(name="serve", params=None, optimizer=None, num_workers=2,
+                priority=1.0, bandwidth_cap=0.25),
+        "train", max_staleness=1,
+    )
+    # fair share: serve joins the priority totals for both sides
+    assert box.serve_scale(plane) == pytest.approx(2.0)
+    assert box.wire_scales(handle.fabric) == (pytest.approx(2.0),) * 2
+    # the bandwidth cap floors the serve share below its fair share
+    assert plane._scale() == pytest.approx(4.0)
+    h = WorkerHarness(handle, grad_fn, lambda w, s: w)
+    history = {handle.fabric.step: np.asarray(handle.fabric.params)}
+    for step in range(3):
+        h.run(step + 1)
+        history[handle.fabric.step] = np.asarray(handle.fabric.params)
+        for f in range(2):
+            r = plane.read(f)
+            np.testing.assert_array_equal(np.asarray(r.flat),
+                                          history[r.version])
+    # serve refreshes are booked on the shared links under the serve name
+    serve_share = sum(q.stats.by_job.get("serve", 0.0)
+                      for q in box.links.values())
+    assert serve_share > 0.0
+    # training on the shared box == the dedicated serve-free counterfactual
+    ded = dedicated_fabric(spec, box)
+    WorkerHarness(ded, grad_fn, lambda w, s: w).run(3)
+    np.testing.assert_array_equal(np.asarray(ded.params),
+                                  np.asarray(handle.fabric.params))
+
+
+def test_serve_tenant_lifecycle_and_validation():
+    params, _ = quad_setup()
+    spec = JobSpec(name="train", params=params,
+                   optimizer=momentum(0.05, 0.9), num_workers=K,
+                   chunk_elems=TILE_ELEMS)
+    box = MultiJobFabric(num_shards=2)
+    box.attach(spec)
+    serve_spec = JobSpec(name="serve", params=None, optimizer=None,
+                         num_workers=1)
+    with pytest.raises(KeyError):
+        box.attach_serving(serve_spec, "nope")
+    plane = box.attach_serving(serve_spec, "train")
+    with pytest.raises(ValueError):
+        box.attach_serving(serve_spec, "train")  # name taken
+    with pytest.raises(ValueError):
+        # one tenant namespace: a training job cannot shadow a serve
+        # tenant either (link accounting and priority totals key on name)
+        box.attach(JobSpec(name="serve", params=quad_setup()[0],
+                           optimizer=momentum(0.05, 0.9), num_workers=K,
+                           chunk_elems=TILE_ELEMS))
+    with pytest.raises(KeyError):
+        box.detach_serving("nope")
+    # detaching the source job detaches its serve tenants with it; the
+    # plane keeps serving, now uncontended
+    box.detach("train")
+    assert not box.serving and plane.shared is None
+    assert plane.read(0).version == 0
+    with pytest.raises(KeyError):
+        box.serve_scale(plane)
+
+
+# ---------------------------------------------------------------------------
+# snapshot / checkpoint sources
+# ---------------------------------------------------------------------------
+def test_snapshot_source_serves_checkpointed_bits(tmp_path):
+    from repro.checkpoint.checkpointer import (
+        Checkpointer,
+        flat_to_fabric_snapshot,
+    )
+
+    params, grad_fn = quad_setup()
+    space = ParamSpace.build(params, chunk_elems=TILE_ELEMS)
+    fab = build_fabric(space, params, shards=2, replication=2)
+    WorkerHarness(fab, grad_fn, lambda w, s: w).run(3)
+    ckpt = Checkpointer(tmp_path)
+    ckpt.save_fabric(fab.step, fab)
+    state, _ = ckpt.restore()
+    source = SnapshotSource.from_snapshot(flat_to_fabric_snapshot(state),
+                                          chunk_elems=space.chunk_elems)
+    plane = ReadPlane(source, max_staleness=0)
+    r = plane.read()
+    assert r.version == fab.step and not r.cache_hit
+    np.testing.assert_array_equal(np.asarray(r.flat),
+                                  np.asarray(fab.params))
+    assert plane.stats.snapshot_streams == 1
+    # upstream training moves on without a new publish: reported
+    # staleness grows (the store's own lag), hits keep serving
+    source.advance(4)
+    r2 = plane.read()
+    assert r2.cache_hit and r2.version == fab.step and r2.staleness == 4
+    # publishes are strictly monotone in version
+    with pytest.raises(ValueError):
+        source.publish(np.asarray(r.flat), r.version)
+    source.publish(np.zeros(space.flat_elems, np.float32), r.version + 9)
+    r3 = plane.read()
+    assert not r3.cache_hit and r3.version == r.version + 9
+    assert float(jnp.abs(r3.flat).max()) == 0.0
+
+
+def test_trainer_telemetry_advances_snapshot_plane():
+    import types
+
+    from repro.core.exchange import ExchangeConfig, PSExchange
+    from repro.core.fabric import ServerStats
+    from repro.runtime.trainer import attach_telemetry
+
+    params, _ = quad_setup()
+    space = ParamSpace.build(params, chunk_elems=TILE_ELEMS)
+    source = SnapshotSource(space.flatten(params), version=0)
+    plane = ReadPlane(source, max_staleness=0)
+    ex = PSExchange(momentum(0.1, 0.9), ExchangeConfig("pbox"), ("data",))
+    mesh = types.SimpleNamespace(shape={"data": 4})
+    step = attach_telemetry(lambda *a: "out", ex, space, mesh,
+                            ServerStats(), read_plane=plane)
+    first = plane.read()
+    for _ in range(3):
+        assert step("x") == "out"
+    r = plane.read()
+    assert r.version == first.version  # bits never moved...
+    assert r.staleness == 3  # ...but the SPMD round clock did
+
+
+def test_dropped_planes_are_not_pinned_by_the_fabric():
+    """The fabric registers planes as weakrefs: dropping the last strong
+    reference frees its O(model) caches, and restore prunes the ref."""
+    import gc
+
+    params, grad_fn = quad_setup()
+    space = ParamSpace.build(params, chunk_elems=TILE_ELEMS)
+    fab = build_fabric(space, params, shards=2)
+    plane = ReadPlane(fab)
+    keep = ReadPlane(fab)
+    h = WorkerHarness(fab, grad_fn, lambda w, s: w)
+    h.run(1)
+    plane.read(0)
+    kept_read = keep.read(0)
+    assert len(fab.read_planes) == 2
+    del plane
+    gc.collect()
+    assert sum(r() is not None for r in fab.read_planes) == 1
+    snap = fab.snapshot()
+    fab.restore(snap)  # prunes dead refs, invalidates live caches
+    assert len(fab.read_planes) == 1
+    r = keep.read(0)
+    assert not r.cache_hit and r.version == kept_read.version
+
+
+def test_read_plane_rejects_bad_config():
+    params, _ = quad_setup()
+    space = ParamSpace.build(params, chunk_elems=TILE_ELEMS)
+    fab = build_fabric(space, params)
+    with pytest.raises(ValueError):
+        ReadPlane(fab, max_staleness=-1)
+    with pytest.raises(ValueError):
+        ReadPlane(fab, num_frontends=0)
+    with pytest.raises(ValueError):
+        ReadPlane(fab, priority=0.0)
+    with pytest.raises(ValueError):
+        ReadPlane(fab, bandwidth_cap=1.5)
+    with pytest.raises(TypeError):
+        FabricSource(object())
+
+
+# ---------------------------------------------------------------------------
+# the open-loop load generator (benchmarks/serve_load.py)
+# ---------------------------------------------------------------------------
+def test_serve_load_reports_percentiles_and_invariants():
+    from benchmarks.serve_load import run_load
+
+    out = run_load(frontends=2, max_staleness=2, n_requests=40, rounds=3)
+    assert out["p50"] <= out["p99"]
+    assert len(out["latencies"]) == 40
+    assert (out["latencies"] >= 0).all()
+    history = out["history"]
+    for r in out["reads"]:
+        np.testing.assert_array_equal(np.asarray(r.flat),
+                                      history[r.version])
+        assert 0 <= r.staleness <= 2
+    # a generous bound turns repeat reads into cache hits
+    assert out["plane"].stats.hit_rate > 0.5
+
+
+def test_serve_load_staleness_zero_refreshes_every_round():
+    from benchmarks.serve_load import run_load
+
+    strict = run_load(frontends=1, max_staleness=0, n_requests=30, rounds=3)
+    loose = run_load(frontends=1, max_staleness=4, n_requests=30, rounds=3)
+    assert strict["plane"].stats.refreshes > loose["plane"].stats.refreshes
+    assert strict["p99"] >= loose["p99"]
+    # identical training bits regardless of serve-load shape
+    np.testing.assert_array_equal(
+        np.asarray(strict["handle"].fabric.params),
+        np.asarray(loose["handle"].fabric.params))
+
+
+def test_sgd_plane_smoke_no_topology_no_replication():
+    """Smallest possible serving stack: 1 shard, no topology, R=1."""
+    params, grad_fn = quad_setup()
+    space = ParamSpace.build(params, chunk_elems=TILE_ELEMS)
+    fab = PBoxFabric(space, sgd(0.01), space.flatten(params), num_workers=K)
+    plane = ReadPlane(fab)
+    WorkerHarness(fab, grad_fn, lambda w, s: w).run(1)
+    r = plane.read()
+    assert r.version == 1 and r.staleness == 0
+    np.testing.assert_array_equal(np.asarray(r.flat),
+                                  np.asarray(fab.params))
+    assert "ReadPlane" in fab.describe()
