@@ -32,6 +32,7 @@ def main() -> None:
         multi_job,
         replication,
         serve_load,
+        sparse_serve,
         table1_frameworks,
         topo_rack_codec,
     )
@@ -47,6 +48,7 @@ def main() -> None:
         "multijob": multi_job.run,
         "replication": replication.run,
         "serve_load": serve_load.run,
+        "sparse_serve": sparse_serve.run,
     }
     only = set(args.only.split(",")) if args.only else None
     if only:

@@ -1,0 +1,171 @@
+"""Sparse-serve sweep: hot-row caches under Zipfian read load with live
+sparse training (core/serving.SparseReadPlane over core/sparse.SparseTier).
+
+Each config drives a seeded row-read trace — ``skew=0`` uniform, ``skew``
+> 0 the canonical recsys power law — through per-frontend LRU hot-row
+caches while sparse training rounds keep bumping row versions underneath.
+Reads batch up per frontend; per-batch latency is the event-clock service
+time (replica refresh wire time for the version-stale/cold rows plus the
+per-row serve cost), reported as p50/p99.
+
+Derived columns per config:
+  p50, p99    read-batch service latency percentiles (simulated µs)
+  hit         hot-row cache hit rate
+  reads       rows served
+  stale       misses caused by a version bump (exact invalidation at work)
+  coreKiB     refresh bytes that crossed the oversubscribed core
+
+Must hold (asserted here, unit-tested in tests/test_sparse_tier.py):
+  * every served row's bits == a direct read of the tier's table at serve
+    time, and its stamped version == the live row version (exact
+    version-keyed invalidation — never a stale byte);
+  * training under serve load is bit-identical to (a) the same pushes on
+    a serve-free twin and (b) the same pushes on a single-shard twin
+    (serving isolation + sharding independence in one comparison);
+  * exact wire accounting: push bytes == ``row_wire_bytes`` of the rows
+    routed, refresh bytes == raw f32 rows + ids and split exactly across
+    rack/core links, served bytes == rows x row payload;
+  * the skewed trace hits strictly more than the uniform one (the hot
+    head stays resident), and p50 <= p99.
+
+Everything is event-clock simulated and seeded — rows are deterministic
+across hosts, so the regression gate holds this bench to a tight band.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.serving import SparseReadPlane, zipfian_trace
+from repro.core.sparse import SparseTier, row_wire_bytes
+from repro.core.topology import NetworkTopology
+
+V, D = 512, 32  # one table: V rows of width D
+K = 2  # training workers
+RACKS = 2
+FRONTENDS = 2
+CACHE_ROWS = 64
+ROUNDS = 6  # training rounds interleaved with the trace
+N_READS = 360
+BATCH = 12  # rows per read_rows call
+REPLICATION = 2  # serving reads come off chain backups
+LR = 0.05
+PUSH_ROWS = 24  # rows each worker touches per round
+
+
+def _init_table(seed: int = 1805) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return (0.01 * rng.standard_normal((V, D))).astype(np.float32)
+
+
+def _round_pushes(rnd: int) -> list[tuple[np.ndarray, np.ndarray]]:
+    """The (ids, grad-rows) every worker pushes in round ``rnd`` — a pure
+    function of (round, worker) so twins replay the identical schedule."""
+    out = []
+    for w in range(K):
+        rng = np.random.default_rng((971, rnd, w))
+        ids = rng.integers(0, V, size=PUSH_ROWS)
+        g = rng.standard_normal((PUSH_ROWS, D)).astype(np.float32)
+        out.append((ids, g))
+    return out
+
+
+def _make_tier(shards: int, codec: str) -> SparseTier:
+    topo = NetworkTopology(num_workers=max(K, RACKS), num_racks=RACKS)
+    tier = SparseTier(num_shards=shards, num_workers=K, topology=topo,
+                      codec=codec, replication=REPLICATION, lr=LR)
+    tier.add_table("emb", _init_table())
+    return tier
+
+
+def run_serve(*, skew: float, shards: int, codec: str) -> dict:
+    """One trace run; serves ``N_READS`` rows in ``BATCH``-row batches
+    round-robined over the frontends, firing a training round every
+    ``len(trace)/ROUNDS`` reads.  Every batch is bit-verified against a
+    direct table read before its latency counts."""
+    tier = _make_tier(shards, codec)
+    table = tier.tables["emb"]
+    plane = SparseReadPlane(tier, num_frontends=FRONTENDS,
+                            cache_rows=CACHE_ROWS)
+    trace = zipfian_trace(V, N_READS, skew, seed=7)
+    reads_per_round = N_READS // ROUNDS
+    fired = 0
+    latencies: list[float] = []
+    for b, start in enumerate(range(0, N_READS, BATCH)):
+        while fired < ROUNDS and fired * reads_per_round <= start:
+            for w, (ids, g) in enumerate(_round_pushes(fired)):
+                tier.push(w, {"emb": (ids, g)})
+            fired += 1
+        ids = trace[start:start + BATCH]
+        res = plane.read_rows(b % FRONTENDS, "emb", ids)
+        # exact invalidation: served bits == a direct read right now, and
+        # the stamp == the live row version
+        direct = np.asarray(table.rows(ids))
+        assert np.array_equal(np.asarray(res.rows), direct), (
+            f"skew={skew} shards={shards} codec={codec}: served bits "
+            "diverged from the live table")
+        assert np.array_equal(res.versions, table.versions[ids]), (
+            "served version stamps diverged from the live row versions")
+        latencies.append(res.sim_us)
+    while fired < ROUNDS:  # every config trains the full schedule
+        for w, (ids, g) in enumerate(_round_pushes(fired)):
+            tier.push(w, {"emb": (ids, g)})
+        fired += 1
+    lat = np.asarray(latencies)
+    return {
+        "tier": tier,
+        "plane": plane,
+        "p50": float(np.percentile(lat, 50)),
+        "p99": float(np.percentile(lat, 99)),
+    }
+
+
+def _twin_bits(shards: int, codec: str) -> np.ndarray:
+    """Final table bits of a serve-free twin replaying the schedule."""
+    tier = _make_tier(shards, codec)
+    for rnd in range(ROUNDS):
+        for w, (ids, g) in enumerate(_round_pushes(rnd)):
+            tier.push(w, {"emb": (ids, g)})
+    return np.asarray(tier.table("emb"))
+
+
+def run() -> None:
+    hit_by_skew: dict[float, float] = {}
+    for skew, shards, codec in (
+        (0.0, 8, "none"),
+        (1.1, 8, "none"),
+        (1.1, 1, "none"),
+        (1.1, 8, "int8"),
+    ):
+        out = run_serve(skew=skew, shards=shards, codec=codec)
+        tier, plane = out["tier"], out["plane"]
+        name = f"sparse_serve/skew={skew:g}_shards={shards}_codec={codec}"
+        bits = np.asarray(tier.table("emb"))
+        # serving isolation: a serve-free twin lands on the same bits
+        assert np.array_equal(bits, _twin_bits(shards, codec)), (
+            f"{name}: serving perturbed training")
+        # sharding independence: a single-shard twin lands on the same bits
+        assert np.array_equal(bits, _twin_bits(1, codec)), (
+            f"{name}: shard count changed training bits")
+        # exact wire accounting
+        ts, ps = tier.stats, plane.stats
+        assert ts.bytes_pushed == row_wire_bytes(codec, D, ts.rows_pushed), (
+            f"{name}: push bytes off closed form")
+        assert ps.bytes_rack_link + ps.bytes_core_link == ps.bytes_refreshed
+        assert ps.bytes_refreshed <= (4 * D + 4) * ps.row_misses
+        assert ps.bytes_served == 4 * D * ps.row_reads
+        p50, p99 = out["p50"], out["p99"]
+        assert p50 <= p99, f"{name}: p50 {p50} > p99 {p99}"
+        if shards == 8 and codec == "none":
+            hit_by_skew[skew] = ps.hit_rate
+        emit(name, p99,
+             f"p50={p50:.3f};p99={p99:.3f};hit={ps.hit_rate:.3f};"
+             f"reads={ps.row_reads};stale={ps.stale_rows};"
+             f"coreKiB={ps.bytes_core_link / 1024:.2f}")
+    assert hit_by_skew[1.1] > hit_by_skew[0.0], (
+        "Zipfian trace should hit the hot-row cache more than uniform "
+        f"({hit_by_skew[1.1]:.3f} vs {hit_by_skew[0.0]:.3f})")
+
+
+if __name__ == "__main__":
+    run()

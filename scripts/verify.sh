@@ -11,14 +11,17 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
 python -m pytest -x -q "$@"
 
-# smoke the topology + multi-tenant + replication + serve-load
-# benchmarks: their derived-column invariants (core-link bytes shrink
-# 1/workers-per-rack, int8 a further ~4x, codec-"none" bit-identity;
-# tenant isolation + priority fairness; failover bit-identity + exact
-# chain-replication byte accounting; version-stamped read bit-identity +
-# staleness bound + serve-never-perturbs-training) are asserted inside
-# and fail the run if violated
-python -m benchmarks.run --only topo,multijob,replication,serve_load >/dev/null
+# smoke the topology + multi-tenant + replication + serve-load +
+# sparse-serve benchmarks: their derived-column invariants (core-link
+# bytes shrink 1/workers-per-rack, int8 a further ~4x, codec-"none"
+# bit-identity; tenant isolation + priority fairness; failover
+# bit-identity + exact chain-replication byte accounting;
+# version-stamped read bit-identity + staleness bound +
+# serve-never-perturbs-training; hot-row exact invalidation + sparse
+# sharding independence + exact row wire accounting) are asserted
+# inside and fail the run if violated
+python -m benchmarks.run \
+    --only topo,multijob,replication,serve_load,sparse_serve >/dev/null
 
 # serve smoke: batched generation through a live-fabric read plane (the
 # driver bit-verifies every read against the fabric before generating)

@@ -448,6 +448,11 @@ class PBoxFabric:
         # serving tier never writes fabric state — attaching a plane
         # leaves training bit-identical by construction.
         self.read_planes: list[Any] = []  # list[weakref.ref[ReadPlane]]
+        # sparse tier (core/sparse.py): attached SparseTiers register here
+        # (weakrefs, same collectability argument) so crash_shard can fail
+        # their co-resident row slices over with the dense slab and
+        # restore() can invalidate their serving caches.
+        self.sparse_tiers: list[Any] = []  # list[weakref.ref[SparseTier]]
         self.replicas: list[ReplicaGroup] = []
         if replication > 1:
             if topology is not None:
@@ -960,6 +965,14 @@ class PBoxFabric:
             self._account_state_stream(group, replacement, resilver=True)
         group.sync(replacement, round_=self.step)
         self.stats.resilvers += 1
+        # co-resident sparse row slices fail over with the dense slab (a
+        # real engine loss takes both); dead tiers are pruned as we notify
+        self.sparse_tiers = [r for r in self.sparse_tiers
+                             if r() is not None]
+        for ref in self.sparse_tiers:
+            tier = ref()
+            if tier is not None:
+                tier.failover(shard_id)
         self._flat_cache = None
         return "failed_over"
 
@@ -1168,6 +1181,13 @@ class PBoxFabric:
             plane = ref()
             if plane is not None:
                 plane.invalidate()
+        # sparse tiers' serving caches are version-stamped the same way
+        self.sparse_tiers = [r for r in self.sparse_tiers
+                             if r() is not None]
+        for ref in self.sparse_tiers:
+            tier = ref()
+            if tier is not None:
+                tier.on_restore()
         self._flat_cache = None
 
     # -- introspection -----------------------------------------------------

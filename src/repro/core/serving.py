@@ -61,6 +61,7 @@ generator against this clock and reports p50/p99 read latency.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import weakref
 from typing import Any
@@ -510,6 +511,218 @@ class ReadPlane:
             f"{s.reads} reads ({s.hit_rate:.0%} cache hit, "
             f"{s.refreshes} refreshes, max staleness "
             f"{s.max_staleness_served}), {s.bytes_refreshed >> 10} KiB "
+            f"refreshed ({s.bytes_rack_link >> 10} rack / "
+            f"{s.bytes_core_link >> 10} core KiB)"
+        )
+
+
+# ---------------------------------------------------------------------------
+# sparse row serving (hot-row caches over core/sparse.SparseTier)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class SparseServeStats:
+    """Hot-row cache accounting: the row-granular twin of ServeStats."""
+
+    row_reads: int = 0  # rows served (batch members individually)
+    batches: int = 0  # read_rows calls
+    row_hits: int = 0  # rows served from a frontend's hot cache
+    row_misses: int = 0  # rows that forced a replica fetch
+    stale_rows: int = 0  # misses caused by a version bump (vs. cold/evicted)
+    evictions: int = 0  # LRU capacity evictions
+    bytes_refreshed: int = 0  # replica -> frontend (raw f32 rows + ids)
+    bytes_rack_link: int = 0
+    bytes_core_link: int = 0
+    bytes_served: int = 0  # frontend -> client
+    sim_serve_us: float = 0.0  # cumulative event-clock service time
+
+    @property
+    def hit_rate(self) -> float:
+        if self.row_reads == 0:
+            return 0.0
+        return self.row_hits / self.row_reads
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseReadResult:
+    """One served row batch: rows stacked in request order, each stamped
+    with the version (tier round) its bits belong to."""
+
+    rows: jax.Array  # (n, D) f32
+    versions: np.ndarray  # (n,) int64 — per-row stamped version
+    hits: np.ndarray  # (n,) bool — served from the hot cache
+    frontend: int
+    sim_us: float
+
+
+def zipfian_trace(num_rows: int, n: int, skew: float, seed: int = 0,
+                  ) -> np.ndarray:
+    """A power-law row-access trace: ``n`` draws over ``[0, num_rows)``
+    with P(rank r) ∝ 1/r^skew (``skew=0`` is uniform) — the canonical
+    recsys hot-key distribution the hot-row caches exist for.  Bounded
+    and seeded (unlike ``numpy``'s unbounded ``zipf`` sampler), so traces
+    are deterministic across runs and platforms."""
+    if num_rows < 1 or n < 0:
+        raise ValueError("num_rows must be >= 1 and n >= 0")
+    if skew < 0:
+        raise ValueError("skew must be >= 0")
+    rng = np.random.default_rng(seed)
+    p = 1.0 / np.arange(1, num_rows + 1, dtype=np.float64) ** skew
+    p /= p.sum()
+    return rng.choice(num_rows, size=n, p=p).astype(np.int64)
+
+
+class _RowFrontend:
+    """One sparse frontend: its rack and an LRU hot-row cache keyed
+    ``(table, row id) -> (stamped version, row bits)``."""
+
+    def __init__(self, fid: int, rack: int, capacity: int):
+        self.fid = fid
+        self.rack = rack
+        self.capacity = capacity
+        self.cache: collections.OrderedDict = collections.OrderedDict()
+
+
+class SparseReadPlane:
+    """Per-frontend hot-row caches over a ``core/sparse.SparseTier``.
+
+    Serving semantics (the sparse twin of ReadPlane's, but *exact* rather
+    than staleness-bounded — tests/test_sparse_tier.py):
+
+      * **Exact version-keyed invalidation** — a cached row serves iff its
+        stamped version equals the tier's live ``row_versions`` entry.
+        A ``push`` round that updates row ``i`` bumps ``versions[i]``, so
+        the next read of ``i`` misses and refetches; rows the round did
+        not touch keep serving from cache.  Served bits are therefore
+        *always* bit-identical to a direct ``tier.table(name)[i]`` read —
+        the headline invariant.
+      * **Replica routing** — misses refresh from the chain's cheapest
+        backup rack (``SparseTier.serve_rack``), the home rack at R = 1;
+        reads happen between rounds, when chain tails are byte-exact
+        copies of the primaries, so routing never changes bits.
+      * **LRU hot set** — each frontend caches at most ``cache_rows``
+        rows; Zipfian traces (``zipfian_trace``) keep the hot head
+        resident while the cold tail churns.
+      * **Training isolation** — reads never write tier state; serving
+        any trace leaves training bit-identical.
+
+    Registered on the tier's ``read_planes`` (weakref) so a fabric
+    ``restore`` — which may rewind the round counter — can drop caches
+    stamped on the abandoned timeline (``SparseTier.on_restore``)."""
+
+    def __init__(
+        self,
+        tier: Any,
+        *,
+        num_frontends: int = 1,
+        cache_rows: int = 256,
+        name: str = "sparse-serve",
+        serve_us_per_read: float = 0.01,
+    ):
+        if num_frontends < 1:
+            raise ValueError("num_frontends must be >= 1")
+        if cache_rows < 1:
+            raise ValueError("cache_rows must be >= 1")
+        if serve_us_per_read < 0.0:
+            raise ValueError("serve_us_per_read must be >= 0")
+        self.tier = tier
+        self.name = name
+        self.serve_us_per_read = float(serve_us_per_read)
+        racks = max(1, tier.topology.num_racks if tier.topology is not None
+                    else 1)
+        self.frontends = [
+            _RowFrontend(f, f % racks, cache_rows)
+            for f in range(num_frontends)
+        ]
+        self.stats = SparseServeStats()
+        tier.read_planes.append(weakref.ref(self))
+
+    def read_rows(self, frontend: int, name: str, ids: Any,
+                  ) -> SparseReadResult:
+        """Serve a batch of row reads from ``frontend``'s hot cache,
+        refetching rows whose cached version is stale (or missing) from
+        the serving replica."""
+        if not 0 <= frontend < len(self.frontends):
+            raise ValueError(f"no frontend {frontend}")
+        fe = self.frontends[frontend]
+        tier = self.tier
+        table = tier._table(name)
+        ids_np = np.asarray(ids, dtype=np.int64).reshape(-1)
+        if ids_np.size and (ids_np.min() < 0
+                            or ids_np.max() >= table.num_rows):
+            raise ValueError(
+                f"row ids out of range for table {name!r} "
+                f"({table.num_rows} rows)")
+        live = table.versions
+        out_rows = [None] * ids_np.size
+        versions = np.empty(ids_np.size, dtype=np.int64)
+        hits = np.zeros(ids_np.size, dtype=bool)
+        miss_pos: list[int] = []
+        for i, rid in enumerate(ids_np):
+            key = (name, int(rid))
+            entry = fe.cache.get(key)
+            if entry is not None and entry[0] == live[rid]:
+                fe.cache.move_to_end(key)
+                out_rows[i] = entry[1]
+                versions[i] = entry[0]
+                hits[i] = True
+            else:
+                if entry is not None:
+                    self.stats.stale_rows += 1
+                miss_pos.append(i)
+        sim_us = 0.0
+        if miss_pos:
+            miss_ids = ids_np[miss_pos]
+            uniq = np.unique(miss_ids)
+            fetched = table.rows(uniq)  # replica bits == primary bits
+            per_row = 4 * table.dim + 4  # raw f32 row + int32 id
+            owners = table.placement.owner[uniq]
+            for s in np.unique(owners):
+                nbytes = int(per_row * (owners == s).sum())
+                src = tier.serve_rack(int(s), fe.rack)
+                self.stats.bytes_refreshed += nbytes
+                if src == fe.rack:
+                    self.stats.bytes_rack_link += nbytes
+                else:
+                    self.stats.bytes_core_link += nbytes
+                sim_us += tier._us(nbytes, src, fe.rack)
+            lut = {int(r): j for j, r in enumerate(uniq)}
+            for i in miss_pos:
+                rid = int(ids_np[i])
+                row = fetched[lut[rid]]
+                ver = int(live[rid])
+                out_rows[i] = row
+                versions[i] = ver
+                fe.cache[(name, rid)] = (ver, row)
+                fe.cache.move_to_end((name, rid))
+            while len(fe.cache) > fe.capacity:
+                fe.cache.popitem(last=False)
+                self.stats.evictions += 1
+        sim_us += ids_np.size * self.serve_us_per_read
+        self.stats.batches += 1
+        self.stats.row_reads += ids_np.size
+        self.stats.row_hits += int(hits.sum())
+        self.stats.row_misses += len(miss_pos)
+        self.stats.bytes_served += ids_np.size * 4 * table.dim
+        self.stats.sim_serve_us += sim_us
+        rows = (jnp.stack(out_rows) if out_rows
+                else jnp.zeros((0, table.dim), jnp.float32))
+        return SparseReadResult(rows, versions, hits, frontend, sim_us)
+
+    def invalidate(self) -> None:
+        """Drop every frontend's hot cache (fabric restore: the tier's
+        round counter may rewind, and the same version number will hold
+        different bits on the new timeline)."""
+        for fe in self.frontends:
+            fe.cache.clear()
+
+    def describe(self) -> str:
+        s = self.stats
+        racks = ",".join(str(fe.rack) for fe in self.frontends)
+        return (
+            f"SparseReadPlane[{self.name}]: {len(self.frontends)} "
+            f"frontends (racks {racks}), {s.row_reads} row reads "
+            f"({s.hit_rate:.0%} hit, {s.stale_rows} version-stale, "
+            f"{s.evictions} evictions), {s.bytes_refreshed >> 10} KiB "
             f"refreshed ({s.bytes_rack_link >> 10} rack / "
             f"{s.bytes_core_link >> 10} core KiB)"
         )

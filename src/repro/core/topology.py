@@ -121,6 +121,12 @@ class NetworkTopology:
         return (home[:, None]
                 + np.arange(factor, dtype=np.int64)[None, :]) % self.num_racks
 
+    def home_racks(self, num_shards: int) -> np.ndarray:
+        """Primary home rack per shard — ``replica_racks``' first column
+        as a 1-D convenience (the sparse tier and read plane both route
+        against it)."""
+        return self.replica_racks(num_shards, 1)[:, 0]
+
     def hop_cost(self, src_rack: int, dst_rack: int) -> float:
         """Relative wire cost of moving one chunk between two racks'
         domains: rack-local transfers ride the full-bisection edge tier

@@ -42,6 +42,43 @@ def table_grad_sync(vocabs) -> dict:
     return {f"t{i}": "none" for i in range(len(vocabs))}
 
 
+def jagged_to_padded(values, offsets, weights=None):
+    """KeyedJaggedTensor-style jagged bags -> the padded (idx, w) layout
+    the embedding-bag kernel consumes.
+
+    Bag ``b`` is ``values[offsets[b]:offsets[b+1]]``; the result pads every
+    bag to the longest length (min 1, so empty batches still shape-check),
+    with ``w`` carrying 0.0 at padded slots — torchrec's jagged->dense
+    bridge, host-side (the jagged shape is data-dependent, so this runs at
+    the trace boundary, not under jit).  ``weights`` defaults to 1.0 per
+    value.  Offset validation (monotone, spanning) lives in
+    core/sparse.check_jagged; this converter just requires the spanning
+    invariant it needs to slice."""
+    import numpy as np
+
+    off = np.asarray(offsets, dtype=np.int64)
+    val = np.asarray(values, dtype=np.int64)
+    if off.ndim != 1 or off.size < 2 or off[0] != 0 or off[-1] != val.size:
+        raise ValueError(
+            f"offsets must be 1-D spanning [0, {val.size}]")
+    if np.any(np.diff(off) < 0):
+        raise ValueError("offsets must be non-decreasing")
+    w_in = (np.ones(val.size, dtype=np.float32) if weights is None
+            else np.asarray(weights, dtype=np.float32).reshape(-1))
+    if w_in.size != val.size:
+        raise ValueError(f"weights must have {val.size} entries")
+    nbags = off.size - 1
+    lens = np.diff(off)
+    pad = max(1, int(lens.max()) if nbags else 1)
+    idx = np.zeros((nbags, pad), dtype=np.int32)
+    w = np.zeros((nbags, pad), dtype=np.float32)
+    for b in range(nbags):
+        n = int(lens[b])
+        idx[b, :n] = val[off[b]:off[b + 1]]
+        w[b, :n] = w_in[off[b]:off[b + 1]]
+    return jnp.asarray(idx), jnp.asarray(w)
+
+
 def lookup_fields(tables: dict, ids: jax.Array, dist: Dist) -> jax.Array:
     """ids (B, F) one id per field -> (B/tp, F, D) batch-resharded embeddings.
 

@@ -25,6 +25,7 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
@@ -34,6 +35,30 @@ from repro.compat import shard_map
 from repro.core.exchange import PSExchange
 from repro.models.common import Dist
 from repro.runtime.trainer import apply_grad_sync, local_template
+
+
+def coalesce_ids_rows(ids: Any, rows: jax.Array) -> tuple[np.ndarray,
+                                                          jax.Array]:
+    """NIC-side duplicate-id coalescing: ``(ids (n,), rows (n, D))`` ->
+    ``(unique ascending ids, per-id summed rows)``.
+
+    A batch that touches row 7 five times routes *one* wire row carrying
+    the sum — the key-value dedup the PS push exists for.  The reduction
+    is a segment-sum (duplicates fold in batch order), computed *before*
+    any routing decision, so the summed bits are independent of how the
+    table is sharded; core/sparse.SparseTier leans on that for its
+    bit-identity invariant."""
+    ids_np = np.asarray(ids).reshape(-1)
+    rows = jnp.asarray(rows, jnp.float32)
+    if rows.shape[0] != ids_np.size:
+        raise ValueError(
+            f"rows leading dim {rows.shape[0]} != {ids_np.size} ids")
+    if ids_np.size == 0:
+        return ids_np.astype(np.int64), rows
+    uniq, inv = np.unique(ids_np, return_inverse=True)
+    summed = jax.ops.segment_sum(rows, jnp.asarray(inv),
+                                 num_segments=int(uniq.size))
+    return uniq.astype(np.int64), summed
 
 
 def sparse_table_update(

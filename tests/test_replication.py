@@ -619,3 +619,64 @@ def test_chaos_soak_worker_churn():
     except AssertionError:
         _dump_trace([fab], f"churn-seed{seed}")
         raise
+
+
+@pytest.mark.slow
+def test_chaos_sparse_table_failover():
+    """Sparse x replication: a seeded FaultPlan crashing shards during
+    hybrid training (dense slabs through the fabric, embedding rows
+    through the attached SparseTier) fails both tiers over bit-exactly.
+    The fabric's crash_shard hook drives the tier's failover — a real
+    engine loss takes the dense slab and its co-resident row slice at
+    once — and the invariant is checked on *both* parameter stores
+    against the failure-free twin."""
+    from repro.core.sparse import SparseTier
+
+    seed = int(os.environ.get("CHAOS_SEED", "0"))
+    rounds = int(os.environ.get("CHAOS_ROUNDS", "25"))
+    V, D = 96, 8
+    space = make_space()
+    grads = make_grads(space, seed=seed)
+    topo = NetworkTopology(num_workers=K, num_racks=2)
+    init = np.random.default_rng(seed).standard_normal((V, D)).astype(
+        np.float32)
+    plan = FaultPlan.generate(
+        seed, rounds=rounds, num_shards=4, num_workers=K, num_racks=2,
+        shard_crash_rate=0.25)
+
+    def build(fault_plan):
+        fab = make_fabric(space, num_shards=4, topology=topo,
+                          replication=2, fault_plan=fault_plan)
+        tier = SparseTier(fabric=fab, codec="int8", lr=0.05)
+        tier.add_table("t0", init)
+        return fab, tier
+
+    baseline_fab, baseline_tier = build(None)
+    chaos_fab, chaos_tier = build(plan)
+    try:
+        for r in range(rounds):
+            for w in range(K):
+                rng = np.random.default_rng((seed, r, w))
+                ids = rng.integers(0, V, size=10)
+                rows = rng.standard_normal((10, D)).astype(np.float32)
+                for fab, tier in ((baseline_fab, baseline_tier),
+                                  (chaos_fab, chaos_tier)):
+                    tier.push(w, {"t0": (ids, rows)})
+                    fab.pull(w)
+                    fab.push(w, grads[(w + r) % K])
+            if r % 5 == 4:
+                assert np.array_equal(np.asarray(baseline_fab.params),
+                                      np.asarray(chaos_fab.params)), (
+                    f"seed={seed}: dense diverged at round {r + 1}")
+                assert np.array_equal(
+                    np.asarray(baseline_tier.table("t0")),
+                    np.asarray(chaos_tier.table("t0"))), (
+                    f"seed={seed}: sparse table diverged at round {r + 1}")
+        n_crashes = sum(e.kind == "shard_crash" for e in plan.events)
+        assert chaos_fab.stats.failovers == n_crashes
+        assert chaos_tier.stats.failovers == n_crashes  # hook kept pace
+        np.testing.assert_array_equal(baseline_tier.row_versions("t0"),
+                                      chaos_tier.row_versions("t0"))
+    except AssertionError:
+        _dump_trace([chaos_fab], f"sparse-seed{seed}")
+        raise

@@ -1,0 +1,31 @@
+"""Pytest promotion of tests/scripts/sparse_push_equivalence.py.
+
+The script proves the end-to-end SPMD contract — a dlrm train step whose
+tables ride the sparse (ids, cotangent-rows) path matches the all-dense
+PBox step — but it must own the interpreter: it forges an 8-device host
+platform via ``XLA_FLAGS`` *before* jax imports, which cannot happen
+inside an already-initialized test process.  Running it as a subprocess
+keeps that constraint and makes CI actually execute it (it used to be a
+standalone script no job invoked)."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+SCRIPT = REPO / "tests" / "scripts" / "sparse_push_equivalence.py"
+
+
+def test_sparse_push_equivalence_script():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [str(REPO / "src")] + env.get("PYTHONPATH", "").split(os.pathsep))
+    # the script sets its own XLA_FLAGS; a stale value must not leak in
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, str(SCRIPT)], env=env, capture_output=True,
+        text=True, timeout=600)
+    assert proc.returncode == 0, (
+        f"sparse_push_equivalence failed\nstdout:\n{proc.stdout}\n"
+        f"stderr:\n{proc.stderr}")
+    assert "SPARSE PUSH == DENSE SGD OK" in proc.stdout
