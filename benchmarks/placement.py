@@ -1,0 +1,250 @@
+"""Placement sweep: the declarative placement layer (core/placement.py)
+and the closed-loop autoscaler (runtime/autoscaler.py) on the event-clock
+fabric.
+
+Four sections, all seeded and event-clock simulated (byte-replayable, so
+the regression gate holds this bench to a tight band):
+
+  placement/plan/*      default plan vs the solver on the same problem:
+                        cross-rack byte cost per round, core-link MiB —
+                        and bit-identity between the two runs (placement
+                        moves bytes and time, never bits).
+  placement/straggler   the straggler loop as plan deltas: a persistently
+                        slow shard is drained through propose() ->
+                        apply_plan_delta; reports the drain size and the
+                        resilver bytes it shipped.
+  placement/sparse_skew hash row map vs the solver's LPT row map under a
+                        Zipfian row load: per-shard load imbalance and
+                        hot-row serve p99 off the sparse read plane.
+  placement/closed_loop the headline invariant: a run with the autoscaler
+                        applying a replica re-placement, a frontend move,
+                        AND a live reshard finishes bit-identical to the
+                        undisturbed twin.
+
+Must hold (asserted here, unit-tested in tests/test_placement.py and
+tests/test_autoscaler.py):
+  * every solved-plan / rebalanced / autoscaled run matches its default
+    twin's parameters exactly — the optimization surface is numerics-
+    neutral by construction;
+  * the solver never scores worse than the default plan it starts from;
+  * the LPT row map's per-shard load imbalance <= the hash map's under
+    the skewed trace.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core.chunking import ParamSpace
+from repro.core.fabric import LinkModel, PBoxFabric, WorkerHarness
+from repro.core.placement import (
+    PlacementPlan,
+    PlacementProblem,
+    PlanDelta,
+    current_plan,
+)
+from repro.core.serving import ReadPlane, SparseReadPlane, zipfian_trace
+from repro.core.sparse import SparseTier
+from repro.core.topology import NetworkTopology
+from repro.optim.optimizers import momentum
+from repro.runtime.autoscaler import Autoscaler, AutoscalerPolicy
+from repro.runtime.straggler import ShardRebalancer
+
+K = 4  # workers
+ROUNDS = 6
+LINK = LinkModel(wire_us_per_chunk=1.0, agg_us_per_chunk=0.2)
+V, D = 256, 16  # sparse section: one table, V rows of width D
+
+
+def _setup():
+    params = {"w": jnp.zeros((8 * 8192 - 512,))}  # 8 chunks
+    space = ParamSpace.build(params)
+    rng = np.random.default_rng(0)
+    grads = [
+        jnp.asarray(rng.standard_normal(space.flat_elems), jnp.float32)
+        for _ in range(K)
+    ]
+    return space, grads
+
+
+def _make_fabric(space, *, shards, racks, replication=2, plan=None):
+    return PBoxFabric(
+        space, momentum(0.1, 0.9), jnp.zeros((space.flat_elems,)),
+        num_shards=shards, num_workers=K, link=LINK,
+        topology=NetworkTopology(num_workers=K, num_racks=racks),
+        replication=replication, plan=plan,
+    )
+
+
+def _drive(fab, grads, rounds=ROUNDS):
+    for r in range(rounds):
+        for w in range(K):
+            fab.pull(w)
+            fab.push(w, grads[(w + r) % K])
+
+
+def _problem(space, *, shards, racks, replication=2, num_frontends=0,
+             row_load=None):
+    owner = np.empty(space.num_chunks, dtype=np.int64)
+    for sid, ids in enumerate(np.array_split(np.arange(space.num_chunks),
+                                             shards)):
+        owner[ids] = sid
+    return PlacementProblem.standard(
+        num_shards=shards, num_racks=racks, replication=replication,
+        num_frontends=num_frontends, chunk_elems=space.chunk_elems,
+        chunks_per_shard=np.bincount(owner, minlength=shards),
+        row_load=row_load)
+
+
+def _bench_plans() -> None:
+    space, grads = _setup()
+    for shards, racks in ((4, 2), (4, 4)):
+        default = PlacementPlan.default(shards, num_racks=racks,
+                                        replication=2, num_frontends=2)
+        prob = _problem(space, shards=shards, racks=racks, num_frontends=2)
+        solved = prob.solve(start=default, seed=0)
+        score_d = prob.evaluate(default).total
+        score_s = prob.evaluate(solved).total
+        assert score_s <= score_d, (
+            f"shards={shards} racks={racks}: solver regressed the default "
+            f"plan ({score_s} > {score_d})")
+        fab_d = _make_fabric(space, shards=shards, racks=racks)
+        fab_s = _make_fabric(space, shards=shards, racks=racks, plan=solved)
+        _drive(fab_d, grads)
+        _drive(fab_s, grads)
+        assert np.array_equal(np.asarray(fab_d.params),
+                              np.asarray(fab_s.params)), (
+            f"shards={shards} racks={racks}: the solved plan moved bits")
+        name = f"placement/plan/shards={shards}_racks={racks}"
+        core_d = fab_d.stats.bytes_core_link / ROUNDS / 2**20
+        core_s = fab_s.stats.bytes_core_link / ROUNDS / 2**20
+        emit(name, fab_s.stats.sim_pipelined_us / ROUNDS,
+             f"core_MiB={core_s:.3f};core_MiB_default={core_d:.3f};"
+             f"score={score_s:.1f};score_default={score_d:.1f}")
+
+
+def _bench_straggler() -> None:
+    space, grads = _setup()
+    fab = _make_fabric(space, shards=4, racks=2)
+    twin = _make_fabric(space, shards=4, racks=2)
+    reb = ShardRebalancer(fab, cooldown=0)
+    auto = Autoscaler(fab, rebalancer=reb,
+                      policy=AutoscalerPolicy(solve_placement=False))
+    _drive(fab, grads, 2)
+    _drive(twin, grads, 2)
+    for _ in range(25):  # shard 0 persistently ~100x slower than the rest
+        reb.record(0, 10.0)
+        for s in range(1, 4):
+            reb.record(s, 0.1)
+    events = auto.step()
+    assert [e.kind for e in events] == ["chunk_moves"], (
+        "the slow shard must drain through the plan-delta path")
+    assert fab.shards[0].num_chunks == 0
+    _drive(fab, grads, 2)
+    _drive(twin, grads, 2)
+    assert np.array_equal(np.asarray(fab.params), np.asarray(twin.params)), (
+        "the straggler drain moved bits")
+    moved = int(fab.stats.chunks_moved)
+    drained = float(np.max(np.bincount(fab.chunk_owner,
+                                       minlength=4)))
+    emit("placement/straggler", fab.stats.sim_pipelined_us / 4,
+         f"chunks_moved={moved};rebalances={fab.stats.rebalances};"
+         f"max_chunks_per_shard={drained:g}")
+
+
+def _sparse_tier(plan=None):
+    rng = np.random.default_rng(1805)
+    tier = SparseTier(num_shards=4, num_workers=K,
+                      topology=NetworkTopology(num_workers=K, num_racks=2),
+                      replication=2, lr=0.05, plan=plan)
+    tier.add_table("emb",
+                   (0.01 * rng.standard_normal((V, D))).astype(np.float32))
+    return tier
+
+
+def _imbalance(owner, load, shards) -> float:
+    per = np.zeros(shards)
+    np.add.at(per, owner, load)
+    return float(per.max() / per.mean())
+
+
+def _bench_sparse_skew() -> None:
+    trace = zipfian_trace(V, 480, 1.1, seed=7)
+    load = np.bincount(trace, minlength=V).astype(np.float64)
+    space, _ = _setup()
+    prob = _problem(space, shards=4, racks=2, num_frontends=2,
+                    row_load={"emb": load})
+    solved = prob.solve(seed=0)
+    tiers = {"hash": _sparse_tier(), "solved": _sparse_tier(plan=solved)}
+    p99 = {}
+    for kind, tier in tiers.items():
+        plane = SparseReadPlane(tier, num_frontends=2, cache_rows=32)
+        lat = []
+        for b, start in enumerate(range(0, len(trace), 12)):
+            if b % 5 == 0:  # training keeps bumping versions underneath
+                for w in range(K):
+                    rng = np.random.default_rng((971, b, w))
+                    ids = rng.integers(0, V, size=16)
+                    g = rng.standard_normal((16, D)).astype(np.float32)
+                    tier.push(w, {"emb": (ids, g)})
+            lat.append(plane.read_rows(b % 2, "emb",
+                                       trace[start:start + 12]).sim_us)
+        p99[kind] = float(np.percentile(np.asarray(lat), 99))
+    # row placement is sharding-independent: identical pushes, same bits
+    assert np.array_equal(np.asarray(tiers["hash"].table("emb")),
+                          np.asarray(tiers["solved"].table("emb"))), (
+        "the solved row map moved bits")
+    hash_owner = tiers["hash"].tables["emb"].placement.owner
+    imb_h = _imbalance(hash_owner, load, 4)
+    imb_s = _imbalance(solved.row_owner["emb"], load, 4)
+    assert imb_s <= imb_h + 1e-9, (
+        f"LPT row map is more skewed than hash ({imb_s:.3f} > {imb_h:.3f})")
+    emit("placement/sparse_skew", p99["solved"],
+         f"p99_hash={p99['hash']:.2f};imb={imb_s:.3f};imb_hash={imb_h:.3f}")
+
+
+def _bench_closed_loop() -> None:
+    space, grads = _setup()
+    fab_a = _make_fabric(space, shards=2, racks=2)
+    fab_b = _make_fabric(space, shards=2, racks=2)
+    plane_b = ReadPlane(fab_b, num_frontends=2)
+    auto = Autoscaler(fab_b, planes=[plane_b], policy=AutoscalerPolicy(
+        cooldown_rounds=0, solve_placement=False))
+    _drive(fab_a, grads, 2)
+    _drive(fab_b, grads, 2)
+    base = current_plan(fab_b, planes=[plane_b])
+    rr = np.asarray(base.replica_racks).copy()
+    rr[0] = (rr[0] + 1) % 2
+    fe = list(base.frontend_racks)
+    fe[0] = (fe[0] + 1) % 2
+    auto.apply_plan(base.replace(replica_racks=rr, frontend_racks=tuple(fe),
+                                 origin="solved"))
+    _drive(fab_a, grads, 2)
+    _drive(fab_b, grads, 2)
+    auto.apply_delta(PlanDelta(kind="shard_count", new_shards=4))
+    _drive(fab_a, grads, 2)
+    _drive(fab_b, grads, 2)
+    s = fab_b.stats
+    assert s.rescales == 1 and s.replica_moves >= 1 \
+        and plane_b.stats.frontend_moves >= 1, (
+        "the closed-loop row must exercise all three levers")
+    assert np.array_equal(np.asarray(fab_a.params),
+                          np.asarray(fab_b.params)), (
+        "the autoscaled run diverged from the undisturbed twin")
+    emit("placement/closed_loop", s.sim_pipelined_us / (3 * ROUNDS),
+         f"rescales={s.rescales};replica_moves={s.replica_moves};"
+         f"frontend_moves={plane_b.stats.frontend_moves};"
+         f"chunks_moved={s.chunks_moved}")
+
+
+def run() -> None:
+    _bench_plans()
+    _bench_straggler()
+    _bench_sparse_skew()
+    _bench_closed_loop()
+
+
+if __name__ == "__main__":
+    run()

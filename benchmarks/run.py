@@ -30,6 +30,7 @@ def main() -> None:
         fig5_hierarchical,
         kernel_micro,
         multi_job,
+        placement,
         replication,
         serve_load,
         sparse_serve,
@@ -46,6 +47,7 @@ def main() -> None:
         "kernel": kernel_micro.run,
         "topo": topo_rack_codec.run,
         "multijob": multi_job.run,
+        "placement": placement.run,
         "replication": replication.run,
         "serve_load": serve_load.run,
         "sparse_serve": sparse_serve.run,

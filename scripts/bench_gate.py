@@ -58,6 +58,7 @@ DEFAULT_BASELINE = os.path.join(
 # not wall clock: the band can be near-exact without flaking on shared
 # runners.  CLI --bench-tolerance overrides these.
 PER_BENCH_TOLERANCE = {
+    "placement": 0.05,  # pure event-clock numbers + inline bit-identity
     "replication": 0.05,
     "serve_load": 0.05,  # p99 read latency is pure event-clock time
     "sparse_serve": 0.05,  # hot-row p99 is pure event-clock time too

@@ -18,10 +18,11 @@ python -m pytest -x -q "$@"
 # bit-identity + exact chain-replication byte accounting;
 # version-stamped read bit-identity + staleness bound +
 # serve-never-perturbs-training; hot-row exact invalidation + sparse
-# sharding independence + exact row wire accounting) are asserted
+# sharding independence + exact row wire accounting; default-vs-solved
+# plan bit-identity + closed-loop autoscale bit-identity) are asserted
 # inside and fail the run if violated
 python -m benchmarks.run \
-    --only topo,multijob,replication,serve_load,sparse_serve >/dev/null
+    --only topo,multijob,replication,serve_load,sparse_serve,placement >/dev/null
 
 # serve smoke: batched generation through a live-fabric read plane (the
 # driver bit-verifies every read against the fabric before generating)

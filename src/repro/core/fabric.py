@@ -88,6 +88,11 @@ from repro.core.compression import (
     roundtrip,
     wire_bytes,
 )
+from repro.core.placement import (
+    PlacementPlan,
+    PlanDelta,
+    chunk_rebalance_delta,
+)
 from repro.core.replication import FaultPlan, ReplicaGroup, ShardLost
 from repro.core.topology import NetworkTopology, RackAggregator
 from repro.kernels.fused_agg_opt.kernel import LANES, SUBLANES
@@ -120,6 +125,9 @@ class ServerStats:
     chunk_pulls: int = 0
     rebalances: int = 0
     chunks_moved: int = 0
+    # placement / autoscaling tier (core/placement.py, runtime/autoscaler.py)
+    rescales: int = 0  # in-place shard-count changes (PBoxFabric.reshard)
+    replica_moves: int = 0  # chain copies re-homed by a plan delta
     # topology-tier wire accounting (codec-aware byte counts)
     bytes_rack_link: int = 0  # worker -> ToR, full bisection
     bytes_core_link: int = 0  # streams crossing the oversubscribed core
@@ -340,6 +348,7 @@ class PBoxFabric:
         shared_clock: Any | None = None,
         replication: int = 1,
         fault_plan: FaultPlan | None = None,
+        plan: PlacementPlan | None = None,
     ):
         if mode not in ("sync", "async", "stale"):
             raise ValueError(f"unknown mode {mode}")
@@ -367,7 +376,25 @@ class PBoxFabric:
         self.min_push_fraction = min_push_fraction
         self.use_pallas = use_pallas
         self.link = link or LinkModel()
-        self.topology = topology
+        # placement layer (core/placement.py): every fabric runs under a
+        # plan.  None means the default plan — provably bit-identical to
+        # the pre-placement-layer heuristics (the default plan's chain
+        # racks ARE topology.replica_racks' formula, its chunk ownership
+        # defers to ``placement``'s policy), so the caller's topology
+        # object is kept as-is (attached tiers may hold it by identity).
+        # An explicit plan is attached via ``with_plan`` so placement
+        # queries read the plan's decisions instead of the formula.
+        self.placement_policy = placement
+        explicit_plan = plan is not None
+        n_racks = topology.num_racks if topology is not None else 1
+        if plan is None:
+            plan = PlacementPlan.default(num_shards, num_racks=n_racks,
+                                         replication=replication)
+        self._check_plan(plan, num_shards, n_racks, replication)
+        self.plan = plan
+        self.topology = (topology.with_plan(plan)
+                         if topology is not None and explicit_plan
+                         else topology)
         # multi-tenant hooks (core/tenancy.py): ``namespace``/``chunk_base``
         # place this fabric's chunk space inside a fabric-wide namespace
         # (global chunk id = chunk_base + local id); ``shared_clock`` lets a
@@ -415,7 +442,16 @@ class PBoxFabric:
         rows = init_flat.astype(jnp.float32).reshape(c, space.chunk_elems)
         self.chunk_owner = np.empty(c, dtype=np.int64)
         self.shards: list[PBoxShard] = []
-        if placement == "round_robin":
+        if plan.chunk_owner is not None:
+            # the plan pins chunk ownership explicitly (a solved or
+            # snapshot plan); the policy string is ignored
+            if len(plan.chunk_owner) != c:
+                raise ValueError(
+                    f"plan places {len(plan.chunk_owner)} chunks, the "
+                    f"space has {c}")
+            assignment = [np.flatnonzero(plan.chunk_owner == s)
+                          for s in range(num_shards)]
+        elif placement == "round_robin":
             # the paper's core assignment: chunk c -> engine c % N, so a
             # streamed push feeds every engine continuously
             assignment = [np.arange(c)[np.arange(c) % num_shards == s]
@@ -455,11 +491,10 @@ class PBoxFabric:
         self.sparse_tiers: list[Any] = []  # list[weakref.ref[SparseTier]]
         self.replicas: list[ReplicaGroup] = []
         if replication > 1:
-            if topology is not None:
-                racks = topology.replica_racks(num_shards, replication)
-            else:
-                # no topology: everything shares one rack-local domain
-                racks = np.zeros((num_shards, replication), dtype=np.int64)
+            # chain racks come from the plan (the default plan reproduces
+            # topology.replica_racks' anti-affine formula exactly; with no
+            # topology the plan is single-rack and everything is local)
+            racks = plan.replica_racks[:, :replication]
             self.replicas = [
                 ReplicaGroup(s.shard_id, replication, racks[s.shard_id])
                 for s in self.shards
@@ -468,6 +503,22 @@ class PBoxFabric:
             # model broadcast, not on the training wire
             for group, shard in zip(self.replicas, self.shards):
                 group.sync(shard, round_=0)
+
+    @staticmethod
+    def _check_plan(plan: PlacementPlan, num_shards: int, num_racks: int,
+                    replication: int) -> None:
+        if plan.num_shards != num_shards:
+            raise ValueError(
+                f"plan places {plan.num_shards} shards, fabric has "
+                f"{num_shards}")
+        if plan.num_racks != num_racks:
+            raise ValueError(
+                f"plan places {plan.num_racks} racks, topology has "
+                f"{num_racks}")
+        if plan.replica_racks.shape[1] < replication:
+            raise ValueError(
+                f"plan places {plan.replica_racks.shape[1]} chain copies, "
+                f"fabric replicates at {replication}")
 
     # -- assembled views -----------------------------------------------
     def _assemble_rows(self, per_shard: Callable[[PBoxShard], Any]) -> jax.Array:
@@ -1042,17 +1093,48 @@ class PBoxFabric:
             },
         }
 
-    # -- rebalancing hook -------------------------------------------------
+    # -- placement-plan hooks ---------------------------------------------
     def rebalance(self, slow_shards: Sequence[int]) -> int:
         """Move all chunks owned by ``slow_shards`` to healthy shards
-        (balance-preserving, see runtime/straggler.rebalance_chunks).
-        Pure ownership transfer: parameters and optimizer state move with
-        their chunks, so training numerics are unchanged.  Returns the number
-        of chunks moved."""
-        from repro.runtime.straggler import rebalance_chunks
+        (balance-preserving) — the straggler heuristic expressed as a
+        plan delta (core/placement.chunk_rebalance_delta) and applied
+        through ``apply_plan_delta``.  Pure ownership transfer:
+        parameters and optimizer state move with their chunks, so
+        training numerics are unchanged.  Returns the number of chunks
+        moved."""
+        delta = chunk_rebalance_delta(self.chunk_owner, list(slow_shards),
+                                      self.num_shards)
+        if delta is None:
+            return 0
+        return self.apply_plan_delta(delta)
 
-        new_owner = rebalance_chunks(self.chunk_owner, list(slow_shards),
-                                     self.num_shards)
+    def apply_plan_delta(self, delta: PlanDelta) -> int:
+        """Apply one placement-plan delta to the live fabric; returns a
+        progress count (chunks moved, chain copies re-homed, or chunks
+        re-assigned by a reshard).  Numerics-neutral by construction:
+        every kind moves ownership metadata and byte/time accounting,
+        never parameter or optimizer bits.  Frontend and tenant-share
+        deltas belong to the read plane (``ReadPlane.move_frontend``) and
+        the tenancy box (``MultiJobFabric.apply_tenant_shares``)."""
+        if delta.kind == "chunk_moves":
+            return self._apply_chunk_moves(delta.moves)
+        if delta.kind == "replica_racks":
+            return self.replace_chain_racks(delta.shard, delta.racks)
+        if delta.kind == "shard_count":
+            return self.reshard(delta.new_shards)
+        raise ValueError(
+            f"delta kind {delta.kind!r} is not fabric-applied (frontend "
+            "moves belong to the read plane, tenant shares to the "
+            "MultiJobFabric)")
+
+    def _apply_chunk_moves(self, moves: Sequence[tuple[int, int]]) -> int:
+        new_owner = self.chunk_owner.copy()
+        for chunk, owner in moves:
+            if not 0 <= chunk < self.space.num_chunks:
+                raise ValueError(f"no chunk {chunk}")
+            if not 0 <= owner < self.num_shards:
+                raise ValueError(f"no shard {owner}")
+            new_owner[chunk] = owner
         moved = np.where(new_owner != self.chunk_owner)[0]
         if len(moved) == 0:
             return 0
@@ -1085,6 +1167,155 @@ class PBoxFabric:
             group.sync(shard, round_=self.step)
         self._flat_cache = None
         return len(moved)
+
+    def replace_chain_racks(self, shard_id: int,
+                            new_racks: Sequence[int]) -> int:
+        """Re-home one shard's replication chain onto ``new_racks``
+        (primary's home first, then the backups, like
+        ``ReplicaGroup.racks``).  Returns the number of copies that
+        actually moved.
+
+        Numerics-neutral: chain copies are references to immutable
+        post-round slabs, so "moving" one is metadata plus one state
+        stream on the wire (booked as recovery-class traffic —
+        ``bytes_resilver``/``sim_recovery_us`` — on the links the move
+        crosses).  The fabric's plan and plan-backed topology are
+        refreshed so serving routes and ``home_racks`` consumers see the
+        new chain immediately."""
+        if not self.replicas:
+            raise ValueError(
+                "no replication chains to re-home (replication < 2)")
+        if not 0 <= shard_id < self.num_shards:
+            raise ValueError(f"no shard {shard_id}")
+        group = self.replicas[shard_id]
+        new = tuple(int(r) for r in new_racks)
+        if len(new) != group.factor:
+            raise ValueError(
+                f"chain has {group.factor} copies, got {len(new)} racks")
+        n_racks = self.topology.num_racks if self.topology is not None else 1
+        for r in new:
+            if not 0 <= r < n_racks:
+                raise ValueError(f"rack {r} not in the topology")
+        old = group.racks
+        if new == old:
+            return 0
+        shard = self.shards[shard_id]
+        group.racks = new
+        rr = np.asarray(self.plan.replica_racks).copy()
+        rr[shard_id, :len(new)] = new
+        self.plan = self.plan.replace(replica_racks=rr)
+        if self.topology is not None:
+            self.topology = self.topology.with_plan(self.plan)
+        moved = 0
+        if shard.num_chunks:
+            nbytes = group.state_bytes(self.spec.num_state_slots,
+                                       shard.num_elems)
+            us_per_chunk = self.link.wire_us_per_chunk * (
+                1 + self.spec.num_state_slots)
+            for src, dst in zip(old, new):
+                if src == dst:
+                    continue
+                moved += 1
+                # one state stream ships the copy from its old rack to
+                # the new one, on the same accounting surface failover
+                # re-silvering uses
+                self.stats.bytes_resilver += nbytes
+                if self.topology is not None:
+                    self.stats.bytes_core_link += nbytes
+                self.stats.sim_recovery_us += (
+                    shard.num_chunks * us_per_chunk
+                    * self._hop_cost(src, dst))
+        else:
+            moved = sum(1 for a, b in zip(old, new) if a != b)
+        self.stats.replica_moves += moved
+        return moved
+
+    def reshard(self, new_num_shards: int, *,
+                plan: PlacementPlan | None = None) -> int:
+        """Change the live fabric's shard count in place — the
+        autoscaler's grow/shrink lever.  Returns the number of chunks
+        whose owner changed.
+
+        A round-edge operation: in-flight pushes (inbox or staged) must
+        have drained, because staged buffers and quorum state are
+        per-round.  The parameter space itself is untouched — resharding
+        re-partitions the *same* chunk set over a different number of
+        aggregation engines, so worker push/pull shapes, codec
+        error-feedback state, worker clocks, and pull versions all stay
+        exactly as they were.  Bit-identity across the change is the
+        fabric's standing sharding-independence invariant: every shard
+        applies the same per-chunk kernel program, so the partition never
+        touches numerics.  Replication chains are rebuilt at the new
+        count from ``plan`` (default: the anti-affine default plan) with
+        a provisioning sync — the copies ride the rescale transfer like
+        rebalanced chunks do.  Attached sparse tiers re-shard with the
+        dense engines (co-residency); read-plane caches stay valid (bits
+        and versions are unchanged)."""
+        if new_num_shards < 1:
+            raise ValueError("num_shards must be >= 1")
+        if self._inbox or self._staged:
+            raise RuntimeError(
+                "reshard is a round-edge operation: in-flight pushes must "
+                "drain (or be dropped) before the engine set changes")
+        if new_num_shards == self.num_shards and plan is None:
+            return 0
+        n_racks = self.topology.num_racks if self.topology is not None else 1
+        if plan is None:
+            plan = PlacementPlan.default(new_num_shards, num_racks=n_racks,
+                                         replication=self.replication)
+        self._check_plan(plan, new_num_shards, n_racks, self.replication)
+        c = self.space.num_chunks
+        rows = self._assemble_rows(lambda s: s.params)
+        state_rows = [self._assemble_rows(lambda s, k=k: s.state[k])
+                      for k in range(self.spec.num_state_slots)]
+        if plan.chunk_owner is not None:
+            if len(plan.chunk_owner) != c:
+                raise ValueError(
+                    f"plan places {len(plan.chunk_owner)} chunks, the "
+                    f"space has {c}")
+            owner = np.asarray(plan.chunk_owner, dtype=np.int64).copy()
+        elif self.placement_policy == "round_robin":
+            owner = np.arange(c, dtype=np.int64) % new_num_shards
+        else:
+            owner = np.empty(c, dtype=np.int64)
+            for sid, ids in enumerate(np.array_split(np.arange(c),
+                                                     new_num_shards)):
+                owner[ids] = sid
+        moved = int(np.sum(owner != self.chunk_owner))
+        new_shards: list[PBoxShard] = []
+        for sid in range(new_num_shards):
+            ids = np.flatnonzero(owner == sid)
+            shard = PBoxShard(sid, self.space, self.spec, ids,
+                              rows[jnp.asarray(ids)],
+                              use_pallas=self.use_pallas)
+            shard.state = tuple(r[jnp.asarray(ids)] for r in state_rows)
+            new_shards.append(shard)
+        self.shards = new_shards
+        self.chunk_owner = owner
+        self.num_shards = new_num_shards
+        self.plan = plan
+        if self.topology is not None:
+            self.topology = self.topology.with_plan(plan)
+        self.replicas = []
+        if self.replication > 1:
+            racks = plan.replica_racks[:, :self.replication]
+            self.replicas = [
+                ReplicaGroup(s.shard_id, self.replication, racks[s.shard_id])
+                for s in self.shards
+            ]
+            for group, shard in zip(self.replicas, self.shards):
+                group.sync(shard, round_=self.step)
+        self.stats.rescales += 1
+        self.stats.chunks_moved += moved
+        self._flat_cache = None
+        # co-resident sparse tiers re-shard with the dense engines
+        self.sparse_tiers = [r for r in self.sparse_tiers
+                             if r() is not None]
+        for ref in self.sparse_tiers:
+            tier = ref()
+            if tier is not None:
+                tier.reshard(new_num_shards)
+        return moved
 
     # -- elastic / checkpoint hooks ---------------------------------------
     def snapshot(self) -> dict:

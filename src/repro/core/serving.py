@@ -91,6 +91,7 @@ class ServeStats:
     bytes_core_link: int = 0  # refresh bytes crossing the core
     bytes_served: int = 0  # frontend -> client
     max_staleness_served: int = 0  # staleness ceiling actually observed
+    frontend_moves: int = 0  # plan-driven frontend re-placements
     sim_serve_us: float = 0.0  # cumulative event-clock service time
 
     @property
@@ -338,6 +339,7 @@ class ReadPlane:
         bandwidth_cap: float | None = None,
         serve_us_per_read: float = 0.05,
         shared: Any | None = None,
+        plan: Any = None,
     ):
         if max_staleness < 0:
             raise ValueError("max_staleness must be >= 0")
@@ -359,8 +361,17 @@ class ReadPlane:
         self.serve_us_per_read = serve_us_per_read
         self.shared = shared
         racks = max(1, source.num_racks)
+        # frontend -> rack comes from the placement plan when one is
+        # attached (kwarg, else the backing fabric's); the default plan's
+        # assignment is f % racks, so the default path is byte-identical
+        # to the old hard-coded round-robin
+        if plan is None:
+            plan = getattr(getattr(source, "fabric", None), "plan", None)
+        fe_racks = getattr(plan, "frontend_racks", ()) or ()
         self.frontends = [
-            _Frontend(f, f % racks) for f in range(num_frontends)
+            _Frontend(f, (int(fe_racks[f]) % racks if f < len(fe_racks)
+                          else f % racks))
+            for f in range(num_frontends)
         ]
         self.stats = ServeStats()
         # assembled-flat memo: assembling the full space from replica
@@ -484,6 +495,22 @@ class ReadPlane:
             for i in range(n)
         ]
 
+    def move_frontend(self, frontend: int, rack: int) -> None:
+        """Re-home one frontend onto ``rack`` — the plan delta's serving
+        lever.  Timing-only by construction: the cache and its version
+        stamp stay (the bits are rack-independent); only future refresh
+        streams are priced from the new rack."""
+        if not 0 <= frontend < len(self.frontends):
+            raise ValueError(f"no frontend {frontend}")
+        racks = max(1, self.source.num_racks)
+        if not 0 <= rack < racks:
+            raise ValueError(f"no rack {rack} (topology has {racks})")
+        fe = self.frontends[frontend]
+        if fe.rack == rack:
+            return
+        fe.rack = rack
+        self.stats.frontend_moves += 1
+
     def invalidate(self) -> None:
         """Drop every frontend cache and the assembly memo.  The fabric
         calls this from ``restore`` (the round counter may rewind, and a
@@ -533,6 +560,7 @@ class SparseServeStats:
     bytes_rack_link: int = 0
     bytes_core_link: int = 0
     bytes_served: int = 0  # frontend -> client
+    frontend_moves: int = 0  # plan-driven frontend re-placements
     sim_serve_us: float = 0.0  # cumulative event-clock service time
 
     @property
@@ -617,6 +645,7 @@ class SparseReadPlane:
         cache_rows: int = 256,
         name: str = "sparse-serve",
         serve_us_per_read: float = 0.01,
+        plan: Any = None,
     ):
         if num_frontends < 1:
             raise ValueError("num_frontends must be >= 1")
@@ -629,12 +658,34 @@ class SparseReadPlane:
         self.serve_us_per_read = float(serve_us_per_read)
         racks = max(1, tier.topology.num_racks if tier.topology is not None
                     else 1)
+        # frontend placement mirrors ReadPlane: plan-backed when a plan is
+        # attached (kwarg, else the tier's), f % racks otherwise/by default
+        if plan is None:
+            plan = getattr(tier, "plan", None)
+        fe_racks = getattr(plan, "frontend_racks", ()) or ()
         self.frontends = [
-            _RowFrontend(f, f % racks, cache_rows)
+            _RowFrontend(f, (int(fe_racks[f]) % racks if f < len(fe_racks)
+                             else f % racks), cache_rows)
             for f in range(num_frontends)
         ]
         self.stats = SparseServeStats()
         tier.read_planes.append(weakref.ref(self))
+
+    def move_frontend(self, frontend: int, rack: int) -> None:
+        """Re-home one sparse frontend onto ``rack``.  Timing-only: the
+        hot-row cache is exact-version keyed, so its entries stay valid;
+        only future refetch streams are priced from the new rack."""
+        if not 0 <= frontend < len(self.frontends):
+            raise ValueError(f"no frontend {frontend}")
+        racks = max(1, self.tier.topology.num_racks
+                    if self.tier.topology is not None else 1)
+        if not 0 <= rack < racks:
+            raise ValueError(f"no rack {rack} (topology has {racks})")
+        fe = self.frontends[frontend]
+        if fe.rack == rack:
+            return
+        fe.rack = rack
+        self.stats.frontend_moves += 1
 
     def read_rows(self, frontend: int, name: str, ids: Any,
                   ) -> SparseReadResult:

@@ -12,11 +12,14 @@ the same exact byte accounting.
 Pieces:
 
   ``RowPlacement``          the placement planner: maps global row id ->
-                            owning shard.  Two policies — ``"range"``
+                            owning shard.  Three policies — ``"range"``
                             (contiguous row blocks, torchrec's row-wise
-                            sharding) and ``"hash"`` (splitmix64 of the
-                            row id, hot-row diffusion).  Replica racks are
-                            anti-affine via ``NetworkTopology.replica_racks``
+                            sharding), ``"hash"`` (splitmix64 of the
+                            row id, hot-row diffusion), and ``"plan"``
+                            (an explicit solved map out of
+                            core/placement.PlacementPlan.row_owner).
+                            Replica racks are anti-affine via the
+                            placement plan / ``NetworkTopology.replica_racks``
                             exactly like the dense chains.
   ``ShardedEmbeddingTable`` one named (V, D) table split into per-shard row
                             slabs, with a per-row int64 version array —
@@ -99,11 +102,16 @@ class RowPlacement:
     ``"hash"`` assigns ``splitmix64(i) % num_shards`` (diffuses hot-key
     ranges across engines).  Both are pure functions of (num_rows,
     num_shards, policy): every worker, replica, and serving frontend
-    derives the identical map with zero coordination."""
+    derives the identical map with zero coordination.  ``"plan"`` takes
+    an explicit owner array (``explicit``) verbatim — the placement
+    layer's solved row maps (core/placement.PlacementPlan.row_owner)
+    enter the tier through this policy, via :meth:`from_owner`."""
 
     num_rows: int
     num_shards: int
     policy: str = "hash"
+    explicit: Any = dataclasses.field(default=None, repr=False,
+                                      compare=False)
     owner: np.ndarray = dataclasses.field(init=False, repr=False)
     shard_rows: tuple = dataclasses.field(init=False, repr=False)
 
@@ -120,13 +128,33 @@ class RowPlacement:
         elif self.policy == "hash":
             owner = (_splitmix64(np.arange(self.num_rows))
                      % np.uint64(self.num_shards)).astype(np.int64)
+        elif self.policy == "plan":
+            if self.explicit is None:
+                raise ValueError(
+                    "policy 'plan' needs an explicit owner array")
+            owner = np.asarray(self.explicit, dtype=np.int64).copy()
+            if owner.shape != (self.num_rows,):
+                raise ValueError(
+                    f"explicit owner maps {owner.shape} rows, table has "
+                    f"{self.num_rows}")
+            if owner.min() < 0 or owner.max() >= self.num_shards:
+                raise ValueError(
+                    f"explicit owners [{owner.min()}, {owner.max()}] out "
+                    f"of range for {self.num_shards} shards")
         else:
             raise ValueError(
                 f"unknown placement policy {self.policy!r} "
-                "(want 'hash' or 'range')")
+                "(want 'hash', 'range' or 'plan')")
+        owner.setflags(write=False)
         object.__setattr__(self, "owner", owner)
         object.__setattr__(self, "shard_rows", tuple(
             np.flatnonzero(owner == s) for s in range(self.num_shards)))
+
+    @classmethod
+    def from_owner(cls, owner: Any, num_shards: int) -> "RowPlacement":
+        """Wrap a solved row -> shard array (a plan's ``row_owner`` entry)."""
+        arr = np.asarray(owner, dtype=np.int64)
+        return cls(int(arr.shape[0]), int(num_shards), "plan", explicit=arr)
 
     def local_of(self, shard: int, ids: np.ndarray) -> np.ndarray:
         """Global row ids (all owned by ``shard``) -> slab-local indices."""
@@ -224,6 +252,7 @@ class SparseStats:
     bytes_core_link: int = 0  # ... crossing the oversubscribed core
     failovers: int = 0
     resilvers: int = 0
+    rescales: int = 0  # in-place shard-count / placement changes
     sim_push_us: float = 0.0  # event-clock push wire time
     sim_lookup_us: float = 0.0  # event-clock pull wire time
     sim_replication_us: float = 0.0  # event-clock chain time
@@ -345,8 +374,11 @@ class SparseTier:
         lr: float = 0.1,
         wire_us_per_chunk: float | None = None,
         chunk_elems: int | None = None,
+        plan: Any = None,
     ):
         if fabric is not None:
+            if plan is None:
+                plan = getattr(fabric, "plan", None)
             num_shards = fabric.num_shards if num_shards is None else num_shards
             num_workers = (fabric.num_workers if num_workers is None
                            else num_workers)
@@ -373,6 +405,7 @@ class SparseTier:
             raise ValueError(f"unknown placement policy {placement!r}")
         self.topology = topology
         self.fabric = fabric
+        self.plan = plan
         self.default_placement = placement
         self.codec = codec
         self.error_feedback = bool(error_feedback)
@@ -385,13 +418,10 @@ class SparseTier:
         self.stats = SparseStats()
         self.round = 0
         # shard home racks + anti-affine chain racks, shared by every table
-        # (row -> shard is per table; shard -> rack is the fabric's layout)
-        if topology is not None:
-            self.chain_racks = topology.replica_racks(self.num_shards,
-                                                      self.replication)
-        else:
-            self.chain_racks = np.zeros((self.num_shards, self.replication),
-                                        dtype=np.int64)
+        # (row -> shard is per table; shard -> rack is the placement
+        # plan's layout — the default plan reproduces the old
+        # topology.replica_racks formula bit-for-bit)
+        self.chain_racks = self._resolve_chain_racks()
         self.home_racks = self.chain_racks[:, 0]
         self._chains = [
             _SparseChain(s, self.replication, self.chain_racks[s])
@@ -407,14 +437,52 @@ class SparseTier:
         if fabric is not None and hasattr(fabric, "sparse_tiers"):
             fabric.sparse_tiers.append(weakref.ref(self))
 
+    def _resolve_chain_racks(self) -> np.ndarray:
+        """Shard -> chain-rack rows for the tier's shard count: the
+        attached plan when its shard space matches (solved layouts enter
+        here), else the topology's plan-backed/default map, else rack 0."""
+        plan = self.plan
+        if (plan is not None
+                and getattr(plan, "num_shards", None) == self.num_shards
+                and plan.replica_racks.shape[1] >= self.replication):
+            return np.asarray(plan.replica_racks[:, :self.replication],
+                              dtype=np.int64).copy()
+        if self.topology is not None:
+            return self.topology.replica_racks(self.num_shards,
+                                               self.replication)
+        return np.zeros((self.num_shards, self.replication), dtype=np.int64)
+
+    def _plan_row_owner(self, name: str, num_rows: int) -> np.ndarray | None:
+        """The attached plan's solved row map for ``name`` when it fits
+        this tier's shard space and the table's row count, else None."""
+        plan = self.plan
+        if plan is None:
+            return None
+        owner = getattr(plan, "row_owner", {}).get(name)
+        if owner is None:
+            return None
+        owner = np.asarray(owner, dtype=np.int64)
+        if (owner.shape != (num_rows,) or owner.size == 0
+                or owner.min() < 0 or owner.max() >= self.num_shards):
+            return None
+        return owner
+
     # -- tables ----------------------------------------------------------
     def add_table(self, name: str, init: Any,
                   *, placement: str | None = None) -> ShardedEmbeddingTable:
+        """Create a row-sharded table.  An explicit ``placement`` policy
+        wins; otherwise the attached plan's solved row map for ``name``
+        (if any) is used, falling back to the tier's default policy."""
         if name in self.tables:
             raise ValueError(f"table {name!r} already exists")
         arr = jnp.asarray(init, jnp.float32)
-        plan = RowPlacement(int(arr.shape[0]), self.num_shards,
-                            placement or self.default_placement)
+        solved = (self._plan_row_owner(name, int(arr.shape[0]))
+                  if placement is None else None)
+        if solved is not None:
+            plan = RowPlacement.from_owner(solved, self.num_shards)
+        else:
+            plan = RowPlacement(int(arr.shape[0]), self.num_shards,
+                                placement or self.default_placement)
         table = ShardedEmbeddingTable(name, arr, plan)
         self.tables[name] = table
         if self._chains:
@@ -682,6 +750,64 @@ class SparseTier:
         chain.sync(self._shard_payload(shard_id), self.round)
         self.stats.resilvers += 1
         return "failed_over"
+
+    def reshard(self, new_num_shards: int, *, plan: Any = None) -> None:
+        """Re-partition every table's rows over ``new_num_shards`` engines
+        in place — called by ``PBoxFabric.reshard`` (co-residency) or the
+        autoscaler directly on standalone tiers.
+
+        Round-edge: staged pushes must have drained.  Each table's slabs
+        are rebuilt by gathering rows out of its assembled dense view
+        (byte-exact — slabs are row gathers of the same bits) and the
+        global per-row version array carries over untouched, so serving
+        caches stay exactly valid.  Codec error-feedback residuals are
+        dense per-(worker, table) and shard-independent, so the decoded
+        bits entering the next fold are identical: resharding moves only
+        the byte/time accounting, never numerics (the tier's standing
+        sharding-independence invariant).  Chains are rebuilt at the new
+        count with a provisioning sync (rides the rescale transfer)."""
+        new_num_shards = int(new_num_shards)
+        if new_num_shards < 1:
+            raise ValueError("num_shards must be >= 1")
+        if self._inbox:
+            raise RuntimeError(
+                "reshard is a round-edge operation: staged pushes must "
+                "drain before the engine set changes")
+        for name, t in self.tables.items():
+            if t.num_rows < new_num_shards:
+                raise ValueError(
+                    f"table {name!r} has {t.num_rows} rows, cannot split "
+                    f"over {new_num_shards} shards")
+        if plan is None and self.fabric is not None:
+            plan = getattr(self.fabric, "plan", None)
+        self.plan = plan
+        if self.fabric is not None and self.fabric.topology is not None:
+            self.topology = self.fabric.topology  # plan-backed refresh
+        old_tables = self.tables
+        self.num_shards = new_num_shards
+        self.chain_racks = self._resolve_chain_racks()
+        self.home_racks = self.chain_racks[:, 0]
+        new_tables: dict[str, ShardedEmbeddingTable] = {}
+        for name, t in old_tables.items():
+            solved = self._plan_row_owner(name, t.num_rows)
+            if solved is not None:
+                rp = RowPlacement.from_owner(solved, new_num_shards)
+            else:
+                policy = (t.placement.policy
+                          if t.placement.policy in ("hash", "range")
+                          else self.default_placement)
+                rp = RowPlacement(t.num_rows, new_num_shards, policy)
+            nt = ShardedEmbeddingTable(name, t.dense(), rp)
+            nt.versions = t.versions  # global per-row rounds, shard-free
+            new_tables[name] = nt
+        self.tables = new_tables
+        self._chains = [
+            _SparseChain(s, self.replication, self.chain_racks[s])
+            for s in range(new_num_shards)
+        ] if self.replication > 1 else []
+        for chain in self._chains:
+            chain.sync(self._shard_payload(chain.shard_id), self.round)
+        self.stats.rescales += 1
 
     def on_restore(self) -> None:
         """The owning fabric restored a snapshot: sparse serving caches

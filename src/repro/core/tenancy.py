@@ -245,6 +245,11 @@ class MultiJobFabric:
         self.serving: dict[str, Any] = {}
         self._serve_source: dict[str, str] = {}  # serve name -> job name
         self._next_chunk_base = 0
+        # plan-driven fair-share weight overrides (tenant name -> weight):
+        # the placement layer's per-tenant bandwidth shares land here and
+        # shadow the attach-time JobSpec priorities — timing-only, shares
+        # inflate wire stages and never touch bits
+        self._share_override: dict[str, float] = {}
         self.links: dict[str, LinkQueue] = {
             **{f"rack{r}": LinkQueue(f"rack{r}") for r in range(num_racks)},
             "core": LinkQueue("core"),
@@ -303,6 +308,7 @@ class MultiJobFabric:
             raise KeyError(f"job {name!r} is not attached")
         handle = self.jobs.pop(name)
         handle.detached = True
+        self._share_override.pop(name, None)
         # a detached job no longer contends (and its handle, if still
         # driven, behaves like a dedicated fabric)
         handle.fabric.shared_clock = None
@@ -357,6 +363,7 @@ class MultiJobFabric:
             raise KeyError(f"serve tenant {name!r} is not attached")
         plane = self.serving.pop(name)
         self._serve_source.pop(name, None)
+        self._share_override.pop(name, None)
         plane.shared = None
         return plane
 
@@ -369,11 +376,49 @@ class MultiJobFabric:
         if self.serving.get(plane.name) is not plane:
             raise KeyError(
                 f"serve tenant {plane.name!r} is not attached to this box")
-        return self._total_priority() / plane.priority
+        return (self._total_priority()
+                / self._priority_of(plane.name, plane.priority))
 
     def _total_priority(self) -> float:
-        return (sum(h.spec.priority for h in self.jobs.values())
-                + sum(p.priority for p in self.serving.values()))
+        return (sum(self._priority_of(h.name, h.spec.priority)
+                    for h in self.jobs.values())
+                + sum(self._priority_of(p.name, p.priority)
+                      for p in self.serving.values()))
+
+    def _priority_of(self, name: str, default: float) -> float:
+        """One tenant's live fair-share weight: the plan override when
+        set, the attach-time spec priority otherwise."""
+        return self._share_override.get(name, default)
+
+    def apply_tenant_shares(self, shares: dict[str, float]) -> int:
+        """Apply a placement plan's per-tenant bandwidth shares (the
+        ``tenant_shares`` plan delta).  Weights shadow the attach-time
+        ``JobSpec.priority`` values for every fair-share computation
+        (``wire_scales``/``serve_scale``); names not currently attached
+        are ignored (the plan may be older than a detach).  Timing-only
+        by construction — shares scale event-clock wire stages, never
+        bits.  Returns the number of tenants whose weight changed."""
+        changed = 0
+        for name, weight in (shares or {}).items():
+            if name not in self.jobs and name not in self.serving:
+                continue
+            weight = float(weight)
+            if weight <= 0.0:
+                raise ValueError(
+                    f"tenant share for {name!r} must be > 0, got {weight}")
+            if self._share_override.get(name) != weight:
+                changed += 1
+            self._share_override[name] = weight
+        return changed
+
+    def apply_plan_delta(self, delta) -> int:
+        """Apply the tenancy-owned plan delta kind (``tenant_shares``).
+        Fabric-owned kinds must go to the per-job fabrics."""
+        if delta.kind != "tenant_shares":
+            raise ValueError(
+                f"MultiJobFabric applies 'tenant_shares' deltas, got "
+                f"{delta.kind!r}")
+        return self.apply_tenant_shares(dict(delta.shares))
 
     # -- fault tier (core/replication.py) --------------------------------
     def crash_shard(self, shard_id: int) -> dict[str, str]:
@@ -413,7 +458,7 @@ class MultiJobFabric:
             raise KeyError(
                 f"fabric namespace {fabric.namespace!r} is not attached")
         total = self._total_priority()
-        scale = total / handle.spec.priority
+        scale = total / self._priority_of(handle.name, handle.spec.priority)
         if handle.spec.bandwidth_cap is not None:
             scale = max(scale, 1.0 / handle.spec.bandwidth_cap)
         return scale, scale

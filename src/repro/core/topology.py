@@ -71,6 +71,12 @@ class NetworkTopology:
     oversubscription: float = 4.0
     rack_aggregation: bool = True
     rack_of: tuple[int, ...] = ()
+    # placement-layer hook (core/placement.py): when a PlacementPlan is
+    # attached (``with_plan``), ``replica_racks``/``home_racks`` read the
+    # plan's decisions instead of the built-in heuristic.  Excluded from
+    # equality/hash: two topologies with the same physical layout compare
+    # equal regardless of which plan currently rides on them.
+    plan: object = dataclasses.field(default=None, compare=False, repr=False)
 
     def __post_init__(self):
         if self.num_workers < 1:
@@ -99,6 +105,19 @@ class NetworkTopology:
                 "non-decreasing): the deterministic chained aggregation "
                 "order requires it"
             )
+        if self.plan is not None and self.plan.num_racks != self.num_racks:
+            raise ValueError(
+                f"plan places {self.plan.num_racks} racks, topology has "
+                f"{self.num_racks}"
+            )
+
+    def with_plan(self, plan) -> "NetworkTopology":
+        """A copy of this topology with a ``PlacementPlan`` attached —
+        placement queries (``replica_racks``/``home_racks``) read the
+        plan's decisions; the physical layout (racks, oversubscription,
+        hop costs) is untouched.  The fabric wraps its topology with its
+        plan at construction and after every applied plan delta."""
+        return dataclasses.replace(self, plan=plan)
 
     # -- queries -------------------------------------------------------
     def members(self, rack: int) -> tuple[int, ...]:
@@ -112,11 +131,23 @@ class NetworkTopology:
         land in *distinct* racks while ``factor <= num_racks``, so a
         rack-level failure can never take a shard and all its backups at
         once.  With ``factor > num_racks`` the chain wraps (full
-        anti-affinity is impossible); the extra copies share racks."""
+        anti-affinity is impossible); the extra copies share racks.
+
+        With a ``PlacementPlan`` attached (``with_plan``) whose shapes
+        match, the plan's chain decisions are returned instead — the
+        formula above is exactly ``PlacementPlan.default``'s layout, so
+        the default plan is bit-identical to the un-planned path.  A
+        query for a different shard count or a deeper factor (e.g. a
+        sparse tier sharded differently from the dense fabric) falls back
+        to the heuristic."""
         if num_shards < 1:
             raise ValueError("num_shards must be >= 1")
         if factor < 1:
             raise ValueError("replication factor must be >= 1")
+        plan = self.plan
+        if (plan is not None and plan.num_shards == num_shards
+                and plan.replica_racks.shape[1] >= factor):
+            return plan.replica_racks[:, :factor].copy()
         home = np.arange(num_shards, dtype=np.int64) % self.num_racks
         return (home[:, None]
                 + np.arange(factor, dtype=np.int64)[None, :]) % self.num_racks
@@ -140,10 +171,19 @@ class NetworkTopology:
 
     def nearest_rack(self, candidates, to_rack: int) -> int:
         """The candidate rack cheapest to reach from ``to_rack`` by
-        ``hop_cost``, ties broken to the lowest rack id (deterministic
-        routing).  The read plane (core/serving.py) picks each shard's
-        serving replica with this — anti-affine placement means most
-        racks hold a local replica of most shards."""
+        ``hop_cost``.
+
+        Tie-breaking rule (PINNED — do not change): among equally cheap
+        candidates the *lowest rack id* wins.  The rule is load-bearing
+        three ways: the read plane (core/serving.py) picks each shard's
+        serving replica with it, the placement solver
+        (``PlacementProblem.serve_rack``) prices plans assuming it, and
+        the autoscaler (runtime/autoscaler.py) must make byte-identical
+        routing decisions across re-solves — a different tie-break would
+        silently re-route refresh streams between runs.  Regression test:
+        tests/test_topology.py::test_nearest_rack_tie_breaks_to_lowest_id.
+        Anti-affine placement means most racks hold a local replica of
+        most shards."""
         cands = tuple(int(c) for c in candidates)
         if not cands:
             raise ValueError("nearest_rack needs at least one candidate")

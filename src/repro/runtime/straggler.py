@@ -24,12 +24,23 @@ exercised against the in-process PBox fabric (core/fabric.py):
 ``StragglerMonitor`` detects persistent stragglers from per-step push
 latencies (median-based, robust to noise); ``ShardRebalancer`` closes the
 loop from shard latency measurements to fabric chunk re-assignment.
+
+The chunk re-assignment policy itself (``rebalance_chunks``) lives in
+``core/placement.py`` — it is one of the placement layer's plan-delta
+producers — and is re-exported here for compatibility.  The rebalancer
+speaks plan deltas: ``propose()`` returns the move set as a
+``PlanDelta`` for the autoscaler to apply through the plan machinery;
+``maybe_rebalance()`` keeps the original apply-it-myself loop.
 """
 from __future__ import annotations
 
 import dataclasses
 
 import numpy as np
+
+from repro.core.placement import PlanDelta as PlanDelta
+from repro.core.placement import chunk_rebalance_delta as chunk_rebalance_delta
+from repro.core.placement import rebalance_chunks as rebalance_chunks
 
 
 @dataclasses.dataclass
@@ -87,6 +98,38 @@ class ShardRebalancer:
     def record(self, shard: int, seconds: float) -> None:
         self.monitor.record(shard, seconds)
 
+    def speeds(self) -> np.ndarray:
+        """Per-shard median aggregation latency (seconds; 0.0 with no
+        samples) — the autoscaler's shard-speed telemetry feed."""
+        return np.array([np.median(w) if w else 0.0
+                         for w in self.monitor.lat], dtype=np.float64)
+
+    def _slow_movable(self) -> tuple[list[int], list[int]]:
+        slow = self.monitor.stragglers()
+        movable = [s for s in slow
+                   if self.fabric.shards[s].num_chunks > 0]
+        return slow, movable
+
+    def propose(self) -> PlanDelta | None:
+        """The rebalancer as a plan-delta producer: the chunk moves it
+        *would* apply right now, as a ``chunk_moves`` delta — or None
+        when on cooldown, nothing is slow, or no healthy target exists.
+        The caller (the autoscaler) applies the delta through
+        ``PBoxFabric.apply_plan_delta`` and reports back with
+        ``mark_applied()`` so the cooldown clock advances exactly as in
+        the self-applying loop."""
+        if self.fabric.step - self._last_rebalance_step < self.cooldown:
+            return None
+        slow, movable = self._slow_movable()
+        if not movable:
+            return None
+        return chunk_rebalance_delta(self.fabric.chunk_owner, slow,
+                                     self.fabric.num_shards)
+
+    def mark_applied(self) -> None:
+        """Start the cooldown window: a proposed delta was applied."""
+        self._last_rebalance_step = self.fabric.step
+
     def maybe_rebalance(self) -> list[int]:
         """Returns the shards drained this call ([] if none).
 
@@ -97,30 +140,9 @@ class ShardRebalancer:
         the healthy pool.)"""
         if self.fabric.step - self._last_rebalance_step < self.cooldown:
             return []
-        slow = self.monitor.stragglers()
-        movable = [s for s in slow
-                   if self.fabric.shards[s].num_chunks > 0]
+        slow, movable = self._slow_movable()
         if not movable:
             return []
         self.fabric.rebalance(slow)
         self._last_rebalance_step = self.fabric.step
         return movable
-
-
-def rebalance_chunks(chunk_owner: np.ndarray, slow_shards: list[int],
-                     n_shards: int) -> np.ndarray:
-    """Re-assign chunks owned by slow shards round-robin to healthy shards.
-    chunk_owner: (num_chunks,) int array.  Returns new assignment with the
-    balance invariant |count_i - count_j| <= 1 preserved among healthy
-    shards."""
-    healthy = [s for s in range(n_shards) if s not in slow_shards]
-    if not healthy:
-        return chunk_owner
-    out = chunk_owner.copy()
-    moved = np.where(np.isin(chunk_owner, slow_shards))[0]
-    counts = {h: int(np.sum(out == h)) for h in healthy}
-    for c in moved:
-        tgt = min(counts, key=counts.get)
-        out[c] = tgt
-        counts[tgt] += 1
-    return out

@@ -1,0 +1,353 @@
+"""Closed-loop autoscaler (runtime/autoscaler.py): telemetry-driven
+rescale/re-placement mid-run, numerics-neutral by construction.
+
+The headline invariant (ISSUE 7 acceptance): a training run with the
+autoscaler enabled — at least one shard-count change, one replica
+re-placement, and one frontend move mid-run — produces *bit-identical*
+final parameters to the same run without it, dense and sparse, across
+shard counts x rack counts x codecs.  The slow chaos case autoscales
+during an active ``FaultPlan`` (the CI chaos-soak tier).
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.chunking import TILE_ELEMS, ParamSpace
+from repro.core.compression import CompressionConfig
+from repro.core.fabric import PBoxFabric, WorkerHarness
+from repro.core.placement import PlacementPlan, PlanDelta, current_plan
+from repro.core.replication import FaultEvent, FaultPlan
+from repro.core.serving import ReadPlane, SparseReadPlane
+from repro.core.sparse import SparseTier
+from repro.core.topology import NetworkTopology
+from repro.optim.optimizers import momentum
+from repro.runtime.autoscaler import Autoscaler, AutoscalerPolicy, ScaleEvent
+from repro.runtime.straggler import ShardRebalancer
+
+K = 4
+V, D = 64, 8
+
+
+def quad_setup():
+    params = {"w": jnp.zeros((9000,)), "b": jnp.zeros((77,))}
+    targets = [
+        {"w": jnp.full((9000,), float(i + 1)), "b": jnp.arange(77.0) * (i + 1)}
+        for i in range(K)
+    ]
+
+    def grad_fn(p, batch):
+        t = targets[batch]
+        return jax.tree.map(lambda a, b: 2 * (a - b), p, t)
+
+    return params, grad_fn
+
+
+def build_stack(*, num_shards=2, num_racks=2, replication=2, codec="none",
+                num_frontends=2):
+    params, grad_fn = quad_setup()
+    space = ParamSpace.build(params, chunk_elems=TILE_ELEMS)
+    fab = PBoxFabric(
+        space, momentum(0.05, 0.9), space.flatten(params), num_workers=K,
+        num_shards=num_shards, replication=replication,
+        topology=NetworkTopology(num_workers=K, num_racks=num_racks),
+        compression=CompressionConfig(codec=codec),
+    )
+    h = WorkerHarness(fab, grad_fn, lambda w, s: w)
+    plane = ReadPlane(fab, num_frontends=num_frontends)
+    return fab, h, plane
+
+
+def perturb_plan(base, num_racks):
+    """A target plan that re-homes shard 0's whole chain and moves
+    frontend 0 — the two non-reshard placement levers."""
+    rr = np.asarray(base.replica_racks).copy()
+    rr[0] = (rr[0] + 1) % num_racks
+    fe = list(base.frontend_racks)
+    if fe:
+        fe[0] = (fe[0] + 1) % num_racks
+    return base.replace(replica_racks=rr, frontend_racks=tuple(fe),
+                        origin="solved")
+
+
+# ---------------------------------------------------------------------------
+# the headline closed-loop invariant (dense)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("codec", ["none", "int8"])
+@pytest.mark.parametrize("num_racks", [1, 2, 4])
+@pytest.mark.parametrize("num_shards,target", [(1, 2), (2, 8), (8, 2)])
+def test_autoscaled_dense_run_bit_identical(num_shards, target, num_racks,
+                                            codec):
+    """Mid-run: a replica re-placement + a frontend move (racks >= 2),
+    then a shard-count change — final params bit-identical to the
+    undisturbed twin."""
+    fab_a, h_a, _ = build_stack(num_shards=num_shards, num_racks=num_racks,
+                                codec=codec)
+    fab_b, h_b, plane_b = build_stack(num_shards=num_shards,
+                                      num_racks=num_racks, codec=codec)
+    auto = Autoscaler(fab_b, policy=AutoscalerPolicy(
+        min_shards=1, max_shards=8, cooldown_rounds=0,
+        solve_placement=False), planes=[plane_b])
+    h_a.run(2)
+    h_b.run(2)
+    events = auto.apply_plan(perturb_plan(
+        current_plan(fab_b, planes=[plane_b]), num_racks))
+    if num_racks > 1:
+        kinds = {e.kind for e in events}
+        assert "replica_racks" in kinds and "frontend_move" in kinds
+        assert fab_b.stats.replica_moves >= 1
+        assert plane_b.stats.frontend_moves >= 1
+    h_a.run(4)
+    h_b.run(4)
+    auto.apply_delta(PlanDelta(kind="shard_count", new_shards=target))
+    assert fab_b.num_shards == target
+    assert fab_b.stats.rescales == 1
+    h_a.run(6)
+    h_b.run(6)
+    np.testing.assert_array_equal(np.asarray(fab_a.params),
+                                  np.asarray(fab_b.params))
+    # serving still reads the exact trained bits through moved frontends
+    read = plane_b.read(0)
+    np.testing.assert_array_equal(np.asarray(read.flat),
+                                  np.asarray(fab_b.params))
+
+
+def test_closed_loop_scale_up_from_busy_telemetry():
+    """The loop itself (no manual deltas): a zero up-threshold makes
+    every decision tick double the engine count until max_shards, driven
+    purely by the event-clock busy signal — and bits never move."""
+    fab_a, h_a, _ = build_stack(num_shards=1, num_racks=2)
+    fab_b, h_b, _ = build_stack(num_shards=1, num_racks=2)
+    auto = Autoscaler(fab_b, policy=AutoscalerPolicy(
+        min_shards=1, max_shards=4, scale_up_busy_us=0.0,
+        scale_down_busy_us=0.0, cooldown_rounds=1, solve_placement=False))
+    for i in range(4):
+        h_a.run(i + 1)
+        h_b.run(i + 1)
+        auto.step()
+    assert fab_b.num_shards == 4
+    assert fab_b.stats.rescales == 2  # 1 -> 2 -> 4, then capped
+    assert [e.kind for e in auto.events] == ["reshard", "reshard"]
+    np.testing.assert_array_equal(np.asarray(fab_a.params),
+                                  np.asarray(fab_b.params))
+
+
+def test_closed_loop_scale_down_when_idle():
+    fab, h, _ = build_stack(num_shards=8, num_racks=2)
+    auto = Autoscaler(fab, policy=AutoscalerPolicy(
+        min_shards=2, max_shards=8, scale_up_busy_us=1e12,
+        scale_down_busy_us=1e12, cooldown_rounds=0, solve_placement=False))
+    h.run(1)
+    auto.step()
+    assert fab.num_shards == 4  # halved, not slammed to min
+    auto.step()
+    assert fab.num_shards == 2
+    auto.step()
+    assert fab.num_shards == 2  # floored at min_shards
+
+
+def test_straggler_proposals_ride_the_delta_path():
+    """ShardRebalancer.propose() -> Autoscaler -> apply_plan_delta drains
+    the slow shard exactly like the legacy self-applying loop."""
+    fab_a, h_a, _ = build_stack(num_shards=4, num_racks=2)
+    fab_b, h_b, _ = build_stack(num_shards=4, num_racks=2)
+    reb_a = ShardRebalancer(fab_a, cooldown=0)
+    reb_b = ShardRebalancer(fab_b, cooldown=0)
+    auto = Autoscaler(fab_b, rebalancer=reb_b,
+                      policy=AutoscalerPolicy(solve_placement=False))
+    h_a.run(2)
+    h_b.run(2)
+    for _ in range(25):
+        for reb in (reb_a, reb_b):
+            reb.record(0, 10.0)
+            for s in range(1, 4):
+                reb.record(s, 0.1)
+    legacy = reb_a.maybe_rebalance()  # the pre-refactor path
+    events = auto.step()  # the delta path
+    assert legacy == [0]
+    assert [e.kind for e in events] == ["chunk_moves"]
+    assert fab_b.shards[0].num_chunks == 0
+    np.testing.assert_array_equal(fab_a.chunk_owner, fab_b.chunk_owner)
+    assert np.asarray(reb_b.speeds()).shape == (4,)
+    # cooldown advanced on the delta path too
+    assert reb_b.propose() is None or reb_b.cooldown == 0
+    h_a.run(4)
+    h_b.run(4)
+    np.testing.assert_array_equal(np.asarray(fab_a.params),
+                                  np.asarray(fab_b.params))
+
+
+def test_resolve_placement_is_deterministic_and_neutral():
+    """A full re-solve applied mid-run: same seed => same events; bits
+    unchanged either way."""
+    runs = []
+    for _ in range(2):
+        fab, h, plane = build_stack(num_shards=4, num_racks=2)
+        auto = Autoscaler(fab, planes=[plane], seed=3)
+        h.run(2)
+        events = auto.resolve_placement()
+        h.run(4)
+        runs.append((events, np.asarray(fab.params)))
+    (ev_a, params_a), (ev_b, params_b) = runs
+    assert [(e.kind, e.detail) for e in ev_a] == \
+        [(e.kind, e.detail) for e in ev_b]
+    np.testing.assert_array_equal(params_a, params_b)
+    fab_plain, h_plain, _ = build_stack(num_shards=4, num_racks=2)
+    h_plain.run(4)
+    np.testing.assert_array_equal(np.asarray(fab_plain.params), params_a)
+
+
+def test_autoscaler_telemetry_snapshot():
+    fab, h, plane = build_stack(num_shards=2, num_racks=2)
+    reb = ShardRebalancer(fab)
+    auto = Autoscaler(fab, rebalancer=reb, planes=[plane])
+    h.run(3)
+    plane.read(0)
+    tele = auto.telemetry()
+    assert tele["round"] == 3 and tele["num_shards"] == 2
+    assert tele["busy_us_per_round"] > 0.0
+    assert tele["shard_speeds"].shape == (2,)
+    assert len(tele["serve_us"]) == 1
+    assert "events" not in tele  # flat signal dict only
+    assert "no events" in auto.describe()
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        AutoscalerPolicy(min_shards=4, max_shards=2)
+    with pytest.raises(ValueError):
+        AutoscalerPolicy(scale_up_busy_us=1.0, scale_down_busy_us=2.0)
+    with pytest.raises(ValueError):
+        AutoscalerPolicy(cooldown_rounds=-1)
+
+
+# ---------------------------------------------------------------------------
+# the headline closed-loop invariant (sparse)
+# ---------------------------------------------------------------------------
+def drive_sparse(tier, rounds, *, seed):
+    rng = np.random.default_rng(seed)
+    for _ in range(rounds):
+        for w in range(tier.num_workers):
+            ids = rng.integers(0, V, size=12)
+            g = rng.standard_normal((12, D)).astype(np.float32)
+            tier.push(w, {"t0": (ids, g)})
+
+
+@pytest.mark.parametrize("codec", ["none", "int8"])
+def test_autoscaled_sparse_run_bit_identical(codec):
+    """The sparse tier reshards with the dense fabric (co-residency) and
+    its table bits never move; the sparse read plane keeps serving exact
+    bits through a moved frontend."""
+    init = np.random.default_rng(7).standard_normal((V, D)).astype(np.float32)
+
+    def build():
+        fab, h, plane = build_stack(num_shards=2, num_racks=2, codec="none")
+        tier = SparseTier(fabric=fab, codec=codec, lr=0.1)
+        tier.add_table("t0", init)
+        splane = SparseReadPlane(tier, num_frontends=2)
+        return fab, h, plane, tier, splane
+
+    fab_a, h_a, _, tier_a, _ = build()
+    fab_b, h_b, plane_b, tier_b, splane_b = build()
+    auto = Autoscaler(fab_b, planes=[plane_b, splane_b],
+                      policy=AutoscalerPolicy(cooldown_rounds=0,
+                                              solve_placement=False))
+    h_a.run(2)
+    drive_sparse(tier_a, 2, seed=11)
+    h_b.run(2)
+    drive_sparse(tier_b, 2, seed=11)
+    events = auto.apply_plan(perturb_plan(
+        current_plan(fab_b, planes=[plane_b, splane_b]), 2))
+    assert any(e.kind == "frontend_move" for e in events)
+    auto.apply_delta(PlanDelta(kind="shard_count", new_shards=8))
+    assert fab_b.num_shards == 8 and tier_b.num_shards == 8
+    assert tier_b.stats.rescales == 1
+    h_a.run(4)
+    drive_sparse(tier_a, 2, seed=13)
+    h_b.run(4)
+    drive_sparse(tier_b, 2, seed=13)
+    np.testing.assert_array_equal(np.asarray(fab_a.params),
+                                  np.asarray(fab_b.params))
+    np.testing.assert_array_equal(np.asarray(tier_a.table("t0")),
+                                  np.asarray(tier_b.table("t0")))
+    np.testing.assert_array_equal(tier_a.row_versions("t0"),
+                                  tier_b.row_versions("t0"))
+    # sparse serving: exact bits through the rescaled tier
+    ids = np.arange(16)
+    res = splane_b.read_rows(0, "t0", ids)
+    np.testing.assert_array_equal(np.asarray(res.rows),
+                                  np.asarray(tier_b.table("t0"))[ids])
+
+
+def test_sparse_reshard_round_edge_and_failover():
+    fab, h, _ = build_stack(num_shards=2, num_racks=2)
+    tier = SparseTier(fabric=fab, replication=2)
+    init = np.random.default_rng(3).standard_normal((V, D)).astype(np.float32)
+    tier.add_table("t0", init)
+    drive_sparse(tier, 1, seed=5)
+    tier.push(0, {"t0": (np.arange(4), np.ones((4, D), np.float32))})
+    with pytest.raises(RuntimeError):
+        tier.reshard(4)  # mid-round: one worker staged
+    for w in range(1, tier.num_workers):
+        tier.push(w, {"t0": (np.arange(4), np.ones((4, D), np.float32))})
+    before = np.asarray(tier.table("t0")).copy()
+    tier.reshard(4)
+    np.testing.assert_array_equal(np.asarray(tier.table("t0")), before)
+    # chains were rebuilt at the new count and still fail over bit-exactly
+    assert len(tier._chains) == 4
+    tier.failover(1)
+    np.testing.assert_array_equal(np.asarray(tier.table("t0")), before)
+
+
+# ---------------------------------------------------------------------------
+# chaos: autoscaling during an active FaultPlan (CI chaos-soak tier)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_chaos_soak_autoscale_under_faults():
+    """Seeded soak: the autoscaler rescales and re-places while a
+    FaultPlan crashes shards and degrades links — every few rounds the
+    run must still match the failure-free, fixed-placement twin."""
+    seed = int(os.environ.get("CHAOS_SEED", "0"))
+    rounds = int(os.environ.get("CHAOS_ROUNDS", "24"))
+    params, grad_fn = quad_setup()
+    space = ParamSpace.build(params, chunk_elems=TILE_ELEMS)
+
+    def make(fault_plan=None):
+        fab = PBoxFabric(
+            space, momentum(0.05, 0.9), space.flatten(params),
+            num_workers=K, num_shards=2, replication=2,
+            topology=NetworkTopology(num_workers=K, num_racks=2),
+            fault_plan=fault_plan,
+        )
+        return fab, WorkerHarness(fab, grad_fn, lambda w, s: w)
+
+    fault_plan = FaultPlan(
+        [FaultEvent(3 + 4 * i, "shard_crash", i % 2)
+         for i in range(max(1, rounds // 8))])
+    fab_a, h_a = make()
+    fab_b, h_b = make(fault_plan)
+    rng = np.random.default_rng(seed)
+    auto = Autoscaler(fab_b, policy=AutoscalerPolicy(
+        min_shards=2, max_shards=8, cooldown_rounds=0,
+        solve_placement=False), seed=seed)
+    for r in range(rounds):
+        h_a.run(r + 1)
+        h_b.run(r + 1)
+        if r % 6 == 2:
+            auto.apply_delta(PlanDelta(
+                kind="shard_count",
+                new_shards=int(rng.choice([2, 4, 8]))))
+        if r % 6 == 4:
+            auto.apply_plan(perturb_plan(current_plan(fab_b), 2))
+        if r % 4 == 3:
+            np.testing.assert_array_equal(
+                np.asarray(fab_a.params), np.asarray(fab_b.params),
+                err_msg=f"seed={seed}: diverged at round {r + 1}")
+    np.testing.assert_array_equal(np.asarray(fab_a.params),
+                                  np.asarray(fab_b.params),
+                                  err_msg=f"seed={seed}: final divergence")
+    assert fab_b.stats.rescales >= 1
+    assert fab_b.stats.failovers >= 1
+    assert isinstance(auto.events[0], ScaleEvent)

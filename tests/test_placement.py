@@ -1,0 +1,356 @@
+"""Placement layer (core/placement.py): the declarative problem/plan/solver
+surface plus its integration with the fabric.
+
+Load-bearing properties:
+  * the default plan reproduces every pre-refactor heuristic byte-for-byte
+    (golden tests against the raw formulas);
+  * the solver is deterministic (same inputs + seed => same plan), its
+    output is feasible, and ties break to the lowest rack id;
+  * diff/apply round-trips: applying ``diff_plans(a, b)`` onto a fabric
+    running ``a`` lands it on ``b``;
+  * every plan-delta application is timing-only: training under a moved
+    chain / chunk set / rescaled engine count stays bit-identical.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.chunking import TILE_ELEMS, ParamSpace
+from repro.core.fabric import PBoxFabric, WorkerHarness
+from repro.core.placement import (
+    PlacementPlan,
+    PlacementProblem,
+    PlanDelta,
+    chunk_rebalance_delta,
+    current_plan,
+    diff_plans,
+    rebalance_chunks,
+)
+from repro.core.sparse import RowPlacement
+from repro.core.topology import NetworkTopology
+from repro.optim.optimizers import momentum, sgd
+
+K = 4
+
+
+def quad_setup():
+    params = {"w": jnp.zeros((9000,)), "b": jnp.zeros((77,))}
+    targets = [
+        {"w": jnp.full((9000,), float(i + 1)), "b": jnp.arange(77.0) * (i + 1)}
+        for i in range(K)
+    ]
+
+    def grad_fn(p, batch):
+        t = targets[batch]
+        return jax.tree.map(lambda a, b: 2 * (a - b), p, t)
+
+    return params, grad_fn
+
+
+def build_fabric(*, num_shards=2, num_racks=2, replication=1, steps=0,
+                 plan=None, spec=None):
+    params, grad_fn = quad_setup()
+    space = ParamSpace.build(params, chunk_elems=TILE_ELEMS)
+    fab = PBoxFabric(
+        space, spec or momentum(0.05, 0.9), space.flatten(params),
+        num_workers=K, num_shards=num_shards, replication=replication,
+        topology=NetworkTopology(num_workers=K, num_racks=num_racks),
+        plan=plan,
+    )
+    h = WorkerHarness(fab, grad_fn, lambda w, s: w)
+    if steps:
+        h.run(steps)
+    return fab, h, grad_fn
+
+
+# ---------------------------------------------------------------------------
+# golden: the default plan IS the pre-refactor stack
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("num_shards", [1, 2, 8])
+@pytest.mark.parametrize("num_racks", [1, 2, 4])
+@pytest.mark.parametrize("replication", [1, 2, 3])
+def test_default_plan_matches_heuristic_formulas(num_shards, num_racks,
+                                                 replication):
+    plan = PlacementPlan.default(num_shards, num_racks=num_racks,
+                                 replication=replication,
+                                 num_frontends=num_racks + 1)
+    # chains: replica r of shard s in (s + r) % racks (topology formula)
+    expect = np.array([[(s + r) % num_racks for r in range(replication)]
+                       for s in range(num_shards)], dtype=np.int64)
+    np.testing.assert_array_equal(plan.replica_racks, expect)
+    np.testing.assert_array_equal(plan.home_racks, expect[:, 0])
+    # frontends: f % racks (the old hard-coded round-robin)
+    assert plan.frontend_racks == tuple(
+        f % num_racks for f in range(num_racks + 1))
+
+
+@pytest.mark.parametrize("num_shards", [1, 3, 8])
+@pytest.mark.parametrize("num_racks", [1, 2, 4])
+def test_default_plan_matches_topology_replica_racks(num_shards, num_racks):
+    topo = NetworkTopology(num_workers=8, num_racks=num_racks)
+    plan = PlacementPlan.default(num_shards, num_racks=num_racks,
+                                 replication=2)
+    np.testing.assert_array_equal(
+        plan.replica_racks, topo.replica_racks(num_shards, 2))
+    # and a plan-backed topology returns the plan's (identical) answer
+    planned = topo.with_plan(plan)
+    np.testing.assert_array_equal(
+        planned.replica_racks(num_shards, 2),
+        topo.replica_racks(num_shards, 2))
+
+
+def test_planless_fabric_equals_default_plan_fabric():
+    """Building with plan=None and with the explicit default plan must be
+    the same fabric, bit for bit, racks and all."""
+    a, _, _ = build_fabric(num_shards=2, num_racks=2, replication=2, steps=3)
+    plan = PlacementPlan.default(2, num_racks=2, replication=2)
+    b, _, _ = build_fabric(num_shards=2, num_racks=2, replication=2, steps=3,
+                           plan=plan)
+    np.testing.assert_array_equal(np.asarray(a.params), np.asarray(b.params))
+    np.testing.assert_array_equal(a.chunk_owner, b.chunk_owner)
+    for ga, gb in zip(a.replicas, b.replicas):
+        assert ga.racks == gb.racks
+
+
+def test_plan_validation_rejects_mismatched_shapes():
+    plan = PlacementPlan.default(3, num_racks=2, replication=1)
+    with pytest.raises(ValueError):
+        build_fabric(num_shards=2, num_racks=2, plan=plan)
+    plan = PlacementPlan.default(2, num_racks=4, replication=1)
+    with pytest.raises(ValueError):
+        build_fabric(num_shards=2, num_racks=2, plan=plan)
+    with pytest.raises(ValueError):
+        PlacementPlan(num_shards=2, num_racks=2,
+                      replica_racks=np.array([[0], [5]]))
+    with pytest.raises(ValueError):
+        PlanDelta(kind="nonsense")
+
+
+def test_row_placement_plan_policy_golden():
+    """'plan' rows wrap an explicit owner array verbatim; the default
+    'hash' policy stays splitmix64 (golden: unchanged by the refactor)."""
+    owner = np.array([1, 0, 1, 2, 0, 2, 1, 0])
+    rp = RowPlacement.from_owner(owner, 3)
+    np.testing.assert_array_equal(rp.owner, owner)
+    assert rp.policy == "plan"
+    np.testing.assert_array_equal(rp.shard_rows[1], [0, 2, 6])
+    np.testing.assert_array_equal(rp.local_of(1, np.array([2, 6])), [1, 2])
+    with pytest.raises(ValueError):
+        RowPlacement.from_owner(np.array([0, 3]), 3)
+    with pytest.raises(ValueError):
+        RowPlacement(4, 2, "plan")  # no explicit owner array
+    hash_rp = RowPlacement(64, 4, "hash")
+    assert hash_rp.owner.min() >= 0 and hash_rp.owner.max() <= 3
+
+
+# ---------------------------------------------------------------------------
+# solver: determinism + feasibility
+# ---------------------------------------------------------------------------
+def test_solver_is_deterministic_and_feasible():
+    prob = PlacementProblem.standard(
+        num_shards=8, num_racks=4, replication=2, num_frontends=3,
+        chunks_per_shard=[5, 1, 1, 1, 5, 1, 1, 1],
+        row_load={"emb": np.arange(32.0) + 1.0})
+    a = prob.solve(seed=7)
+    b = prob.solve(seed=7)
+    np.testing.assert_array_equal(a.replica_racks, b.replica_racks)
+    assert a.frontend_racks == b.frontend_racks
+    np.testing.assert_array_equal(a.row_owner["emb"], b.row_owner["emb"])
+    score = prob.evaluate(a)
+    assert score.feasible
+    assert score.total <= prob.evaluate(prob.default_plan()).total
+
+
+def test_solver_never_worsens_the_default_plan():
+    for seed in (0, 1, 2):
+        prob = PlacementProblem.standard(
+            num_shards=4, num_racks=2, replication=2, num_frontends=2,
+            chunks_per_shard=[7, 1, 1, 1])
+        solved = prob.solve(seed=seed)
+        assert (prob.evaluate(solved).total
+                <= prob.evaluate(prob.default_plan()).total)
+
+
+def test_solved_row_map_balances_hot_rows():
+    """LPT rows: a Zipf-ish load lands with lower skew than the hash map."""
+    load = 1.0 / (np.arange(256) + 1.0)
+    prob = PlacementProblem.standard(num_shards=4, num_racks=1,
+                                     row_load={"emb": load})
+    solved = prob.solve(seed=0)
+    owner = solved.row_owner["emb"]
+    per_shard = np.array([load[owner == s].sum() for s in range(4)])
+    hash_owner = RowPlacement(256, 4, "hash").owner
+    hash_load = np.array([load[hash_owner == s].sum() for s in range(4)])
+    assert per_shard.max() <= hash_load.max()
+    # deterministic tie-break: lowest row ids first
+    assert int(owner[0]) == 0
+
+
+def test_tenant_shares_follow_demand():
+    prob = PlacementProblem.standard(
+        num_shards=2, num_racks=1,
+        tenant_demand={"big": 3.0, "small": 1.0})
+    solved = prob.solve(seed=0)
+    assert solved.tenant_shares == {"big": 3.0, "small": 1.0}
+
+
+# ---------------------------------------------------------------------------
+# diff / apply round-trips
+# ---------------------------------------------------------------------------
+def test_diff_plans_kinds_and_shard_count_subsumption():
+    a = PlacementPlan.default(2, num_racks=2, replication=2, num_frontends=2)
+    b = a.replace(replica_racks=np.array([[1, 0], [1, 0]]),
+                  frontend_racks=(1, 1), origin="solved")
+    deltas = diff_plans(a, b)
+    assert [d.kind for d in deltas] == ["replica_racks", "frontend_move"]
+    assert deltas[1].frontend == 0 and deltas[1].rack == 1  # fe 1 unchanged
+    grown = PlacementPlan.default(4, num_racks=2, replication=2)
+    deltas = diff_plans(a, grown)
+    assert [d.kind for d in deltas] == ["shard_count"]
+    assert deltas[0].new_shards == 4
+    with pytest.raises(ValueError):
+        diff_plans(a, PlacementPlan.default(2, num_racks=4, replication=2))
+    assert diff_plans(a, a) == ()
+
+
+def test_rebalance_chunks_golden_and_delta():
+    owner = np.array([0, 1, 2, 0, 1, 2])
+    out = rebalance_chunks(owner, [0], 3)
+    assert not np.any(out == 0)
+    counts = np.bincount(out, minlength=3)
+    assert counts.max() - counts[1:].min() <= 1
+    delta = chunk_rebalance_delta(owner, [0], 3)
+    assert delta.kind == "chunk_moves"
+    assert {c for c, _ in delta.moves} == {0, 3}
+    assert chunk_rebalance_delta(owner, [], 3) is None
+
+
+def test_apply_plan_delta_lands_the_target_layout():
+    fab, _, _ = build_fabric(num_shards=2, num_racks=2, replication=2,
+                             steps=2)
+    base = current_plan(fab)
+    target = base.replace(
+        replica_racks=np.array([[1, 0], [1, 0]]), origin="solved")
+    for delta in diff_plans(base, target):
+        fab.apply_plan_delta(delta)
+    live = current_plan(fab)
+    np.testing.assert_array_equal(live.replica_racks, target.replica_racks)
+    assert fab.stats.replica_moves > 0
+    # plan-backed topology sees the move too
+    np.testing.assert_array_equal(
+        fab.topology.replica_racks(2, 2), target.replica_racks)
+
+
+def test_fabric_rejects_foreign_delta_kinds():
+    fab, _, _ = build_fabric(num_shards=2, num_racks=2)
+    with pytest.raises(ValueError):
+        fab.apply_plan_delta(PlanDelta(kind="frontend_move", frontend=0,
+                                       rack=1))
+    with pytest.raises(ValueError):
+        fab.apply_plan_delta(PlanDelta(kind="tenant_shares",
+                                       shares=(("a", 1.0),)))
+
+
+# ---------------------------------------------------------------------------
+# timing-only invariants: placement never touches bits
+# ---------------------------------------------------------------------------
+def test_replica_move_is_timing_only():
+    """Re-homing a chain mid-run: params identical to the undisturbed
+    twin, only byte/time accounting differs."""
+    fab_a, h_a, _ = build_fabric(num_shards=2, num_racks=2, replication=2)
+    fab_b, h_b, _ = build_fabric(num_shards=2, num_racks=2, replication=2)
+    h_a.run(2)
+    h_b.run(2)
+    moved = fab_b.replace_chain_racks(0, (1, 0))
+    assert moved == 2
+    h_a.run(3)
+    h_b.run(3)
+    np.testing.assert_array_equal(np.asarray(fab_a.params),
+                                  np.asarray(fab_b.params))
+    assert fab_b.stats.bytes_resilver > fab_a.stats.bytes_resilver
+    # failover after the move still promotes byte-exact state
+    fab_b.crash_shard(0)
+    np.testing.assert_array_equal(np.asarray(fab_a.params),
+                                  np.asarray(fab_b.params))
+
+
+def test_chunk_move_delta_is_timing_only():
+    fab_a, h_a, _ = build_fabric(num_shards=2, num_racks=2)
+    fab_b, h_b, _ = build_fabric(num_shards=2, num_racks=2)
+    h_a.run(2)
+    h_b.run(2)
+    delta = chunk_rebalance_delta(fab_b.chunk_owner, [0], 2)
+    assert fab_b.apply_plan_delta(delta) == len(delta.moves)
+    assert fab_b.shards[0].num_chunks == 0
+    h_a.run(3)
+    h_b.run(3)
+    np.testing.assert_array_equal(np.asarray(fab_a.params),
+                                  np.asarray(fab_b.params))
+
+
+@pytest.mark.parametrize("grow,shrink", [(1, 2), (2, 1), (2, 8), (8, 2)])
+def test_reshard_is_bit_identical(grow, shrink):
+    """In-place reshard mid-run: the same chunk space over a different
+    engine count — params and optimizer state never move a bit."""
+    fab_a, h_a, _ = build_fabric(num_shards=grow, num_racks=2, replication=2)
+    fab_b, h_b, _ = build_fabric(num_shards=grow, num_racks=2, replication=2)
+    h_a.run(2)
+    h_b.run(2)
+    fab_b.reshard(shrink)
+    assert fab_b.num_shards == shrink
+    assert fab_b.stats.rescales == 1
+    assert len(fab_b.replicas) == shrink
+    h_a.run(3)
+    h_b.run(3)
+    np.testing.assert_array_equal(np.asarray(fab_a.params),
+                                  np.asarray(fab_b.params))
+    # pulls still serve every worker identically after the rescale
+    np.testing.assert_array_equal(np.asarray(fab_a.pull(0)),
+                                  np.asarray(fab_b.pull(0)))
+
+
+def test_reshard_requires_round_edge():
+    fab, h, grad_fn = build_fabric(num_shards=2, num_racks=2)
+    h.run(1)
+    space = fab.space
+    g = space.flatten(grad_fn(space.unflatten(fab.pull(0)), 0))
+    fab.push(0, g)
+    with pytest.raises(RuntimeError):
+        fab.reshard(4)
+
+
+def test_current_plan_reflects_live_layout():
+    fab, h, _ = build_fabric(num_shards=2, num_racks=2, replication=2,
+                             steps=1)
+    live = current_plan(fab)
+    assert live.origin == "live"
+    np.testing.assert_array_equal(live.chunk_owner, fab.chunk_owner)
+    fab.replace_chain_racks(1, (0, 1))
+    live2 = current_plan(fab)
+    assert tuple(live2.replica_racks[1]) == (0, 1)
+
+
+def test_rebalance_chunks_all_shards_slow_is_a_no_op():
+    """No healthy target left: the assignment comes back unchanged and
+    the delta form is None (nowhere to move to is not an error)."""
+    owner = np.array([0, 1, 0, 1, 2])
+    np.testing.assert_array_equal(rebalance_chunks(owner, [0, 1, 2], 3),
+                                  owner)
+    assert chunk_rebalance_delta(owner, [0, 1, 2], 3) is None
+    fab, h, _ = build_fabric(num_shards=2, steps=1)
+    before = fab.chunk_owner.copy()
+    assert fab.rebalance([0, 1]) == 0
+    np.testing.assert_array_equal(fab.chunk_owner, before)
+
+
+def test_rebalance_chunks_single_shard_fabric_is_a_no_op():
+    one = np.zeros(4, dtype=np.int64)
+    np.testing.assert_array_equal(rebalance_chunks(one, [0], 1), one)
+    assert chunk_rebalance_delta(one, [0], 1) is None
+    fab, h, _ = build_fabric(num_shards=1, steps=1)
+    params = np.asarray(fab.params).copy()
+    assert fab.rebalance([0]) == 0
+    assert fab.shards[0].num_chunks == fab.space.num_chunks
+    h.run(2)  # still trains normally afterwards
+    assert not np.array_equal(np.asarray(fab.params), params)

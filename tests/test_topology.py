@@ -620,3 +620,24 @@ def test_trainer_telemetry_topology_tier():
     with pytest.raises(ValueError):
         attach_telemetry(lambda *a: "out", ex, space, mesh, stats,
                          topology=NetworkTopology(num_workers=8, num_racks=2))
+
+
+def test_nearest_rack_tie_breaks_to_lowest_id():
+    """PINNED tie-break: among equally cheap candidate racks the lowest
+    rack id wins.  Load-bearing for the read plane's replica pick, the
+    solver's serve-rack pricing, and the autoscaler's routing — see the
+    ``NetworkTopology.nearest_rack`` docstring before touching this."""
+    topo = NetworkTopology(num_workers=8, num_racks=4)
+    # a local candidate is strictly cheapest, regardless of listed order
+    assert topo.nearest_rack([3, 1, 2], to_rack=2) == 2
+    # all-remote: every candidate costs one oversubscribed hop -> lowest id
+    assert topo.nearest_rack([3, 1], to_rack=0) == 1
+    assert topo.nearest_rack([1, 3], to_rack=0) == 1
+    assert topo.nearest_rack([3, 2, 1], to_rack=0) == 1
+    # single candidate, and the full tie (every remote rack offered)
+    assert topo.nearest_rack([3], to_rack=0) == 3
+    assert topo.nearest_rack([1, 2, 3], to_rack=0) == 1
+    with pytest.raises(ValueError):
+        topo.nearest_rack([], to_rack=0)
+    with pytest.raises(ValueError):
+        topo.nearest_rack([4], to_rack=0)
