@@ -1,10 +1,21 @@
 """§2 'vectorized aggregator and optimizer': kernel microbenchmarks.
 
-Fused aggregate+optimize (the PHub hot loop) vs the unfused reference, and
-the chunk-codec kernels.  On CPU these run in Pallas interpret mode, so the
-derived column also reports bytes touched per call (the locality argument —
-fused reads each buffer once) rather than claiming TPU wall-clock."""
+Fused aggregate+optimize (the PHub hot loop) vs the unfused reference, the
+chunk-codec kernels, and the fused wire path (kernels/wire_path) vs its
+unfused three-program baseline.  On CPU these run in Pallas interpret
+mode, so wall-clock rows carry ``wallclock=1`` and stay outside the
+regression gate; what IS gated are the ``wire_model`` rows — exact
+bytes-touched accounting per codec x chunk size converted to µs at a
+nominal HBM bandwidth, deterministic across hosts.
+
+The wire rows also assert the fused path's contract inline: every fused
+update is compared bitwise against the unfused pipeline before its row is
+emitted, so a parity break fails the bench module (and with it the gate),
+not just the test suite.
+"""
 from __future__ import annotations
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -12,7 +23,85 @@ import jax.numpy as jnp
 from benchmarks.common import emit, time_call
 from repro.kernels.fused_agg_opt.ops import fused_aggregate_update
 from repro.kernels.quant.ops import dequantize_chunks, quantize_chunks
+from repro.kernels.wire_path.ops import (
+    fused_wire_update,
+    unfused_wire_update,
+    wire_path_supported,
+)
 from repro.optim.optimizers import adamw, init_opt_state, momentum
+
+# nominal HBM bandwidth for the modeled rows: bytes touched / 100 GB/s.
+# The absolute number is arbitrary (it is a unit conversion, not a claim
+# about any host); only its determinism matters to the gate.
+_NOMINAL_GBPS = 100.0
+
+
+def _model_us(nbytes: float) -> float:
+    return nbytes / (_NOMINAL_GBPS * 1e9) * 1e6
+
+
+def _wire_streams(codec: str, k: int, n: int, chunk: int):
+    rng = np.random.default_rng(0)
+    g = rng.standard_normal((k, n)).astype(np.float32)
+    if codec == "bf16":
+        return jnp.asarray(g).astype(jnp.bfloat16), None
+    c = n // chunk
+    gr = g.reshape(k, c, chunk)
+    s = np.abs(gr).max(axis=2) / 127.0
+    q = np.clip(np.rint(gr / s[:, :, None]), -127, 127).astype(np.int8)
+    return jnp.asarray(q.reshape(k, n)), jnp.asarray(s.astype(np.float32))
+
+
+def _wire_rows() -> None:
+    k = 8
+    spec = momentum(0.1, 0.9)
+    for codec in ("bf16", "int8"):
+        for chunk in (4096, 8192):
+            assert wire_path_supported(codec, spec, chunk)
+            n = 8 * chunk
+            payload, scales = _wire_streams(codec, k, n, chunk)
+            rng = np.random.default_rng(1)
+            p = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+            st = tuple(
+                jnp.asarray(rng.standard_normal(n).astype(np.float32) * 0.1)
+                for _ in range(spec.num_state_slots)
+            )
+            step = jnp.int32(3)
+            kw = dict(codec=codec, chunk_elems=chunk)
+            fp, fs = fused_wire_update(payload, scales, p, st, spec, step, **kw)
+            up, us_ = unfused_wire_update(payload, scales, p, st, spec, step,
+                                          **kw)
+            bad = int((np.asarray(fp) != np.asarray(up)).sum()) + sum(
+                int((np.asarray(a) != np.asarray(b)).sum())
+                for a, b in zip(fs, us_)
+            )
+            if bad:
+                raise AssertionError(
+                    f"wire-path parity break ({codec}, chunk={chunk}): "
+                    f"{bad} elements differ between fused and unfused")
+            # exact bytes-touched model (the locality argument): both paths
+            # read the wire payload and read+write param/state once; the
+            # unfused pipeline additionally writes the decoded f32 gradients
+            # to HBM and reads them back for the aggregate program
+            wb = 2 * n * k if codec == "bf16" else (n + 4 * (n // chunk)) * k
+            slots = 1 + spec.num_state_slots
+            fused_b = wb + 2 * 4 * n * slots
+            unfused_b = fused_b + 2 * 4 * n * k
+            emit(
+                f"kernel/wire_model_{codec}_chunk={chunk}",
+                _model_us(fused_b),
+                f"unfused_us={_model_us(unfused_b):.3f};"
+                f"fused_bytes={fused_b};unfused_bytes={unfused_b};"
+                f"traffic_ratio={unfused_b / fused_b:.3f};parity_diffs={bad}",
+            )
+            us_f = time_call(
+                lambda: fused_wire_update(payload, scales, p, st, spec, step,
+                                          **kw), iters=3)
+            us_u = time_call(
+                lambda: unfused_wire_update(payload, scales, p, st, spec,
+                                            step, **kw), iters=3)
+            emit(f"kernel/wire_wall_{codec}_chunk={chunk}", us_f,
+                 f"unfused_us={us_u:.1f};wallclock=1")
 
 
 def run() -> None:
@@ -31,12 +120,14 @@ def run() -> None:
                                                use_pallas=False), iters=3)
             touched = (k + 1 + spec.num_state_slots * 2 + 1) * n * 4
             emit(f"kernel/fused_agg_{spec.name}_k={k}", us_f,
-                 f"ref_us={us_r:.1f};bytes_per_call={touched}")
+                 f"ref_us={us_r:.1f};bytes_per_call={touched};wallclock=1")
     x = jax.random.normal(jax.random.PRNGKey(2), (n,)) * 4
     us_q = time_call(lambda: quantize_chunks(x, 8192), iters=3)
     q, s = quantize_chunks(x, 8192)
     us_d = time_call(lambda: dequantize_chunks(q, s, 8192), iters=3)
-    emit("kernel/quant_int8", us_q, f"dequant_us={us_d:.1f};ratio=3.97x")
+    emit("kernel/quant_int8", us_q,
+         f"dequant_us={us_d:.1f};ratio=3.97x;wallclock=1")
+    _wire_rows()
 
 
 if __name__ == "__main__":

@@ -2,11 +2,12 @@
 """Benchmark-regression gate: compare a ``benchmarks.run --json`` output
 against the committed baseline (BENCH_baseline.json).
 
-The gated benches (topo, multijob, replication, serve_load) report
-*simulated* event-clock numbers and exact codec byte accounting —
-deterministic across hosts — so the gate can be tight without flaking on
-shared CI runners.  Wall-clock benches can join the baseline later with a
-wider ``--tolerance``.
+The gated benches (topo, multijob, replication, serve_load, sparse_serve,
+placement, kernel) report *simulated* event-clock numbers and exact codec
+byte accounting — deterministic across hosts — so the gate can be tight
+without flaking on shared CI runners.  Individual rows tagged
+``wallclock=1`` in their derived column (the kernel bench's measured-time
+rows) are carried in baselines for reference but skipped by the gate.
 
 Rules, per baseline row:
   * the row must still exist in the current run (a silently vanished bench
@@ -62,7 +63,15 @@ PER_BENCH_TOLERANCE = {
     "replication": 0.05,
     "serve_load": 0.05,  # p99 read latency is pure event-clock time
     "sparse_serve": 0.05,  # hot-row p99 is pure event-clock time too
+    "kernel": 0.05,  # wire_model rows are exact bytes-touched accounting
 }
+
+
+def _is_wallclock(row: dict) -> bool:
+    """Rows tagged ``wallclock=1`` in their derived column measure host
+    wall time — they ride along in bench output and baselines for eyeballs
+    but are never gated (shared CI runners make them pure noise)."""
+    return row.get("derived", {}).get("wallclock") == 1
 
 
 def load(path: str) -> dict:
@@ -173,7 +182,11 @@ def main() -> int:
     failures: list[str] = []
     notes: list[str] = []
     table: list[tuple] = []  # (name, base_us, cur_us, band, verdict)
+    gated = 0
     for name, b in sorted(base.items()):
+        if _is_wallclock(b):
+            continue
+        gated += 1
         c = cur.get(name)
         tol = bench_tol.get(b["bench"], args.tolerance)
         if c is None:
@@ -223,7 +236,8 @@ def main() -> int:
         if len(failures) > fails_before and verdict.startswith(("✅", "⚡")):
             verdict = "❌ derived drift"
         table.append((name, b_us, c_us, tol, verdict))
-    new = sorted(set(cur) - set(base))
+    new = sorted(name for name in set(cur) - set(base)
+                 if not _is_wallclock(cur[name]))
     if new:
         notes.append(f"{len(new)} row(s) not in baseline (not gated): "
                      + ", ".join(new[:5]) + ("..." if len(new) > 5 else ""))
@@ -241,8 +255,9 @@ def main() -> int:
         print(f"bench-gate: {len(failures)} regression(s) vs {args.baseline}",
               file=sys.stderr)
         return 1
-    print(f"bench-gate: {len(base)} row(s) within tolerance "
-          f"(us {args.tolerance:g}, derived {args.derived_tolerance:g})")
+    print(f"bench-gate: {gated} gated row(s) within tolerance "
+          f"(us {args.tolerance:g}, derived {args.derived_tolerance:g}; "
+          f"{len(base) - gated} wallclock row(s) skipped)")
     return 0
 
 

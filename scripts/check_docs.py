@@ -1,0 +1,136 @@
+#!/usr/bin/env python
+"""Docs link gate: every intra-repo markdown link and anchor must resolve.
+
+Scans ``README.md`` and ``docs/*.md`` for inline links.  For each:
+
+  * external links (``http(s)://``, ``mailto:``) are skipped — this gate
+    runs offline, network reachability is not its business;
+  * relative file links must point at an existing file or directory
+    (resolved against the containing document, checked inside the repo);
+  * ``#anchor`` fragments — bare or on a ``.md`` target — must match a
+    heading in the target document under GitHub's slug rules (lowercase,
+    punctuation stripped, spaces to hyphens, duplicates suffixed ``-1``,
+    ``-2``, ...).
+
+Stdlib only; exits 1 listing every dead link, 0 when all resolve.
+Usage: ``python scripts/check_docs.py [root]`` (default: repo root).
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# inline links: [text](target), tolerating titles: [t](x "title").  Image
+# links (![alt](src)) are excluded — badges point at GitHub-generated
+# assets (../../actions/...) that never exist in the checkout.
+_LINK = re.compile(r"(!?)\[[^\]^\[]*\]\(\s*<?([^)\s>]+)>?(?:\s+\"[^\"]*\")?\s*\)")
+_CODE_FENCE = re.compile(r"^(```|~~~)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*?)\s*#*\s*$")
+_EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug for a heading (ASCII subset of the rules)."""
+    # inline code/emphasis markers and links render before slugging
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", heading)
+    text = text.replace("`", "").replace("*", "").strip()
+    text = text.lower()
+    text = re.sub(r"[^\w\- ]", "", text, flags=re.UNICODE)
+    return text.replace(" ", "-")
+
+
+def doc_anchors(path: Path) -> set[str]:
+    """All heading anchors a markdown file exposes, duplicate-suffixed."""
+    seen: dict[str, int] = {}
+    anchors: set[str] = set()
+    in_fence = False
+    for line in path.read_text(encoding="utf-8").splitlines():
+        if _CODE_FENCE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = _HEADING.match(line)
+        if not m:
+            continue
+        slug = github_slug(m.group(1))
+        n = seen.get(slug, 0)
+        seen[slug] = n + 1
+        anchors.add(slug if n == 0 else f"{slug}-{n}")
+    return anchors
+
+
+def iter_links(path: Path):
+    """Yield (line_number, target) for every inline link outside fences."""
+    in_fence = False
+    for i, line in enumerate(path.read_text(encoding="utf-8").splitlines(), 1):
+        if _CODE_FENCE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in _LINK.finditer(line):
+            if not m.group(1):
+                yield i, m.group(2)
+
+
+def check(root: Path) -> list[str]:
+    docs = sorted([root / "README.md", *(root / "docs").glob("*.md")])
+    errors: list[str] = []
+    anchor_cache: dict[Path, set[str]] = {}
+
+    def anchors_of(p: Path) -> set[str]:
+        if p not in anchor_cache:
+            anchor_cache[p] = doc_anchors(p)
+        return anchor_cache[p]
+
+    for doc in docs:
+        if not doc.exists():
+            errors.append(f"{doc.relative_to(root)}: listed doc is missing")
+            continue
+        for line, target in iter_links(doc):
+            if target.startswith(_EXTERNAL):
+                continue
+            where = f"{doc.relative_to(root)}:{line}"
+            frag = None
+            if "#" in target:
+                target, frag = target.split("#", 1)
+            dest = doc if not target else (doc.parent / target).resolve()
+            if not dest.exists():
+                errors.append(f"{where}: dead link -> {target or '#' + frag}")
+                continue
+            if not target:
+                pass  # same-document fragment
+            elif root.resolve() not in dest.parents and dest != root.resolve():
+                errors.append(f"{where}: link escapes the repo -> {target}")
+                continue
+            if frag is not None:
+                if dest.is_dir() or dest.suffix.lower() != ".md":
+                    errors.append(
+                        f"{where}: fragment on a non-markdown target -> "
+                        f"{target}#{frag}")
+                elif frag.lower() not in anchors_of(dest):
+                    errors.append(
+                        f"{where}: missing anchor -> "
+                        f"{target or doc.name}#{frag}")
+    return errors
+
+
+def main() -> int:
+    root = Path(sys.argv[1]) if len(sys.argv) > 1 else (
+        Path(__file__).resolve().parent.parent)
+    errors = check(root)
+    for e in errors:
+        print(f"docs-check FAIL: {e}", file=sys.stderr)
+    if errors:
+        print(f"docs-check: {len(errors)} dead link(s)", file=sys.stderr)
+        return 1
+    n_docs = len([p for p in [root / 'README.md',
+                              *(root / 'docs').glob('*.md')] if p.exists()])
+    print(f"docs-check: all intra-repo links resolve across {n_docs} file(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

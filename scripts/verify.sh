@@ -19,10 +19,15 @@ python -m pytest -x -q "$@"
 # version-stamped read bit-identity + staleness bound +
 # serve-never-perturbs-training; hot-row exact invalidation + sparse
 # sharding independence + exact row wire accounting; default-vs-solved
-# plan bit-identity + closed-loop autoscale bit-identity) are asserted
-# inside and fail the run if violated
+# plan bit-identity + closed-loop autoscale bit-identity; fused wire-path
+# bit-parity vs the unfused three-program pipeline) are asserted inside
+# and fail the run if violated
 python -m benchmarks.run \
-    --only topo,multijob,replication,serve_load,sparse_serve,placement >/dev/null
+    --only topo,multijob,replication,serve_load,sparse_serve,placement,kernel >/dev/null
+
+# docs are part of tier-1: intra-repo links/anchors in README + docs/
+# must resolve (stdlib-only checker, no network)
+python scripts/check_docs.py
 
 # serve smoke: batched generation through a live-fabric read plane (the
 # driver bit-verifies every read against the fabric before generating)

@@ -84,6 +84,8 @@ import numpy as np
 from repro.core.chunking import ParamSpace
 from repro.core.compression import (
     CompressionConfig,
+    WirePayload,
+    encode_wire,
     init_ef_state,
     roundtrip,
     wire_bytes,
@@ -97,6 +99,7 @@ from repro.core.replication import FaultPlan, ReplicaGroup, ShardLost
 from repro.core.topology import NetworkTopology, RackAggregator
 from repro.kernels.fused_agg_opt.kernel import LANES, SUBLANES
 from repro.kernels.fused_agg_opt.ops import fused_aggregate_update
+from repro.kernels.wire_path.ops import fused_wire_update, wire_path_supported
 from repro.optim.optimizers import OptimizerSpec, init_opt_state
 
 # The fused kernel processes slabs in whole (8 sublane) * 8-row register
@@ -132,6 +135,9 @@ class ServerStats:
     bytes_rack_link: int = 0  # worker -> ToR, full bisection
     bytes_core_link: int = 0  # streams crossing the oversubscribed core
     rack_streams: int = 0  # aggregated upstream streams shipped
+    # fused wire path (kernels/wire_path): rounds whose shard updates
+    # consumed wire payloads directly in the single-pass kernel
+    fused_wire_rounds: int = 0
     # event-ordered simulator clock (µs of simulated time, cumulative)
     sim_wire_us: float = 0.0
     sim_core_wire_us: float = 0.0  # oversubscribed core stage (topology)
@@ -258,6 +264,42 @@ class PBoxShard:
         self.state = tuple(s[:n].reshape(shape) for s in new_s)
         self.stats.agg_events += 1
 
+    def apply_wire(
+        self,
+        payload: jax.Array,  # (K, n_owned, chunk_elems) wire dtype
+        scales: jax.Array | None,  # (K, n_owned) f32 (int8 codec), else None
+        codec: str,
+        step: int,
+        *,
+        average: bool,
+    ) -> None:
+        """``apply``, wire-form: the K streams arrive still encoded and the
+        single-pass kernel (kernels/wire_path) dequantizes, folds and
+        applies the optimizer without materializing decoded f32 gradients.
+        Shard slabs are whole chunks, so no padding is ever needed (the
+        kernel blocks on chunk boundaries); bit-parity with decode-then-
+        ``apply`` is the kernel's invariant (tests/test_wire_path.py)."""
+        if self.num_chunks == 0:
+            return
+        k = payload.shape[0]
+        n = self.num_elems
+        new_p, new_s = fused_wire_update(
+            payload.reshape(k, n),
+            None if scales is None else scales.reshape(k, self.num_chunks),
+            self.params.reshape(n),
+            tuple(s.reshape(n) for s in self.state),
+            self.spec,
+            jnp.int32(step),
+            codec=codec,
+            chunk_elems=self.space.chunk_elems,
+            average=average,
+            interpret=True,
+        )
+        shape = (self.num_chunks, self.space.chunk_elems)
+        self.params = new_p.reshape(shape)
+        self.state = tuple(s.reshape(shape) for s in new_s)
+        self.stats.agg_events += 1
+
     # -- chunk migration (rebalancing) ---------------------------------
     def release(self, chunk_ids: np.ndarray) -> tuple[jax.Array, tuple]:
         """Give up ownership of ``chunk_ids``; returns their (params, state)
@@ -339,6 +381,7 @@ class PBoxFabric:
         num_workers: int = 1,
         min_push_fraction: float = 1.0,
         use_pallas: bool = True,
+        fused_wire_path: bool = True,
         link: LinkModel | None = None,
         placement: str = "contiguous",  # | "round_robin"
         topology: NetworkTopology | None = None,
@@ -411,6 +454,22 @@ class PBoxFabric:
         self.compression = dataclasses.replace(
             compression or CompressionConfig(codec="none"),
             chunk_elems=space.chunk_elems,
+        )
+        # fused wire path (kernels/wire_path): ship codec'd pushes to the
+        # shards still encoded and let the single-pass kernel decode +
+        # aggregate + optimize in VMEM.  The knob is advisory — the
+        # effective flag also requires the Pallas tier and a codec x
+        # optimizer x chunk-geometry combination the kernel supports
+        # (wire_path_supported); anything else falls back to the unfused
+        # decode-then-apply pipeline.  Codec "none" always takes the
+        # legacy path: a raw f32 stream has no decode stage to fuse (it
+        # already runs single-pass through kernels/fused_agg_opt).
+        self.fused_wire_path = bool(fused_wire_path)
+        self._fused_wire = (
+            self.fused_wire_path
+            and use_pallas
+            and wire_path_supported(self.compression.codec, spec,
+                                    space.chunk_elems)
         )
         self.rack_aggs: list[RackAggregator] = []
         if topology is not None:
@@ -683,30 +742,59 @@ class PBoxFabric:
                 shard.stats.chunk_pushes += shard.num_chunks
                 shard.stats.bytes_pushed += wire_bytes(self.compression,
                                                        shard.num_elems)
+        # Wire crossing to the PS.  With the fused wire path on and no
+        # aggregating ToR in between, the worker's stream stays *encoded*
+        # (WirePayload) all the way to the shards — the single-pass kernel
+        # decodes it in VMEM.  With ToR aggregation the switch must decode
+        # to combine, so the edge hop keeps the legacy round-trip and the
+        # wire-direct hop moves to the rack uplink (_rack_aggregate).
+        wire: WirePayload | None = None
         if self.topology is not None:
             rack = self.rack_aggs[self.topology.rack_of[worker]]
-            dec = rack.ingest(worker, gchunks.reshape(-1))
-            gchunks = dec.reshape(self.space.num_chunks,
-                                  self.space.chunk_elems)
+            if self._fused_wire and not self._rack_agg_on():
+                wire = rack.ingest_wire(worker, gchunks.reshape(-1))
+            else:
+                dec = rack.ingest(worker, gchunks.reshape(-1))
+                gchunks = dec.reshape(self.space.num_chunks,
+                                      self.space.chunk_elems)
         elif self.compression.codec != "none":
-            dec, self._worker_ef[worker] = roundtrip(
-                self.compression, gchunks.reshape(-1),
-                self._worker_ef[worker])
-            gchunks = dec.reshape(self.space.num_chunks,
-                                  self.space.chunk_elems)
+            if self._fused_wire:
+                wire, self._worker_ef[worker] = encode_wire(
+                    self.compression, gchunks.reshape(-1),
+                    self._worker_ef[worker])
+            else:
+                dec, self._worker_ef[worker] = roundtrip(
+                    self.compression, gchunks.reshape(-1),
+                    self._worker_ef[worker])
+                gchunks = dec.reshape(self.space.num_chunks,
+                                      self.space.chunk_elems)
         if self.mode == "async":
             self.step += 1
-            for shard in self.shards:
-                if shard.num_chunks:
-                    shard.apply(gchunks[jnp.asarray(shard.chunk_ids)][None],
-                                self.step, average=False)
+            if wire is not None:
+                pay = wire.payload.reshape(self.space.num_chunks,
+                                           self.space.chunk_elems)
+                for shard in self.shards:
+                    if shard.num_chunks:
+                        ids = jnp.asarray(shard.chunk_ids)
+                        shard.apply_wire(
+                            pay[ids][None],
+                            None if wire.scale is None
+                            else wire.scale[ids][None],
+                            wire.codec, self.step, average=False)
+                self.stats.fused_wire_rounds += 1
+            else:
+                for shard in self.shards:
+                    if shard.num_chunks:
+                        shard.apply(
+                            gchunks[jnp.asarray(shard.chunk_ids)][None],
+                            self.step, average=False)
             self.stats.steps += 1
             self._simulate_round(streams=1 if self.topology else None)
             self._flat_cache = None
             self._replicate_round()
             self._fire_faults()
             return
-        self._inbox[worker] = gchunks
+        self._inbox[worker] = gchunks if wire is None else wire
         if len(self._inbox) >= self.min_pushes and self._barrier_met():
             self._aggregate()
 
@@ -734,12 +822,29 @@ class PBoxFabric:
         else:
             if self.topology is not None:
                 streams = len(workers)  # every worker stream crosses the core
-            for shard in self.shards:
-                if not shard.num_chunks:
-                    continue
-                ids = jnp.asarray(shard.chunk_ids)
-                grads = jnp.stack([self._inbox[w][ids] for w in workers])
-                shard.apply(grads, self.step, average=True)
+            if self._fused_wire:
+                # inbox holds WirePayloads: stack the encoded streams per
+                # shard and let the single-pass kernel decode in VMEM
+                codec = self.compression.codec
+                shape = (self.space.num_chunks, self.space.chunk_elems)
+                pays = [self._inbox[w] for w in workers]
+                for shard in self.shards:
+                    if not shard.num_chunks:
+                        continue
+                    ids = jnp.asarray(shard.chunk_ids)
+                    pay = jnp.stack(
+                        [wp.payload.reshape(shape)[ids] for wp in pays])
+                    sc = (jnp.stack([wp.scale[ids] for wp in pays])
+                          if codec == "int8" else None)
+                    shard.apply_wire(pay, sc, codec, self.step, average=True)
+                self.stats.fused_wire_rounds += 1
+            else:
+                for shard in self.shards:
+                    if not shard.num_chunks:
+                        continue
+                    ids = jnp.asarray(shard.chunk_ids)
+                    grads = jnp.stack([self._inbox[w][ids] for w in workers])
+                    shard.apply(grads, self.step, average=True)
         self._inbox.clear()
         self.stats.steps += 1
         self._drops_since_step = 0
@@ -770,6 +875,7 @@ class PBoxFabric:
         bit-equality structural rather than incidental).  The averaging
         divisor is the worker count either way."""
         streams: list[jax.Array] = []
+        wire_streams: list[WirePayload] = []
         shipped = 0
         present = set(workers)
         carry = None  # codec "none": running prefix chained through racks
@@ -788,8 +894,14 @@ class PBoxFabric:
                 for w in members:
                     g = self._inbox[w]
                     local = g if local is None else local + g
-                streams.append(
-                    rack.uplink(local.reshape(-1)).reshape(local.shape))
+                if self._fused_wire:
+                    # fused wire path: the re-encoded rack stream crosses
+                    # the core *still encoded*; the shards' single-pass
+                    # kernel decodes it in VMEM (same switch EF + bytes)
+                    wire_streams.append(rack.uplink_wire(local.reshape(-1)))
+                else:
+                    streams.append(
+                        rack.uplink(local.reshape(-1)).reshape(local.shape))
             shipped += 1
             self.stats.bytes_core_link += wire_bytes(self.compression,
                                                      self.space.flat_elems)
@@ -799,6 +911,32 @@ class PBoxFabric:
                 shard.stats.chunk_pushes += shard.num_chunks
                 shard.stats.bytes_pushed += wire_bytes(self.compression,
                                                        shard.num_elems)
+        if wire_streams:
+            # zero rows stand in for the worker streams the ToRs absorbed,
+            # exactly like the unfused branch below — a zero payload
+            # decodes to exact 0.0 (int8: q=0 times any scale; bf16: zero
+            # bits widen to +0.0f), so the fold adds the same zeros in the
+            # same positions
+            codec = self.compression.codec
+            shape = (self.space.num_chunks, self.space.chunk_elems)
+            n_zero = len(workers) - len(wire_streams)
+            pay_rows = [wp.payload.reshape(shape) for wp in wire_streams]
+            pay_rows += [jnp.zeros(shape, pay_rows[0].dtype)] * n_zero
+            scale_rows = None
+            if codec == "int8":
+                scale_rows = [wp.scale for wp in wire_streams]
+                scale_rows += [jnp.ones((self.space.num_chunks,),
+                                        jnp.float32)] * n_zero
+            for shard in self.shards:
+                if not shard.num_chunks:
+                    continue
+                ids = jnp.asarray(shard.chunk_ids)
+                pay = jnp.stack([r[ids] for r in pay_rows])
+                sc = (None if scale_rows is None
+                      else jnp.stack([s[ids] for s in scale_rows]))
+                shard.apply_wire(pay, sc, codec, self.step, average=True)
+            self.stats.fused_wire_rounds += 1
+            return shipped
         zero = jnp.zeros((self.space.num_chunks, self.space.chunk_elems),
                          jnp.float32)
         rows = streams + [zero] * (len(workers) - len(streams))

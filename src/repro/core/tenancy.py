@@ -170,6 +170,7 @@ def _build_fabric(
     oversubscription: float,
     link: LinkModel,
     use_pallas: bool,
+    fused_wire_path: bool = True,
     namespace: str | None = None,
     chunk_base: int = 0,
     shared_clock: Any | None = None,
@@ -197,6 +198,7 @@ def _build_fabric(
         num_workers=spec.num_workers,
         min_push_fraction=spec.min_push_fraction,
         use_pallas=use_pallas,
+        fused_wire_path=fused_wire_path,
         link=link,
         topology=topology,
         compression=CompressionConfig(codec=spec.codec),
@@ -228,6 +230,7 @@ class MultiJobFabric:
         oversubscription: float = 4.0,
         link: LinkModel | None = None,
         use_pallas: bool = True,
+        fused_wire_path: bool = True,
     ):
         if num_shards < 1:
             raise ValueError("num_shards must be >= 1")
@@ -238,6 +241,7 @@ class MultiJobFabric:
         self.oversubscription = oversubscription
         self.link = link or LinkModel()
         self.use_pallas = use_pallas
+        self.fused_wire_path = fused_wire_path
         self.jobs: dict[str, JobHandle] = {}
         # serve tenants (core/serving.py): read planes attached as
         # co-tenants — they join the fair-share priority totals and book
@@ -282,6 +286,7 @@ class MultiJobFabric:
             oversubscription=self.oversubscription,
             link=self.link,
             use_pallas=self.use_pallas,
+            fused_wire_path=self.fused_wire_path,
             namespace=spec.name,
             chunk_base=self._next_chunk_base,
             shared_clock=self,
@@ -577,4 +582,5 @@ def dedicated_fabric(spec: JobSpec, box: MultiJobFabric) -> PBoxFabric:
         oversubscription=box.oversubscription,
         link=box.link,
         use_pallas=box.use_pallas,
+        fused_wire_path=box.fused_wire_path,
     )

@@ -47,6 +47,8 @@ import numpy as np
 
 from repro.core.compression import (
     CompressionConfig,
+    WirePayload,
+    encode_wire,
     init_ef_state,
     roundtrip,
     wire_bytes,
@@ -317,6 +319,20 @@ class RackAggregator:
         )
         return dec
 
+    def ingest_wire(self, worker: int, slab: jax.Array) -> WirePayload:
+        """``ingest``, wire-form: the worker's push stays encoded through
+        the ToR (no aggregation here — the PS's fused kernel will decode
+        it in VMEM).  Identical error-feedback update and byte accounting
+        to ``ingest``; only the returned representation differs."""
+        if worker not in self._worker_ef:
+            raise ValueError(f"worker {worker} is not in rack {self.rack_id}")
+        self.stats.ingests += 1
+        self.stats.bytes_in += wire_bytes(self.cfg, self.n_elems)
+        wp, self._worker_ef[worker] = encode_wire(
+            self.cfg, slab, self._worker_ef[worker]
+        )
+        return wp
+
     def drop_stale(self) -> None:
         """A stale quorum-round stream arrived and was refused: it spent
         the rack link (counted here, keeping per-rack bytes in sync with
@@ -336,6 +352,17 @@ class RackAggregator:
         self.stats.bytes_up += wire_bytes(self.cfg, self.n_elems)
         dec, self._uplink_ef = roundtrip(self.cfg, slab, self._uplink_ef)
         return dec
+
+    def uplink_wire(self, slab: jax.Array) -> WirePayload:
+        """``uplink``, wire-form: the rack's combined stream is re-encoded
+        at the ToR and shipped up the core link *still encoded* — the PS
+        shard's fused kernel (kernels/wire_path) dequantizes it in VMEM.
+        Identical switch-side error-feedback update and byte accounting
+        to ``uplink``; only the returned representation differs."""
+        self.stats.uplinks += 1
+        self.stats.bytes_up += wire_bytes(self.cfg, self.n_elems)
+        wp, self._uplink_ef = encode_wire(self.cfg, slab, self._uplink_ef)
+        return wp
 
     def reset(self) -> None:
         """Clear codec residuals (elastic restore: streams restart fresh)."""

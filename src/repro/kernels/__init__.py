@@ -1,3 +1,16 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""The Pallas kernel tier — see docs/kernels.md for the full map.
+
+Four families, each a ``ref.py`` (pure-jnp oracle) / ``kernel.py`` (Pallas
+program) / ``ops.py`` (validated, jit'd public surface) package:
+
+* ``fused_agg_opt`` — K-way gradient aggregation fused with the server
+  optimizer (the PHub hot loop);
+* ``quant`` — the chunked int8 wire codec (per-chunk f32 scales);
+* ``embedding_bag`` — scalar-prefetch embedding gather/reduce for the
+  sparse tier;
+* ``wire_path`` — single-pass decode + aggregate + optimize over wire-form
+  push payloads, bit-identical to the unfused pipeline.
+
+Import from each family's package (``repro.kernels.<family>``); this
+namespace package deliberately re-exports nothing.
+"""

@@ -1,3 +1,10 @@
+"""Fused embedding-bag lookup (gather + weighted reduce) — docs/kernels.md.
+
+Bag ``b`` is ``sum_l weights[b, l] * table[indices[b, l]]`` (``mode="mean"``
+divides by the weight sum).  The Pallas kernel scalar-prefetches the index
+matrix and streams exactly the touched table rows HBM->VMEM; the sparse
+tier and the recsys models consume it through :func:`embedding_bag`.
+"""
 from repro.kernels.embedding_bag.ops import embedding_bag
 
 __all__ = ["embedding_bag"]

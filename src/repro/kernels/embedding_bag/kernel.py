@@ -37,6 +37,14 @@ def embedding_bag_pallas(
     *,
     interpret: bool = True,
 ) -> jax.Array:
+    """Pallas embedding-bag: (B, L) index/weight bags over a (V, D) table.
+
+    The index matrix is scalar-prefetched so the grid's BlockSpec can use
+    ``idx_ref[bi, li]`` as a row number — each (bi, li) step streams exactly
+    one touched table row HBM->VMEM and accumulates ``w * row`` into bag
+    ``bi``.  "mean" divides by the weight sum afterwards.  Callers go
+    through :func:`repro.kernels.embedding_bag.ops.embedding_bag`, which
+    validates indices first."""
     b, l = indices.shape
     v, d = table.shape
     out = pl.pallas_call(

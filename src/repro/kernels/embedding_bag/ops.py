@@ -51,6 +51,13 @@ def embedding_bag(
     use_pallas: bool = False,
     interpret: bool = True,
 ) -> jax.Array:
+    """Weighted embedding-bag lookup: bags of table rows, summed or meaned.
+
+    Bag ``b`` returns ``sum_l weights[b, l] * table[indices[b, l]]``
+    (``mode="mean"`` divides by the weight sum; pad slots carry weight
+    0.0).  Validates ``mode``, integer dtype, and — for concrete indices —
+    table range before dispatching to the Pallas kernel
+    (``use_pallas=True``) or the jnp reference."""
     if mode not in ("sum", "mean"):
         raise ValueError(f"mode must be 'sum' or 'mean', got {mode!r}")
     if not jnp.issubdtype(jnp.asarray(indices).dtype, jnp.integer):

@@ -16,6 +16,7 @@ def embedding_bag_ref(
     weights: jax.Array,  # (B, L) f32, 0 at padding
     mode: str = "sum",  # "sum" | "mean"
 ) -> jax.Array:
+    """Oracle embedding-bag: gather all (B, L) rows, einsum-reduce in f32."""
     rows = jnp.take(table, indices, axis=0)  # (B, L, D)
     out = jnp.einsum("bl,bld->bd", weights.astype(jnp.float32), rows.astype(jnp.float32))
     if mode == "mean":

@@ -1,3 +1,10 @@
+"""Fused K-way gradient aggregation + server optimizer — docs/kernels.md.
+
+The PHub hot loop: gradients, parameters and optimizer state each cross
+HBM exactly once per apply.  Every ``PBoxShard`` and the SPMD
+``device_update`` call :func:`fused_aggregate_update`; the ``wire_path``
+kernel reuses this family's optimizer bodies and rounding fence.
+"""
 from repro.kernels.fused_agg_opt.ops import fused_aggregate_update
 
 __all__ = ["fused_aggregate_update"]

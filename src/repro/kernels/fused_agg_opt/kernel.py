@@ -43,36 +43,96 @@ def _block_rows(rows: int, target: int = 256) -> int:
     return min(best, rows)
 
 
-def _agg(grads_ref, inv_k: float) -> jax.Array:
+def fence(x: jax.Array, tok: jax.Array) -> jax.Array:
+    """Force ``x`` to round to f32 before any consumer sees it.
+
+    f32 mul-then-add must stay two rounded ops for the fused wire path's
+    cross-program bit-parity invariant (tests/test_wire_path.py): whether
+    the backend contracts ``a*b + c`` into a single-rounding FMA depends
+    on the surrounding fusion shape, so the same optimizer body can give
+    different last bits in two different programs.  Routing every product
+    that feeds an add through this fence pins strict mul-then-add
+    semantics in *every* program that shares these bodies.
+
+    The mechanism is a ``lax.cond`` on a runtime token: conditional
+    branches are separate XLA computations, so the branch result is a
+    rounded f32 value by the time the enclosing computation adds it —
+    contraction cannot reach across the boundary.  Nothing weaker
+    survives this backend: ``optimization_barrier``, ``reduce_precision``
+    (an f32->f32 no-op), trip-count-1 loop carries and
+    ``--xla_cpu_enable_fast_math=false`` all still produce FMAs here.
+    ``tok`` is the scalar packet's fence token (see ``ops.scalar_packet``):
+    always ``0.0`` at runtime but opaque to constant folding, so the
+    predicate ``tok < 1`` is not simplifiable and the taken branch
+    returns ``x`` unchanged.
+    """
+    return jax.lax.cond(tok < jnp.float32(1.0), lambda v: v, lambda v: v + tok, x)
+
+
+def _agg(grads_ref, inv_k: float, tok) -> jax.Array:
     k = grads_ref.shape[0]
     acc = grads_ref[0].astype(jnp.float32)
     for i in range(1, k):
         acc = acc + grads_ref[i].astype(jnp.float32)
-    return acc * inv_k
+    return fence(acc * inv_k, tok)
+
+
+# -- elementwise optimizer bodies -------------------------------------------
+# Shared between this kernel and kernels/wire_path: both must run the SAME
+# op sequence on the aggregated gradient for the fused wire path's
+# bit-parity invariant to hold structurally (tests/test_wire_path.py), so
+# the update math lives in exactly one place.  All values are f32.
+
+def sgd_body(spec: OptimizerSpec, lr, tok, g, p) -> jax.Array:
+    """One SGD element update; returns the new param value."""
+    if spec.weight_decay:
+        g = g + fence(spec.weight_decay * p, tok)
+    return p - fence(lr * g, tok)
+
+
+def momentum_body(spec: OptimizerSpec, lr, tok, g, p, m) -> tuple:
+    """One (Nesterov-capable) momentum update; returns (param, momentum)."""
+    if spec.weight_decay:
+        g = g + fence(spec.weight_decay * p, tok)
+    m = fence(spec.momentum * m, tok) + g
+    upd = g + fence(spec.momentum * m, tok) if spec.nesterov else m
+    return p - fence(lr * upd, tok), m
+
+
+def adam_body(spec: OptimizerSpec, lr, bc1, bc2, tok, g, p, m, v) -> tuple:
+    """One Adam/AdamW update; returns (param, m, v).
+
+    ``bc1``/``bc2`` are the step's bias corrections ``1/(1-beta^t)``,
+    computed outside the kernel (see ops.scalar_packet)."""
+    if spec.name == "adam" and spec.weight_decay:
+        g = g + fence(spec.weight_decay * p, tok)
+    m = fence(spec.beta1 * m, tok) + fence((1.0 - spec.beta1) * g, tok)
+    v = fence(spec.beta2 * v, tok) + fence((1.0 - spec.beta2) * (g * g), tok)
+    mhat = m * bc1
+    vhat = v * bc2
+    upd = mhat / (jnp.sqrt(vhat) + spec.eps)
+    if spec.name == "adamw" and spec.weight_decay:
+        upd = upd + fence(spec.weight_decay * p, tok)
+    return p - fence(lr * upd, tok), m, v
 
 
 def _sgd_kernel(spec: OptimizerSpec, inv_k, scal_ref, grads_ref, param_ref, p_out):
-    g = _agg(grads_ref, inv_k)
+    tok = scal_ref[0, 3]
+    g = _agg(grads_ref, inv_k, tok)
     p = param_ref[...].astype(jnp.float32)
-    lr = scal_ref[0, 0]
-    if spec.weight_decay:
-        g = g + spec.weight_decay * p
-    p_out[...] = (p - lr * g).astype(p_out.dtype)
+    new_p = sgd_body(spec, scal_ref[0, 0], tok, g, p)
+    p_out[...] = new_p.astype(p_out.dtype)
 
 
 def _momentum_kernel(
     spec: OptimizerSpec, inv_k, scal_ref, grads_ref, param_ref, m_ref, p_out, m_out
 ):
-    g = _agg(grads_ref, inv_k)
+    tok = scal_ref[0, 3]
+    g = _agg(grads_ref, inv_k, tok)
     p = param_ref[...].astype(jnp.float32)
-    m = m_ref[...]
-    lr = scal_ref[0, 0]
-    if spec.weight_decay:
-        g = g + spec.weight_decay * p
-    m = spec.momentum * m + g
-    upd = g + spec.momentum * m if spec.nesterov else m
-    p_out[...] = (p - lr * upd).astype(p_out.dtype)
-    m_out[...] = m
+    new_p, new_m = momentum_body(spec, scal_ref[0, 0], tok, g, p, m_ref[...])
+    p_out[...] = new_p.astype(p_out.dtype)
+    m_out[...] = new_m
 
 
 def _adam_kernel(
@@ -87,23 +147,16 @@ def _adam_kernel(
     m_out,
     v_out,
 ):
-    g = _agg(grads_ref, inv_k)
+    tok = scal_ref[0, 3]
+    g = _agg(grads_ref, inv_k, tok)
     p = param_ref[...].astype(jnp.float32)
-    m = m_ref[...]
-    v = v_ref[...]
-    lr, bc1, bc2 = scal_ref[0, 0], scal_ref[0, 1], scal_ref[0, 2]
-    if spec.name == "adam" and spec.weight_decay:
-        g = g + spec.weight_decay * p
-    m = spec.beta1 * m + (1.0 - spec.beta1) * g
-    v = spec.beta2 * v + (1.0 - spec.beta2) * g * g
-    mhat = m * bc1
-    vhat = v * bc2
-    upd = mhat / (jnp.sqrt(vhat) + spec.eps)
-    if spec.name == "adamw" and spec.weight_decay:
-        upd = upd + spec.weight_decay * p
-    p_out[...] = (p - lr * upd).astype(p_out.dtype)
-    m_out[...] = m
-    v_out[...] = v
+    new_p, new_m, new_v = adam_body(
+        spec, scal_ref[0, 0], scal_ref[0, 1], scal_ref[0, 2], tok, g, p,
+        m_ref[...], v_ref[...],
+    )
+    p_out[...] = new_p.astype(p_out.dtype)
+    m_out[...] = new_m
+    v_out[...] = new_v
 
 
 def fused_agg_opt_pallas(
@@ -117,6 +170,14 @@ def fused_agg_opt_pallas(
     interpret: bool = True,
     block_target: int = 256,
 ) -> tuple[jax.Array, tuple]:
+    """Pallas fused aggregate+optimize over an (K, N) gradient slab.
+
+    One grid step owns a (bm, 128) register block: sum the K worker slabs
+    in f32, scale by 1/K (``average``), and apply ``spec``'s optimizer body
+    in the same pass — gradients, parameters and state cross HBM once.
+    ``scalars`` is the (1, 4) SMEM packet from ``scalar_packet`` ([lr_t,
+    bc1, bc2, fence token]); N must be a multiple of the 8·128·8 register
+    block.  Returns (new_param, new_state)."""
     k, n = grads.shape
     if n % (SUBLANES * LANES * 8) != 0:
         raise ValueError(f"slab size {n} not a multiple of {SUBLANES*LANES*8}")

@@ -22,6 +22,7 @@ def fused_aggregate_update_ref(
     lr_scale: jax.Array | float = 1.0,
     average: bool = True,
 ) -> tuple[jax.Array, tuple]:
+    """Oracle for the fused kernel: f32 sum, optional 1/K, then optimizer."""
     agg = jnp.sum(grads.astype(jnp.float32), axis=0)
     if average:
         agg = agg / grads.shape[0]

@@ -1,3 +1,11 @@
-from repro.kernels.quant.ops import quantize_chunks, dequantize_chunks
+"""Chunked int8 quantization — the wire codec kernels (docs/kernels.md).
+
+A flat f32 slab becomes an int8 payload plus one f32 scale per
+``chunk_elems`` chunk (symmetric, ``scale = amax/127``); wire cost is
+``N + 4·C`` bytes.  ``core/compression.py`` wraps these in codec policy
+(error feedback, ``WirePayload``); the fused wire path replicates the
+dequant expression in-register.
+"""
+from repro.kernels.quant.ops import dequantize_chunks, quantize_chunks
 
 __all__ = ["quantize_chunks", "dequantize_chunks"]

@@ -31,6 +31,11 @@ def _dequant_kernel(q_ref, s_ref, x_ref):
 def quantize_chunks_pallas(
     x: jax.Array, chunk_elems: int, *, interpret: bool = True
 ) -> tuple[jax.Array, jax.Array]:
+    """Pallas per-chunk symmetric int8 quantize of an (N,) f32 slab.
+
+    Grid step ``i`` owns chunk ``i``: computes ``scale = amax/127`` (1.0
+    for an all-zero chunk) and ``q = clip(round(x/scale), ±127)``.  Returns
+    ((N,) int8 payload, (N/chunk_elems,) f32 scales)."""
     n = x.shape[0]
     if n % chunk_elems or chunk_elems % LANES:
         raise ValueError(f"bad sizes n={n} chunk={chunk_elems}")
@@ -57,6 +62,11 @@ def quantize_chunks_pallas(
 def dequantize_chunks_pallas(
     q: jax.Array, scale: jax.Array, chunk_elems: int, *, interpret: bool = True
 ) -> jax.Array:
+    """Pallas per-chunk int8 dequantize: ``f32(q) * scale[chunk]``.
+
+    Inverse of :func:`quantize_chunks_pallas`; the same expression runs
+    in-register inside the fused wire-path kernel, which is what makes the
+    fused and unfused decode bit-identical."""
     n = q.shape[0]
     c = n // chunk_elems
     rows = chunk_elems // LANES

@@ -27,6 +27,7 @@ def quantize_chunks_ref(
 def dequantize_chunks_ref(
     q: jax.Array, scale: jax.Array, chunk_elems: int
 ) -> jax.Array:
+    """Oracle dequantize: ``f32(q) * scale`` broadcast per chunk."""
     n = q.shape[0]
     c = n // chunk_elems
     qc = q.reshape(c, chunk_elems).astype(jnp.float32)

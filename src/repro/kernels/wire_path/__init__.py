@@ -1,0 +1,15 @@
+"""Single-pass wire->kernel hot path (see docs/kernels.md, "wire_path").
+
+One Pallas program consumes codec'd wire chunks (int8 payload + per-chunk
+scales, bf16, or raw f32) and performs dequantize -> K-stream aggregate ->
+optimizer apply without ever materializing the decoded f32 gradients in
+HBM.  Bit-identical to the unfused decode -> aggregate -> optimize
+pipeline by construction (tests/test_wire_path.py).
+"""
+from repro.kernels.wire_path.ops import (
+    fused_wire_update,
+    unfused_wire_update,
+    wire_path_supported,
+)
+
+__all__ = ["fused_wire_update", "unfused_wire_update", "wire_path_supported"]

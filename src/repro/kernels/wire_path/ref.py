@@ -1,0 +1,68 @@
+"""Pure-jnp oracle for the fused wire-path update.
+
+The oracle is the literal composition the fused kernel replaces: decode
+each worker/rack stream from its wire form (per-chunk int8 dequantize,
+bf16 widening, or identity for raw f32), stack the decoded f32 slabs, and
+run the aggregate+optimize reference.  The Pallas kernel in
+``kernel.py`` must match the unfused *kernel* pipeline bit-for-bit; this
+reference matches the unfused *reference* pipeline the same way, so the
+``use_pallas=False`` fabric keeps the identical fused/unfused invariant.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_agg_opt.ref import fused_aggregate_update_ref
+from repro.kernels.quant.ref import dequantize_chunks_ref
+from repro.optim.optimizers import OptimizerSpec
+
+
+def decode_streams_ref(
+    payload: jax.Array, scales: jax.Array | None, codec: str, chunk_elems: int
+) -> jax.Array:
+    """Decode K wire streams to f32.
+
+    ``payload``: (K, N) wire-dtype slabs (int8 / bf16 / f32);
+    ``scales``: (K, N/chunk_elems) f32 per-chunk scales (int8 only, else
+    ``None``).  Returns (K, N) f32 — the gradients the unfused path would
+    have materialized in HBM.
+    """
+    if codec == "none":
+        return payload.astype(jnp.float32)
+    if codec == "bf16":
+        return payload.astype(jnp.float32)
+    if codec == "int8":
+        if scales is None:
+            raise ValueError("int8 wire streams need per-chunk scales")
+        return jnp.stack(
+            [
+                dequantize_chunks_ref(payload[i], scales[i], chunk_elems)
+                for i in range(payload.shape[0])
+            ]
+        )
+    raise ValueError(f"unknown wire codec {codec!r}")
+
+
+def fused_wire_update_ref(
+    payload: jax.Array,
+    scales: jax.Array | None,
+    param: jax.Array,
+    state: tuple,
+    spec: OptimizerSpec,
+    step: jax.Array,
+    lr_scale: jax.Array | float = 1.0,
+    *,
+    codec: str,
+    chunk_elems: int,
+    average: bool = True,
+) -> tuple[jax.Array, tuple]:
+    """Decode + aggregate + optimize, reference semantics.
+
+    Same signature contract as ``ops.fused_wire_update``; returns
+    ``(new_param, new_state)`` with shapes matching ``param``/``state``.
+    """
+    grads = decode_streams_ref(payload, scales, codec, chunk_elems)
+    return fused_aggregate_update_ref(
+        grads, param, state, spec, step, lr_scale, average=average
+    )

@@ -1,0 +1,70 @@
+"""The docs link gate (scripts/check_docs.py) — checked on itself and on
+synthetic good/bad trees, so a regression in the checker cannot silently
+green-light dead links in CI."""
+import importlib.util
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+_spec = importlib.util.spec_from_file_location(
+    "check_docs", REPO / "scripts" / "check_docs.py")
+check_docs = importlib.util.module_from_spec(_spec)
+sys.modules["check_docs"] = check_docs
+_spec.loader.exec_module(check_docs)
+
+
+def _tree(tmp_path, files):
+    (tmp_path / "docs").mkdir()
+    for rel, text in files.items():
+        (tmp_path / rel).write_text(text)
+    return tmp_path
+
+
+def test_repo_docs_are_clean():
+    assert check_docs.check(REPO) == []
+
+
+def test_good_tree_passes(tmp_path):
+    root = _tree(tmp_path, {
+        "README.md": "# Top\n[arch](docs/a.md) [sec](docs/a.md#two-words)\n"
+                     "[self](#top) ![badge](../../actions/x/badge.svg)\n"
+                     "[ext](https://example.com/nope)\n",
+        "docs/a.md": "# One\n## Two words\n[back](../README.md)\n",
+    })
+    assert check_docs.check(root) == []
+
+
+def test_dead_file_and_anchor_fail(tmp_path):
+    root = _tree(tmp_path, {
+        "README.md": "[gone](docs/missing.md)\n[bad](docs/a.md#nope)\n",
+        "docs/a.md": "# Only\n",
+    })
+    errs = "\n".join(check_docs.check(root))
+    assert "dead link -> docs/missing.md" in errs
+    assert "missing anchor -> docs/a.md#nope" in errs
+
+
+def test_fenced_code_is_ignored(tmp_path):
+    root = _tree(tmp_path, {
+        "README.md": "```\n[not a link](docs/missing.md)\n# not a heading\n"
+                     "```\nreal text\n",
+    })
+    assert check_docs.check(root) == []
+
+
+def test_duplicate_headings_get_suffixes(tmp_path):
+    root = _tree(tmp_path, {
+        "README.md": "[a](docs/a.md#setup) [b](docs/a.md#setup-1)\n",
+        "docs/a.md": "# Setup\n# Setup\n",
+    })
+    assert check_docs.check(root) == []
+
+
+def test_slugging_rules():
+    slug = check_docs.github_slug
+    assert slug("Two Words") == "two-words"
+    assert slug("§6. Kernels — the `quant` tier") == "6-kernels--the-quant-tier"
+    assert slug("A *bold* [link](x.md) title") == "a-bold-link-title"
+    # GitHub keeps literal underscores in anchors
+    assert slug("The `wire_path` kernel") == "the-wire_path-kernel"

@@ -88,3 +88,107 @@ def test_embedding_bag_sweep(b, l, v, d, mode):
     out_r = embedding_bag_ref(table, idx, w, mode)
     np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
                                rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# codec error paths — the validation contract at the public ops boundary
+# ---------------------------------------------------------------------------
+
+
+class TestQuantOpsErrorPaths:
+    """quantize_chunks / dequantize_chunks reject malformed calls loudly.
+
+    Every branch here guards a silent-corruption mode: a non-chunk-aligned
+    payload would shear scale/chunk alignment, a non-f32 slab would quantize
+    against the wrong dynamic range, a wrong-shaped scale vector would
+    rescale the wrong chunks.
+    """
+
+    def test_quantize_rejects_non_flat(self):
+        with pytest.raises(ValueError, match="flat slab"):
+            quantize_chunks(jnp.zeros((2, 128), jnp.float32), 128)
+
+    def test_quantize_rejects_non_f32(self):
+        with pytest.raises(ValueError, match="f32"):
+            quantize_chunks(jnp.zeros(256, jnp.bfloat16), 128)
+        with pytest.raises(ValueError, match="f32"):
+            quantize_chunks(jnp.zeros(256, jnp.int8), 128)
+
+    def test_quantize_rejects_odd_length(self):
+        # 300 elements is not a whole number of 128-element chunks
+        with pytest.raises(ValueError, match="whole number"):
+            quantize_chunks(jnp.zeros(300, jnp.float32), 128)
+
+    def test_quantize_rejects_empty(self):
+        with pytest.raises(ValueError, match="whole number"):
+            quantize_chunks(jnp.zeros(0, jnp.float32), 128)
+
+    @pytest.mark.parametrize("chunk", [0, 64, 100, 129])
+    def test_bad_chunk_elems(self, chunk):
+        with pytest.raises(ValueError, match="chunk_elems"):
+            quantize_chunks(jnp.zeros(256, jnp.float32), chunk)
+
+    def test_dequantize_rejects_non_flat(self):
+        with pytest.raises(ValueError, match="flat payload"):
+            dequantize_chunks(
+                jnp.zeros((2, 128), jnp.int8), jnp.ones(2), 128)
+
+    def test_dequantize_rejects_non_int8(self):
+        with pytest.raises(ValueError, match="int8"):
+            dequantize_chunks(
+                jnp.zeros(256, jnp.float32), jnp.ones(2), 128)
+
+    def test_dequantize_rejects_odd_length_payload(self):
+        with pytest.raises(ValueError, match="whole number"):
+            dequantize_chunks(jnp.zeros(257, jnp.int8), jnp.ones(2), 128)
+
+    def test_dequantize_rejects_scale_count_mismatch(self):
+        # 256 elements / 128-chunks -> 2 chunks, but 3 scales supplied
+        with pytest.raises(ValueError, match=r"\(2,\)"):
+            dequantize_chunks(jnp.zeros(256, jnp.int8), jnp.ones(3), 128)
+        with pytest.raises(ValueError, match=r"\(2,\)"):
+            dequantize_chunks(
+                jnp.zeros(256, jnp.int8), jnp.ones((2, 1)), 128)
+
+    @pytest.mark.parametrize("use_pallas", [False, True])
+    def test_valid_call_roundtrips_after_rejections(self, use_pallas):
+        # the guards must not break the happy path they sit in front of
+        x = jnp.asarray(
+            np.random.default_rng(7).normal(size=256), jnp.float32)
+        q, s = quantize_chunks(x, 128, use_pallas=use_pallas)
+        dec = dequantize_chunks(q, s, 128, use_pallas=use_pallas)
+        assert q.dtype == jnp.int8 and s.shape == (2,)
+        np.testing.assert_allclose(
+            np.asarray(dec), np.asarray(x), atol=float(s.max()))
+
+
+class TestCompressionConfigErrorPaths:
+    """An unknown codec name fails at every CompressionConfig entry point."""
+
+    def test_unknown_codec_rejected_everywhere(self):
+        from repro.core import compression as C
+
+        cfg = C.CompressionConfig(codec="fp4", chunk_elems=128)
+        slab = jnp.zeros(128, jnp.float32)
+        with pytest.raises(ValueError, match="fp4"):
+            _ = cfg.wire_bytes_per_elem
+        with pytest.raises(ValueError, match="fp4"):
+            C.wire_bytes(cfg, 128)
+        with pytest.raises(ValueError, match="fp4"):
+            C.encode(cfg, slab, None)
+        with pytest.raises(ValueError, match="fp4"):
+            C.encode_wire(cfg, slab, None)
+        with pytest.raises(ValueError, match="fp4"):
+            C.decode(cfg, (slab,))
+        with pytest.raises(ValueError, match="fp4"):
+            C.roundtrip(cfg, slab, None)
+
+    def test_decode_wire_rejects_unknown_payload_codec(self):
+        from repro.core import compression as C
+
+        cfg = C.CompressionConfig(codec="int8", chunk_elems=128)
+        wp = C.WirePayload(
+            codec="fp4", payload=jnp.zeros(128, jnp.int8),
+            scale=jnp.ones(1))
+        with pytest.raises(ValueError, match="fp4"):
+            C.decode_wire(cfg, wp)

@@ -1,0 +1,274 @@
+"""Fused wire-path invariants: the single-pass decode+aggregate+optimize
+kernel must be bit-identical to the unfused three-program pipeline, at the
+kernel boundary and through the fabric's push-apply paths."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.chunking import ParamSpace
+from repro.core.compression import (
+    CompressionConfig,
+    decode_wire,
+    encode_wire,
+    init_ef_state,
+    roundtrip,
+)
+from repro.core.fabric import NetworkTopology, PBoxFabric
+from repro.core.tenancy import JobSpec, MultiJobFabric, dedicated_fabric
+from repro.kernels.wire_path.ops import (
+    fused_wire_update,
+    unfused_wire_update,
+    wire_path_supported,
+)
+from repro.kernels.wire_path.ref import fused_wire_update_ref
+from repro.optim.optimizers import adam, adamw, momentum, sgd
+
+CHUNK = 4096  # int8 granule (32x128); bf16/f32 granules divide it
+
+
+def _specs():
+    return [
+        ("sgd", sgd(lr=0.05, weight_decay=1e-4)),
+        ("momentum", momentum(lr=0.05, mu=0.9, weight_decay=1e-4,
+                              nesterov=True)),
+        ("adam", adam(lr=1e-3)),
+    ]
+
+
+def _wire_streams(rng, codec, k, n, chunk):
+    """Random (payload, scales) streams in wire form for ``codec``."""
+    g = rng.standard_normal((k, n)).astype(np.float32)
+    if codec == "none":
+        return jnp.asarray(g), None
+    if codec == "bf16":
+        return jnp.asarray(g).astype(jnp.bfloat16), None
+    c = n // chunk
+    gr = g.reshape(k, c, chunk)
+    s = np.abs(gr).max(axis=2) / 127.0
+    q = np.clip(np.rint(gr / s[:, :, None]), -127, 127).astype(np.int8)
+    return jnp.asarray(q.reshape(k, n)), jnp.asarray(s.astype(np.float32))
+
+
+def _state_init(rng, spec, n):
+    out = []
+    for slot in range(spec.num_state_slots):
+        s = rng.standard_normal(n).astype(np.float32) * 0.1
+        if slot == 1:
+            s = np.abs(s)  # Adam's second moment is non-negative
+        out.append(jnp.asarray(s))
+    return tuple(out)
+
+
+def _assert_bit_equal(a, b, what):
+    bad = int((np.asarray(a) != np.asarray(b)).sum())
+    assert bad == 0, f"{what}: {bad} elements differ bitwise"
+
+
+# -- kernel-boundary parity -------------------------------------------------
+@pytest.mark.parametrize("codec", ["none", "bf16", "int8"])
+@pytest.mark.parametrize("sname,spec", _specs())
+@pytest.mark.parametrize("k", [1, 2, 8])
+def test_fused_matches_unfused_bitwise(codec, sname, spec, k):
+    rng = np.random.default_rng(hash((codec, sname, k)) % 2**32)
+    n = CHUNK  # single chunk: the adversarial fusion shape
+    payload, scales = _wire_streams(rng, codec, k, n, CHUNK)
+    p = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    st = _state_init(rng, spec, n)
+    step = jnp.asarray(3, jnp.int32)
+    fp, fs = fused_wire_update(payload, scales, p, st, spec, step,
+                               codec=codec, chunk_elems=CHUNK)
+    up, us = unfused_wire_update(payload, scales, p, st, spec, step,
+                                 codec=codec, chunk_elems=CHUNK)
+    _assert_bit_equal(fp, up, f"params ({codec}/{sname}/k={k})")
+    for i, (a, b) in enumerate(zip(fs, us)):
+        _assert_bit_equal(a, b, f"state[{i}] ({codec}/{sname}/k={k})")
+
+
+def test_fused_matches_unfused_multichunk_pipeline():
+    """c=3 chunks exercise the double-buffered stage/drain pipeline."""
+    spec = adamw(lr=1e-3, weight_decay=0.01)
+    rng = np.random.default_rng(11)
+    n = 3 * CHUNK
+    payload, scales = _wire_streams(rng, "int8", 2, n, CHUNK)
+    p = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    st = _state_init(rng, spec, n)
+    step = jnp.asarray(7, jnp.int32)
+    fp, fs = fused_wire_update(payload, scales, p, st, spec, step,
+                               codec="int8", chunk_elems=CHUNK)
+    up, us = unfused_wire_update(payload, scales, p, st, spec, step,
+                                 codec="int8", chunk_elems=CHUNK)
+    _assert_bit_equal(fp, up, "params (int8/adamw/c=3)")
+    for a, b in zip(fs, us):
+        _assert_bit_equal(a, b, "state (int8/adamw/c=3)")
+
+
+def test_fused_kernel_close_to_ref():
+    spec = momentum(lr=0.05, mu=0.9)
+    rng = np.random.default_rng(3)
+    n = 2 * CHUNK
+    payload, scales = _wire_streams(rng, "int8", 4, n, CHUNK)
+    p = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    st = _state_init(rng, spec, n)
+    step = jnp.asarray(2, jnp.int32)
+    fp, fs = fused_wire_update(payload, scales, p, st, spec, step,
+                               codec="int8", chunk_elems=CHUNK)
+    rp, rs = fused_wire_update_ref(payload, scales, p, st, spec, step,
+                                   codec="int8", chunk_elems=CHUNK)
+    np.testing.assert_allclose(np.asarray(fp), np.asarray(rp),
+                               rtol=1e-6, atol=1e-6)
+    for a, b in zip(fs, rs):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_supported_matrix():
+    assert wire_path_supported("int8", sgd(1e-2), 4096)
+    assert wire_path_supported("bf16", adam(1e-3), 2048)
+    assert wire_path_supported("int8", adamw(1e-3), 8192)
+    # codec "none" has no decode stage to fuse
+    assert not wire_path_supported("none", sgd(1e-2), 8192)
+    # chunk not filling whole native wire-dtype tiles
+    assert not wire_path_supported("int8", sgd(1e-2), 2048)
+    assert not wire_path_supported("bf16", sgd(1e-2), 1024)
+    assert not wire_path_supported("int8", sgd(1e-2), 0)
+    # unknown codec / optimizer
+    assert not wire_path_supported("fp4", sgd(1e-2), 8192)
+    bogus = dataclasses.replace(sgd(1e-2), name="lion")
+    assert not wire_path_supported("int8", bogus, 8192)
+
+
+def test_kernel_error_paths():
+    spec = sgd(1e-2)
+    rng = np.random.default_rng(0)
+    payload, scales = _wire_streams(rng, "int8", 2, CHUNK, CHUNK)
+    p = jnp.asarray(rng.standard_normal(CHUNK).astype(np.float32))
+    step = jnp.asarray(1, jnp.int32)
+    with pytest.raises(ValueError, match="codec"):
+        fused_wire_update(payload, scales, p, (), spec, step,
+                          codec="fp4", chunk_elems=CHUNK)
+    with pytest.raises(ValueError, match="chunk"):
+        fused_wire_update(payload, scales, p, (), spec, step,
+                          codec="int8", chunk_elems=CHUNK + 1)
+    with pytest.raises(ValueError, match="scales"):
+        fused_wire_update(payload, None, p, (), spec, step,
+                          codec="int8", chunk_elems=CHUNK)
+    with pytest.raises(ValueError, match="block_chunks"):
+        fused_wire_update(payload, scales, p, (), spec, step,
+                          codec="int8", chunk_elems=CHUNK, block_chunks=2)
+
+
+# -- wire form of one hop ---------------------------------------------------
+@pytest.mark.parametrize("codec", ["bf16", "int8"])
+def test_encode_wire_matches_roundtrip(codec):
+    """decode(encode_wire(x)) and roundtrip(x) must agree bitwise — on the
+    decoded view AND the sender's error-feedback residual."""
+    cfg = CompressionConfig(codec=codec, chunk_elems=CHUNK)
+    rng = np.random.default_rng(5)
+    n = 2 * CHUNK
+    ef_a = init_ef_state(cfg, n)
+    ef_b = init_ef_state(cfg, n)
+    for trial in range(3):  # EF accumulates: check the chain stays locked
+        slab = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+        wp, ef_a = encode_wire(cfg, slab, ef_a)
+        dec_w = decode_wire(cfg, wp)
+        dec_r, ef_b = roundtrip(cfg, slab, ef_b)
+        _assert_bit_equal(dec_w, dec_r, f"decoded view ({codec}, trial {trial})")
+        _assert_bit_equal(ef_a, ef_b, f"EF residual ({codec}, trial {trial})")
+
+
+# -- fabric-level parity ----------------------------------------------------
+def _run_fabric(codec, mode, topo_on, rack_agg, fused, *, quorum=1.0,
+                steps=2, workers=4, num_shards=2):
+    rng = np.random.default_rng(7)
+    n = 2 * 8192
+    params = {"w": rng.standard_normal(n).astype(np.float32)}
+    space = ParamSpace.build(params, chunk_elems=8192, num_owners=num_shards)
+    spec = momentum(lr=0.05, mu=0.9, weight_decay=1e-4)
+    topo = (NetworkTopology(num_workers=workers, num_racks=2,
+                            rack_aggregation=rack_agg) if topo_on else None)
+    fab = PBoxFabric(space, spec, space.flatten(params),
+                     num_shards=num_shards, mode=mode, num_workers=workers,
+                     min_push_fraction=quorum, topology=topo,
+                     compression=CompressionConfig(codec=codec),
+                     fused_wire_path=fused)
+    grng = np.random.default_rng(42)
+    for _ in range(steps):
+        for w in range(workers):
+            fab.pull(w)
+        for w in range(workers):
+            g = grng.standard_normal(n).astype(np.float32) * 0.1
+            fab.push(w, jnp.asarray(g))
+    return fab
+
+
+@pytest.mark.parametrize("codec", ["bf16", "int8"])
+@pytest.mark.parametrize("mode,topo_on,rack_agg", [
+    ("sync", False, False),   # worker-NIC codec straight to the PS
+    ("sync", True, True),     # ToR combining; wire-direct on the uplink
+    ("sync", True, False),    # two-tier wire, per-worker core streams
+    ("async", True, True),    # per-push apply, K=1
+])
+def test_fabric_fused_bit_parity(codec, mode, topo_on, rack_agg):
+    ff = _run_fabric(codec, mode, topo_on, rack_agg, True)
+    fu = _run_fabric(codec, mode, topo_on, rack_agg, False)
+    _assert_bit_equal(ff.params, fu.params,
+                      f"fabric params ({codec}/{mode}/topo={topo_on})")
+    assert ff.stats.fused_wire_rounds > 0
+    assert fu.stats.fused_wire_rounds == 0
+    # wire accounting must not depend on the representation shipped
+    assert ff.stats.bytes_pushed == fu.stats.bytes_pushed
+    assert ff.stats.bytes_core_link == fu.stats.bytes_core_link
+
+
+def test_fabric_quorum_subset_bit_parity():
+    ff = _run_fabric("int8", "sync", True, True, True, quorum=0.5)
+    fu = _run_fabric("int8", "sync", True, True, False, quorum=0.5)
+    _assert_bit_equal(ff.params, fu.params, "quorum fabric params")
+    assert ff.stats.fused_wire_rounds > 0
+
+
+def test_fabric_codec_none_falls_back():
+    """Raw f32 has no decode stage to fuse: the knob must be a no-op."""
+    ff = _run_fabric("none", "sync", True, True, True)
+    fu = _run_fabric("none", "sync", True, True, False)
+    _assert_bit_equal(ff.params, fu.params, "codec-none fabric params")
+    assert ff.stats.fused_wire_rounds == 0
+    assert fu.stats.fused_wire_rounds == 0
+
+
+def test_fabric_unsupported_chunk_falls_back():
+    """A chunk size that does not fill whole int8 tiles must route the
+    legacy path even with the knob on."""
+    rng = np.random.default_rng(9)
+    n = 4 * 2048
+    params = {"w": rng.standard_normal(n).astype(np.float32)}
+    space = ParamSpace.build(params, chunk_elems=2048, num_owners=1)
+    fab = PBoxFabric(space, sgd(lr=0.05), space.flatten(params),
+                     num_workers=2, num_shards=1,
+                     compression=CompressionConfig(codec="int8"),
+                     fused_wire_path=True)
+    assert not fab._fused_wire
+    for w in range(2):
+        fab.pull(w)
+    for w in range(2):
+        fab.push(w, jnp.asarray(
+            rng.standard_normal(n).astype(np.float32)))
+    assert fab.stats.fused_wire_rounds == 0
+    assert fab.step == 1
+
+
+def test_tenancy_threads_fused_wire_knob():
+    box_on = MultiJobFabric(num_shards=2, num_racks=2)
+    box_off = MultiJobFabric(num_shards=2, num_racks=2,
+                             fused_wire_path=False)
+    spec = JobSpec(name="j", params={"w": np.zeros(8192, np.float32)},
+                   optimizer=sgd(lr=0.05), num_workers=2, codec="int8")
+    h_on = box_on.attach(spec)
+    h_off = box_off.attach(spec)
+    assert h_on.fabric._fused_wire
+    assert not h_off.fabric._fused_wire
+    # the dedicated counterfactual inherits the box's knob
+    assert dedicated_fabric(spec, box_on)._fused_wire
+    assert not dedicated_fabric(spec, box_off)._fused_wire
