@@ -61,6 +61,7 @@ def _run_fabric_sweep() -> None:
     """Zero-compute drive of the in-process fabric: precomputed gradients,
     shard-count scaling curve from the event clock."""
     from repro.core.chunking import ParamSpace
+    from repro.core.config import FabricConfig, PlacementConfig, WireConfig
     from repro.core.fabric import LinkModel, PBoxFabric
     from repro.optim.optimizers import momentum
 
@@ -71,9 +72,14 @@ def _run_fabric_sweep() -> None:
     grads = [jnp.full((space.flat_elems,), float(w + 1)) for w in range(k)]
     link = LinkModel(wire_us_per_chunk=0.2, agg_us_per_chunk=1.0)
     for n_shards in (1, 2, 4, 8, 16):
-        fab = PBoxFabric(space, momentum(0.1, 0.9), space.flatten(params),
-                         num_workers=k, num_shards=n_shards, link=link,
-                         placement="round_robin")
+        fab = PBoxFabric(
+            space, momentum(0.1, 0.9), space.flatten(params),
+            config=FabricConfig(
+                num_workers=k, num_shards=n_shards,
+                wire=WireConfig(link=link),
+                placement=PlacementConfig(policy="round_robin"),
+            ),
+        )
         for w in range(k):  # compile
             fab.push(w, grads[w])
         steps, t0 = 3, time.perf_counter()

@@ -38,7 +38,13 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit
 from repro.core.chunking import ParamSpace
-from repro.core.fabric import LinkModel, PBoxFabric, WorkerHarness
+from repro.core.config import (
+    FabricConfig,
+    FaultConfig,
+    PlacementConfig,
+    WireConfig,
+)
+from repro.core.fabric import LinkModel, PBoxFabric
 from repro.core.placement import (
     PlacementPlan,
     PlacementProblem,
@@ -72,9 +78,15 @@ def _setup():
 def _make_fabric(space, *, shards, racks, replication=2, plan=None):
     return PBoxFabric(
         space, momentum(0.1, 0.9), jnp.zeros((space.flat_elems,)),
-        num_shards=shards, num_workers=K, link=LINK,
-        topology=NetworkTopology(num_workers=K, num_racks=racks),
-        replication=replication, plan=plan,
+        config=FabricConfig(
+            num_shards=shards, num_workers=K,
+            wire=WireConfig(
+                topology=NetworkTopology(num_workers=K, num_racks=racks),
+                link=LINK,
+            ),
+            faults=FaultConfig(replication=replication),
+            placement=PlacementConfig(plan=plan),
+        ),
     )
 
 

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit
 from repro.core.chunking import ParamSpace
+from repro.core.config import FabricConfig, FaultConfig, WireConfig
 from repro.core.fabric import LinkModel, PBoxFabric
 from repro.core.replication import FaultPlan
 from repro.core.topology import NetworkTopology
@@ -56,8 +57,11 @@ def _run(space, grads, *, shards, replication=1, plan=None):
     topo = NetworkTopology(num_workers=K, num_racks=RACKS)
     fab = PBoxFabric(
         space, momentum(0.1, 0.9), jnp.zeros((space.flat_elems,)),
-        num_shards=shards, num_workers=K, topology=topo, link=LINK,
-        replication=replication, fault_plan=plan,
+        config=FabricConfig(
+            num_shards=shards, num_workers=K,
+            wire=WireConfig(topology=topo, link=LINK),
+            faults=FaultConfig(replication=replication, fault_plan=plan),
+        ),
     )
     for r in range(ROUNDS):
         for w in range(K):

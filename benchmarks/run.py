@@ -34,6 +34,7 @@ def main() -> None:
         replication,
         serve_load,
         sparse_serve,
+        switch_agg,
         table1_frameworks,
         topo_rack_codec,
     )
@@ -51,6 +52,7 @@ def main() -> None:
         "replication": replication.run,
         "serve_load": serve_load.run,
         "sparse_serve": sparse_serve.run,
+        "switch_agg": switch_agg.run,
     }
     only = set(args.only.split(",")) if args.only else None
     if only:

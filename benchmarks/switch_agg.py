@@ -1,0 +1,176 @@
+"""Switch-aggregation sweep: slot count x workers x codec on the fabric.
+
+The paper's stated future direction is in-network aggregation on
+programmable switches; the switch tier (core/topology.SwitchCompute)
+models it SwitchML-style — a bounded pool of integer slot registers per
+ToR (plus an optional core pool), full-slab-or-nothing offload over the
+int8 wire codec, software fallback everywhere else.  This sweep drives
+the fabric with precomputed gradients across the slot-budget frontier
+and reports what the pools absorb.
+
+Derived columns per config:
+  off_rounds   rounds the ToR pools actually offloaded
+  fb_rounds    rounds that fell back to ToR software aggregation
+  pool_KiB     bytes aggregated inside switch pools, per round, KiB
+  saved_KiB    PS-ingress bytes the core pool absorbed, per round, KiB
+
+Must hold (asserted here, unit-tested in tests/test_switch.py):
+  * codec "none": the switch tier never engages — parameters are
+    bit-identical to the plain rack tier with no switch attached;
+  * pool exhaustion (slots < chunks): full software fallback —
+    bit-identical to a no-switch twin;
+  * FaultPlan-driven switch failure: every post-failure round falls
+    back bit-exactly (whole run matches the no-switch twin when the
+    pools fail before the first round completes);
+  * across {1,2,4} racks x {1,2,8} shards.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core.chunking import ParamSpace
+from repro.core.compression import CompressionConfig
+from repro.core.config import FabricConfig, FaultConfig, SwitchConfig, WireConfig
+from repro.core.fabric import LinkModel, PBoxFabric
+from repro.core.replication import FaultEvent, FaultPlan
+from repro.core.topology import NetworkTopology
+from repro.optim.optimizers import momentum
+
+K = 8  # workers
+ROUNDS = 3
+CHUNK_ELEMS = 4096  # int8 fused-wire granule (kernels/wire_path)
+
+
+def _make_setup():
+    params = {"w": jnp.zeros((8 * CHUNK_ELEMS - 512,))}  # 8 chunks
+    space = ParamSpace.build(params, chunk_elems=CHUNK_ELEMS)
+    rng = np.random.default_rng(0)
+    grads = [
+        jnp.asarray(rng.standard_normal(space.flat_elems), jnp.float32)
+        for _ in range(K)
+    ]
+    return space, grads
+
+
+def _run(space, grads, *, shards, racks, codec="int8", switch=None,
+         plan=None):
+    topo = (NetworkTopology(num_workers=K, num_racks=racks)
+            if racks > 1 else NetworkTopology(num_workers=K))
+    fab = PBoxFabric(
+        space, momentum(0.1, 0.9), jnp.zeros((space.flat_elems,)),
+        config=FabricConfig(
+            num_shards=shards, num_workers=K,
+            wire=WireConfig(
+                topology=topo,
+                compression=CompressionConfig(codec=codec),
+                link=LinkModel(wire_us_per_chunk=1.0, agg_us_per_chunk=0.2),
+                switch=switch or SwitchConfig(),
+            ),
+            faults=FaultConfig(fault_plan=plan),
+        ),
+    )
+    for r in range(ROUNDS):
+        for w in range(K):
+            fab.pull(w)
+            fab.push(w, grads[(w + r) % K])
+    return fab
+
+
+def _assert_bit_identical(a, b, what: str) -> None:
+    assert np.array_equal(np.asarray(a.params), np.asarray(b.params)), (
+        f"switch_agg: {what} must be bit-identical to its no-switch twin")
+
+
+def run() -> None:
+    space, grads = _make_setup()
+    c = space.num_chunks
+
+    # -- headline invariants, {1,2,4} racks x {1,2,8} shards ------------
+    full = SwitchConfig(enabled=True, tor_slots=c, core_slots=0)
+    tight = SwitchConfig(enabled=True, tor_slots=c - 1, core_slots=0)
+    for racks in (1, 2, 4):
+        fail_all = FaultPlan(events=tuple(
+            FaultEvent(round=1, kind="switch_fail", target=r)
+            for r in range(racks)))
+        for shards in (1, 2, 8):
+            kw = dict(shards=shards, racks=racks)
+            # codec "none": integer pools never engage
+            _assert_bit_identical(
+                _run(space, grads, codec="none", switch=full, **kw),
+                _run(space, grads, codec="none", **kw),
+                f"codec none r{racks}s{shards}")
+            # pool exhaustion: slots < chunks -> full software fallback
+            _assert_bit_identical(
+                _run(space, grads, switch=tight, **kw),
+                _run(space, grads, **kw),
+                f"exhausted pool r{racks}s{shards}")
+            # switch failure before the first round edge -> every round
+            # takes the fallback path
+            _assert_bit_identical(
+                _run(space, grads, switch=full, plan=fail_all, **kw),
+                _run(space, grads, plan=fail_all, **kw),
+                f"failed pool r{racks}s{shards}")
+
+    # -- slot-budget sweep ----------------------------------------------
+    shards = 2
+    for racks in (2, 4):
+        base = _run(space, grads, shards=shards, racks=racks)
+        for slots, label in ((c - 1, "starved"), (c, "tor"), (2 * c, "tor")):
+            sw = SwitchConfig(enabled=True, tor_slots=slots, core_slots=0)
+            fab = _run(space, grads, shards=shards, racks=racks, switch=sw)
+            s = fab.stats
+            if slots < c:
+                # starved pools must leave the wire untouched
+                assert s.switch_rounds == 0 and s.bytes_switch_agg == 0
+                _assert_bit_identical(fab, base, f"starved r{racks}")
+            else:
+                assert s.switch_rounds == ROUNDS, (
+                    f"switch_agg: {s.switch_rounds} offloaded rounds, "
+                    f"expected {ROUNDS}")
+            emit(
+                f"switch_agg/{label}_racks={racks}_slots={slots}",
+                s.sim_pipelined_us / max(1, s.steps),
+                f"off_rounds={s.switch_rounds};"
+                f"fb_rounds={s.switch_fallback_rounds};"
+                f"pool_KiB={s.bytes_switch_agg / ROUNDS / 1024:.1f};"
+                f"saved_KiB={s.bytes_switch_saved / ROUNDS / 1024:.1f}",
+            )
+
+    # -- core pool: the cross-rack combine ------------------------------
+    for racks in (2, 4):
+        sw = SwitchConfig(enabled=True, tor_slots=c, core_slots=c)
+        fab = _run(space, grads, shards=shards, racks=racks, switch=sw)
+        s = fab.stats
+        assert s.core_switch_rounds == ROUNDS, (
+            f"switch_agg: core pool ran {s.core_switch_rounds} rounds, "
+            f"expected {ROUNDS}")
+        # the pool lands ONE stream at the PS: (racks - 1) ingress
+        # streams absorbed, exact byte accounting
+        from repro.core.compression import wire_bytes
+        expect = ROUNDS * (racks - 1) * wire_bytes(
+            fab.compression, space.flat_elems)
+        assert s.bytes_switch_saved == expect, (
+            f"switch_agg: saved {s.bytes_switch_saved} B, expected {expect}")
+        emit(
+            f"switch_agg/core_racks={racks}_slots={c}",
+            s.sim_pipelined_us / max(1, s.steps),
+            f"off_rounds={s.switch_rounds};"
+            f"fb_rounds={s.switch_fallback_rounds};"
+            f"pool_KiB={s.bytes_switch_agg / ROUNDS / 1024:.1f};"
+            f"saved_KiB={s.bytes_switch_saved / ROUNDS / 1024:.1f}",
+        )
+
+    # -- ASCII frontier --------------------------------------------------
+    print("# switch_agg: pool bytes absorbed per round (2 shards)")
+    for racks in (2, 4):
+        sw = SwitchConfig(enabled=True, tor_slots=c, core_slots=c)
+        fab = _run(space, grads, shards=shards, racks=racks, switch=sw)
+        kib = fab.stats.bytes_switch_agg / ROUNDS / 1024
+        print(f"# racks={racks} " + "#" * int(kib / 8) + f" {kib:.0f} KiB")
+
+
+if __name__ == "__main__":
+    run()

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from benchmarks.common import emit
 from repro.configs.registry import get_arch
 from repro.core.chunking import ParamSpace
+from repro.core.config import FabricConfig, PlacementConfig, WireConfig
 from repro.core.fabric import LinkModel, PBoxFabric, WorkerHarness
 from repro.data.synthetic import image_batches
 from repro.models import resnet as RN
@@ -53,7 +54,7 @@ def run() -> None:
     base = None
     for k in (1, 2, 4, 8):
         srv = PBoxFabric(space, momentum(0.1, 0.9), space.flatten(params),
-                         num_workers=k)
+                         config=FabricConfig(num_workers=k))
         h = WorkerHarness(srv, grad_fn, lambda w, s: (w, s))
         h.run(1)  # compile
         t0 = time.perf_counter()
@@ -70,9 +71,14 @@ def run() -> None:
     k = 4
     link = LinkModel(wire_us_per_chunk=0.2, agg_us_per_chunk=1.0)
     for n_shards in (1, 2, 4, 8):
-        srv = PBoxFabric(space, momentum(0.1, 0.9), space.flatten(params),
-                         num_workers=k, num_shards=n_shards, link=link,
-                         placement="round_robin")
+        srv = PBoxFabric(
+            space, momentum(0.1, 0.9), space.flatten(params),
+            config=FabricConfig(
+                num_workers=k, num_shards=n_shards,
+                wire=WireConfig(link=link),
+                placement=PlacementConfig(policy="round_robin"),
+            ),
+        )
         h = WorkerHarness(srv, grad_fn, lambda w, s: (w, s))
         h.run(1)  # compile
         t0 = time.perf_counter()

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from benchmarks.common import emit
 from repro.core.chunking import ParamSpace
 from repro.core.compression import CompressionConfig
+from repro.core.config import FabricConfig, PlacementConfig, WireConfig
 from repro.core.fabric import LinkModel, PBoxFabric
 from repro.core.topology import NetworkTopology
 from repro.optim.optimizers import momentum
@@ -48,10 +49,15 @@ def _make_setup():
 def _run(space, grads, *, shards, topo=None, codec="none"):
     fab = PBoxFabric(
         space, momentum(0.1, 0.9), jnp.zeros((space.flat_elems,)),
-        num_shards=shards, num_workers=K, topology=topo,
-        compression=CompressionConfig(codec=codec),
-        link=LinkModel(wire_us_per_chunk=1.0, agg_us_per_chunk=0.2),
-        placement="round_robin",
+        config=FabricConfig(
+            num_shards=shards, num_workers=K,
+            wire=WireConfig(
+                topology=topo,
+                compression=CompressionConfig(codec=codec),
+                link=LinkModel(wire_us_per_chunk=1.0, agg_us_per_chunk=0.2),
+            ),
+            placement=PlacementConfig(policy="round_robin"),
+        ),
     )
     for _ in range(ROUNDS):
         for w in range(K):

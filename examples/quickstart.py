@@ -8,6 +8,7 @@ import jax.numpy as jnp
 
 from repro.configs.registry import get_arch
 from repro.core.chunking import ParamSpace
+from repro.core.config import FabricConfig
 from repro.core.fabric import PBoxFabric, WorkerHarness
 from repro.data.synthetic import lm_batches
 from repro.models.common import Dist
@@ -25,7 +26,7 @@ def main() -> None:
     space = ParamSpace.build(params)
     print(space.describe())
     srv = PBoxFabric(space, adamw(3e-3), space.flatten(params),
-                     num_shards=4, num_workers=2)
+                     config=FabricConfig(num_shards=4, num_workers=2))
 
     streams = [lm_batches(cfg.vocab, 4, 32, seed=w) for w in range(2)]
     lossg = jax.jit(jax.value_and_grad(

@@ -64,6 +64,7 @@ PER_BENCH_TOLERANCE = {
     "serve_load": 0.05,  # p99 read latency is pure event-clock time
     "sparse_serve": 0.05,  # hot-row p99 is pure event-clock time too
     "kernel": 0.05,  # wire_model rows are exact bytes-touched accounting
+    "switch_agg": 0.05,  # event-clock time + exact pool byte accounting
 }
 
 

@@ -1,0 +1,102 @@
+#!/usr/bin/env python3
+"""CI gate: no in-repo production code on the deprecated fabric surface.
+
+``PBoxFabric`` is constructed from a single ``FabricConfig``
+(core/config.py); the loose-keyword spread is a deprecated back-compat
+adapter that warns once per call site and will eventually be removed.
+This script AST-scans ``src/`` and ``benchmarks/`` (``launch/`` lives
+inside src) for ``PBoxFabric(...)`` / ``PHubServer``-subclass call sites
+passing any legacy keyword, and fails if it finds one.  ``tests/`` is
+exempt on purpose — the adapter's behavior (warning cadence, config
+equivalence) is itself under test there.
+
+Stdlib-only: core/config.py imports nothing outside the stdlib, so the
+legacy-keyword registry loads without jax installed.
+
+  python scripts/check_deprecated.py            # gate (exit 1 on hits)
+  python scripts/check_deprecated.py --list     # print the registry
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import importlib.util
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+SCAN_DIRS = ("src", "benchmarks", "examples")
+CONSTRUCTORS = {"PBoxFabric"}
+
+
+def legacy_kwargs() -> dict[str, str]:
+    """The kwarg -> config-path registry, loaded straight from
+    core/config.py by file path (no package import, no jax)."""
+    spec = importlib.util.spec_from_file_location(
+        "_repro_config", REPO / "src" / "repro" / "core" / "config.py")
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules[spec.name] = mod  # dataclass machinery looks the module up
+    spec.loader.exec_module(mod)
+    return dict(mod.LEGACY_KWARGS)
+
+
+def _call_name(node: ast.Call) -> str | None:
+    f = node.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return None
+
+
+def scan_file(path: Path, legacy: dict[str, str]) -> list[tuple[int, str]]:
+    try:
+        tree = ast.parse(path.read_text(), filename=str(path))
+    except SyntaxError as e:  # a broken file is its own CI failure
+        return [(e.lineno or 0, f"syntax error: {e.msg}")]
+    hits: list[tuple[int, str]] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if _call_name(node) not in CONSTRUCTORS:
+            continue
+        bad = sorted(kw.arg for kw in node.keywords
+                     if kw.arg is not None and kw.arg in legacy)
+        if bad:
+            hits.append((node.lineno, ", ".join(bad)))
+    return hits
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--list", action="store_true",
+                    help="print the legacy-kwarg registry and exit")
+    args = ap.parse_args()
+    legacy = legacy_kwargs()
+    if args.list:
+        for kw, path in sorted(legacy.items()):
+            print(f"{kw:20s} -> FabricConfig.{path}")
+        return 0
+    failures = 0
+    for d in SCAN_DIRS:
+        root = REPO / d
+        if not root.is_dir():
+            continue
+        for path in sorted(root.rglob("*.py")):
+            for lineno, detail in scan_file(path, legacy):
+                failures += 1
+                rel = path.relative_to(REPO)
+                print(f"{rel}:{lineno}: deprecated PBoxFabric keyword(s) "
+                      f"[{detail}] — build a core.config.FabricConfig and "
+                      "pass config=... (docs/api.md)")
+    if failures:
+        print(f"\n{failures} deprecated call site(s); the legacy-kwarg "
+              "path is for out-of-repo callers and tests only.")
+        return 1
+    print(f"check_deprecated: clean ({', '.join(SCAN_DIRS)}; "
+          f"{len(legacy)} legacy kwargs gated)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

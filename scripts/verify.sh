@@ -20,10 +20,15 @@ python -m pytest -x -q "$@"
 # serve-never-perturbs-training; hot-row exact invalidation + sparse
 # sharding independence + exact row wire accounting; default-vs-solved
 # plan bit-identity + closed-loop autoscale bit-identity; fused wire-path
-# bit-parity vs the unfused three-program pipeline) are asserted inside
-# and fail the run if violated
+# bit-parity vs the unfused three-program pipeline; switch-tier
+# exhaustion/failure fallback bit-identity + exact pool byte accounting)
+# are asserted inside and fail the run if violated
 python -m benchmarks.run \
-    --only topo,multijob,replication,serve_load,sparse_serve,placement,kernel >/dev/null
+    --only topo,multijob,replication,serve_load,sparse_serve,placement,kernel,switch_agg >/dev/null
+
+# no in-repo production code on the deprecated PBoxFabric kwarg path
+# (src/, benchmarks/, examples/; tests exempt — stdlib-only AST scan)
+python scripts/check_deprecated.py
 
 # docs are part of tier-1: intra-repo links/anchors in README + docs/
 # must resolve (stdlib-only checker, no network)

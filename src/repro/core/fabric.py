@@ -90,13 +90,20 @@ from repro.core.compression import (
     roundtrip,
     wire_bytes,
 )
+from repro.core.config import FabricConfig, warn_legacy_call
 from repro.core.placement import (
     PlacementPlan,
     PlanDelta,
     chunk_rebalance_delta,
 )
 from repro.core.replication import FaultPlan, ReplicaGroup, ShardLost
-from repro.core.topology import NetworkTopology, RackAggregator
+from repro.core.topology import (
+    NetworkTopology,
+    RackAggregator,
+    SwitchCompute,
+    group_scale,
+    integer_quantize,
+)
 from repro.kernels.fused_agg_opt.kernel import LANES, SUBLANES
 from repro.kernels.fused_agg_opt.ops import fused_aggregate_update
 from repro.kernels.wire_path.ops import fused_wire_update, wire_path_supported
@@ -138,6 +145,14 @@ class ServerStats:
     # fused wire path (kernels/wire_path): rounds whose shard updates
     # consumed wire payloads directly in the single-pass kernel
     fused_wire_rounds: int = 0
+    # in-network switch tier (core/topology.SwitchCompute)
+    switch_rounds: int = 0  # rounds >= 1 ToR pool aggregated its slab
+    switch_fallback_rounds: int = 0  # pool-refused rounds (software path)
+    core_switch_rounds: int = 0  # rounds the core pool combined rack streams
+    bytes_switch_agg: int = 0  # wire bytes absorbed into switch pools
+    bytes_switch_saved: int = 0  # PS-ingress bytes the core pool absorbed
+    switch_failures: int = 0
+    switch_restores: int = 0
     # event-ordered simulator clock (µs of simulated time, cumulative)
     sim_wire_us: float = 0.0
     sim_core_wire_us: float = 0.0  # oversubscribed core stage (topology)
@@ -375,50 +390,51 @@ class PBoxFabric:
         spec: OptimizerSpec,
         init_flat: jax.Array,
         *,
-        num_shards: int = 1,
-        mode: str = "sync",  # "sync" | "async" | "stale"
-        staleness: int = 0,
-        num_workers: int = 1,
-        min_push_fraction: float = 1.0,
-        use_pallas: bool = True,
-        fused_wire_path: bool = True,
-        link: LinkModel | None = None,
-        placement: str = "contiguous",  # | "round_robin"
-        topology: NetworkTopology | None = None,
-        compression: CompressionConfig | None = None,
-        namespace: str | None = None,
-        chunk_base: int = 0,
+        config: FabricConfig | None = None,
         shared_clock: Any | None = None,
-        replication: int = 1,
-        fault_plan: FaultPlan | None = None,
-        plan: PlacementPlan | None = None,
+        **legacy: Any,
     ):
-        if mode not in ("sync", "async", "stale"):
-            raise ValueError(f"unknown mode {mode}")
-        if num_shards < 1:
-            raise ValueError("num_shards must be >= 1")
-        if replication < 1:
-            raise ValueError("replication factor must be >= 1")
-        if placement not in ("contiguous", "round_robin"):
-            raise ValueError(f"unknown placement {placement}")
-        if topology is not None and topology.num_workers != num_workers:
-            raise ValueError(
-                f"topology is for {topology.num_workers} workers, fabric has "
-                f"{num_workers}"
-            )
+        # Primary surface: one validated FabricConfig (core/config.py).
+        # The pre-consolidation keyword spread is still accepted through
+        # the from_legacy_kwargs adapter, which warns once per call site
+        # — scripts/check_deprecated.py keeps src/ and benchmarks/ off
+        # that path (tests exercise it on purpose).  ``shared_clock``
+        # stays a live constructor argument: it is a *runtime* link to
+        # the owning MultiJobFabric, not a reproducible config value.
+        if config is not None and legacy:
+            raise TypeError(
+                "pass config=FabricConfig(...) or legacy keywords, not "
+                f"both (got legacy {sorted(legacy)})")
+        if config is None:
+            if legacy:
+                warn_legacy_call()
+            config = FabricConfig.from_legacy_kwargs(**legacy)
+        # every cross-field rule fails HERE, before any state is built
+        config.validate()
+        self.config = config
+        num_shards = config.num_shards
+        mode = config.mode
+        num_workers = config.num_workers
+        use_pallas = config.use_pallas
+        placement = config.placement.policy
+        topology: NetworkTopology | None = config.wire.topology
+        compression = config.wire.compression
+        fused_wire_path = config.wire.fused_wire_path
+        replication = config.faults.replication
+        fault_plan: FaultPlan | None = config.faults.fault_plan
+        plan = config.placement.plan
         self.space = space
         self.spec = spec
         self.mode = mode
         self.staleness = (
-            staleness if mode == "stale" else (0 if mode == "sync" else 1 << 30)
+            config.staleness if mode == "stale"
+            else (0 if mode == "sync" else 1 << 30)
         )
         self.num_workers = num_workers
         self.num_shards = num_shards
-        if not 0.0 < min_push_fraction <= 1.0:
-            raise ValueError("min_push_fraction must be in (0, 1]")
-        self.min_push_fraction = min_push_fraction
+        self.min_push_fraction = config.min_push_fraction
         self.use_pallas = use_pallas
-        self.link = link or LinkModel()
+        self.link = config.wire.link or LinkModel()
         # placement layer (core/placement.py): every fabric runs under a
         # plan.  None means the default plan — provably bit-identical to
         # the pre-placement-layer heuristics (the default plan's chain
@@ -444,10 +460,8 @@ class PBoxFabric:
         # MultiJobFabric inflate this job's wire stages for co-tenant
         # contention.  Both only affect routing metadata and the event
         # clock — numerics stay those of a dedicated fabric by construction.
-        if chunk_base < 0:
-            raise ValueError("chunk_base must be >= 0")
-        self.namespace = namespace
-        self.chunk_base = chunk_base
+        self.namespace = config.namespace
+        self.chunk_base = config.chunk_base
         self.shared_clock = shared_clock
         # codec chunks align with PS chunks so per-chunk scales ride the
         # same wire framing
@@ -471,13 +485,36 @@ class PBoxFabric:
             and wire_path_supported(self.compression.codec, spec,
                                     space.chunk_elems)
         )
+        # in-network switch tier (core/topology.SwitchCompute): each ToR
+        # optionally owns a bounded pool of aggregation slots; a core-link
+        # pool combines the rack uplinks.  Offload is full-slab-or-nothing
+        # (a pool takes a round iff it is alive and holds >= num_chunks
+        # slots), so exhaustion/failure fallback is the bit-exact software
+        # combine, and codec "none" never engages (the switch does integer
+        # arithmetic over the int8 wire format only).
+        sw = config.wire.switch
+        self.switch_cfg = sw
         self.rack_aggs: list[RackAggregator] = []
         if topology is not None:
             self.rack_aggs = [
-                RackAggregator(r, topology.members(r), self.compression,
-                               space.flat_elems)
+                RackAggregator(
+                    r, topology.members(r), self.compression,
+                    space.flat_elems,
+                    switch=(SwitchCompute(f"tor{r}", sw.tor_slots)
+                            if sw.enabled else None),
+                )
                 for r in range(topology.num_racks)
             ]
+        self.core_switch = (
+            SwitchCompute("core", sw.core_slots)
+            if sw.enabled and sw.core_slots > 0 and topology is not None
+            else None
+        )
+        self._core_ef = (init_ef_state(self.compression, space.flat_elems)
+                         if self.core_switch is not None else None)
+        self._switch_cursor = 0  # fault_plan rounds consumed mid-round
+        self._deferred: set[int] = set()  # raw pushes parked for the switch
+        self._round_switch_chunks = 0  # pool occupancy of the last round
         # without a topology the codec still runs on the worker -> PS wire
         # (byte savings are never reported without their quantization cost);
         # the per-worker NIC error-feedback state lives here instead of at
@@ -681,6 +718,14 @@ class PBoxFabric:
         return (self.topology is not None and self.topology.rack_aggregation
                 and self.mode != "async")
 
+    def _switch_on(self) -> bool:
+        # the switch tier rides the rack tier and speaks only the int8
+        # wire format (integer slot arithmetic) — codec "none"/bf16 keep
+        # the software path, which is what the codec-"none" bit-identity
+        # invariant hangs on
+        return (self._rack_agg_on() and self.switch_cfg.enabled
+                and self.compression.codec == "int8")
+
     def _complete_push(self, worker: int, gchunks: jax.Array) -> None:
         if worker in self.dead_workers:
             raise RuntimeError(
@@ -751,7 +796,21 @@ class PBoxFabric:
         wire: WirePayload | None = None
         if self.topology is not None:
             rack = self.rack_aggs[self.topology.rack_of[worker]]
-            if self._fused_wire and not self._rack_agg_on():
+            if (self._switch_on() and rack.switch is not None
+                    and rack.switch.alive
+                    and rack.switch.slots >= self.space.num_chunks):
+                # switch-pool candidate: park the slab RAW (the pool's
+                # shared group scale needs every member's magnitude, so
+                # quantization waits for _rack_aggregate) and book the
+                # rack-link crossing now.  Full-slab-or-nothing: a pool
+                # that cannot hold every chunk never engages, so the
+                # fallback is the bit-exact software combine.  The final
+                # offload decision (can_offload) happens at the round
+                # edge — a switch_fail consumed mid-round between this
+                # push and aggregation flips the whole rack to fallback.
+                rack.ingest_deferred(worker)
+                self._deferred.add(worker)
+            elif self._fused_wire and not self._rack_agg_on():
                 wire = rack.ingest_wire(worker, gchunks.reshape(-1))
             else:
                 dec = rack.ingest(worker, gchunks.reshape(-1))
@@ -846,6 +905,7 @@ class PBoxFabric:
                     grads = jnp.stack([self._inbox[w][ids] for w in workers])
                     shard.apply(grads, self.step, average=True)
         self._inbox.clear()
+        self._deferred.clear()
         self.stats.steps += 1
         self._drops_since_step = 0
         self._simulate_round(streams=streams)
@@ -874,15 +934,32 @@ class PBoxFabric:
         shape keeps XLA's fusion/FMA choices identical, which makes the
         bit-equality structural rather than incidental).  The averaging
         divisor is the worker count either way."""
+        # switch faults land mid-round: a pool scheduled to fail at this
+        # round must refuse THIS round's offload (the fallback edge the
+        # bit-identity invariant tests), not next round's
+        self._consume_switch_faults()
+        self._round_switch_chunks = 0
         streams: list[jax.Array] = []
         wire_streams: list[WirePayload] = []
         shipped = 0
         present = set(workers)
+        c = self.space.num_chunks
+        active = [(rack, [w for w in rack.members if w in present])
+                  for rack in self.rack_aggs]
+        active = [(rack, members) for rack, members in active if members]
+        # core pool: engages only when >= 2 rack streams would cross the
+        # core link (a single stream has nothing to combine with) and the
+        # fused wire path can carry the pool's re-encoded egress
+        use_core = (
+            self._switch_on() and self.core_switch is not None
+            and self._fused_wire and len(active) >= 2
+            and self.core_switch.can_offload(c)
+        )
+        core_racks: list[RackAggregator] = []
+        core_slabs: list[jax.Array] = []
+        offloaded = fallback = False
         carry = None  # codec "none": running prefix chained through racks
-        for rack in self.rack_aggs:
-            members = [w for w in rack.members if w in present]
-            if not members:
-                continue
+        for rack, members in active:
             if self.compression.codec == "none":
                 for w in members:
                     g = self._inbox[w]
@@ -890,11 +967,34 @@ class PBoxFabric:
                 relay = rack.uplink(carry.reshape(-1)).reshape(carry.shape)
                 streams = [relay]  # the chain's latest prefix supersedes
             else:
-                local = None
-                for w in members:
-                    g = self._inbox[w]
-                    local = g if local is None else local + g
-                if self._fused_wire:
+                if any(w in self._deferred for w in members):
+                    # the rack's pushes were parked raw for the pool;
+                    # can_offload is the round-edge decision — a pool that
+                    # failed since push time flips the whole rack to the
+                    # bit-exact software combine
+                    pushes = [(w, self._inbox[w].reshape(-1))
+                              for w in members]
+                    if rack.switch.can_offload(c):
+                        local = rack.switch_combine(pushes)
+                        self._round_switch_chunks += c
+                        self.stats.bytes_switch_agg += (
+                            (self.space.flat_elems + 4 * c) * len(pushes))
+                        offloaded = True
+                    else:
+                        local = rack.software_combine(pushes)
+                        fallback = True
+                    local = local.reshape(c, self.space.chunk_elems)
+                else:
+                    local = None
+                    for w in members:
+                        g = self._inbox[w]
+                        local = g if local is None else local + g
+                if use_core:
+                    # stage for the core pool — quantization is coordinated
+                    # across racks below (shared group scale)
+                    core_racks.append(rack)
+                    core_slabs.append(rack.uplink_pool(local.reshape(-1)))
+                elif self._fused_wire:
                     # fused wire path: the re-encoded rack stream crosses
                     # the core *still encoded*; the shards' single-pass
                     # kernel decodes it in VMEM (same switch EF + bytes)
@@ -906,7 +1006,51 @@ class PBoxFabric:
             self.stats.bytes_core_link += wire_bytes(self.compression,
                                                      self.space.flat_elems)
             self.stats.rack_streams += 1
+            if use_core:
+                continue  # single PS-ingress stream, charged at pool egress
             # shard ingress: one combined stream per rack reaches the PS
+            for shard in self.shards:
+                shard.stats.chunk_pushes += shard.num_chunks
+                shard.stats.bytes_pushed += wire_bytes(self.compression,
+                                                       shard.num_elems)
+        if offloaded:
+            self.stats.switch_rounds += 1
+        if fallback:
+            self.stats.switch_fallback_rounds += 1
+        if use_core:
+            # Core-pool crossing: the racks negotiate ONE shared per-chunk
+            # scale (group_scale — max magnitude across rack slabs), each
+            # ships int8 under it, and the pool's slot registers sum with
+            # exact int32 adds.  The pool egress re-encodes once with the
+            # core switch's own error feedback, so a single stream lands
+            # at the PS ingress no matter how many racks fed the pool —
+            # that absorbed landing is the tier's bandwidth win
+            # (bytes_switch_saved); each rack stream still pays its own
+            # core-link segment up to the switch (bytes_core_link above).
+            e = self.space.chunk_elems
+            s_sh = group_scale(core_slabs, e)
+            s_elems = jnp.repeat(s_sh, e)
+            qs = []
+            for rack, slab2 in zip(core_racks, core_slabs):
+                q = integer_quantize(slab2, s_sh, e)
+                rack.commit_uplink(slab2, q, s_elems)
+                qs.append(q)
+            acc = self.core_switch.accumulate(qs, e)
+            self._round_switch_chunks += c
+            dec = acc.astype(jnp.float32) * s_elems
+            slab_c = dec + self._core_ef if self._core_ef is not None else dec
+            s_c = group_scale([slab_c], e)
+            q_c = integer_quantize(slab_c, s_c, e)
+            if self._core_ef is not None:
+                self._core_ef = (
+                    slab_c - q_c.astype(jnp.float32) * jnp.repeat(s_c, e))
+            wire_streams.append(WirePayload("int8", q_c, s_c))
+            self.stats.core_switch_rounds += 1
+            self.stats.bytes_switch_agg += (
+                (self.space.flat_elems + 4 * c) * len(qs))
+            self.stats.bytes_switch_saved += (
+                (len(core_racks) - 1)
+                * wire_bytes(self.compression, self.space.flat_elems))
             for shard in self.shards:
                 shard.stats.chunk_pushes += shard.num_chunks
                 shard.stats.bytes_pushed += wire_bytes(self.compression,
@@ -1023,6 +1167,14 @@ class PBoxFabric:
                 core_demand_us=c * core / core_scale,
                 makespan_us=makespan,
             )
+            # switch-pool occupancy joins the box's weighted-fair link
+            # accounting.  Optional protocol method (hasattr-guarded, not
+            # a record_round parameter) so existing clock shims — test
+            # mocks included — keep working unmodified.
+            if (self._round_switch_chunks
+                    and hasattr(self.shared_clock, "record_switch")):
+                self.shared_clock.record_switch(
+                    self, pool_us=self._round_switch_chunks * agg)
 
     # -- fault tier: chain replication / failover / injection -------------
     def _hop_cost(self, src_rack: int, dst_rack: int) -> float:
@@ -1082,15 +1234,59 @@ class PBoxFabric:
     def _fire_faults(self) -> None:
         """Inject every scheduled fault whose round the event clock just
         passed.  Rounds are the only crash points — deterministic,
-        replayable, and always after the round's chain replication."""
+        replayable, and always after the round's chain replication.
+        Switch faults are the one exception: they are consumed *mid*-round
+        (``_consume_switch_faults``, own cursor) so a pool scheduled to
+        fail at round r refuses round r's offload — here they only catch
+        up on rounds that never reached ``_rack_aggregate``."""
         if self.fault_plan is None:
             return
+        self._consume_switch_faults()
         due = self.fault_plan.between(self._fault_cursor, self.step)
         self._fault_cursor = self.step
         for ev in due:
             self._apply_fault(ev)
 
+    def _consume_switch_faults(self) -> None:
+        """Fire due ``switch_fail``/``switch_restore`` events.  Runs at
+        the top of ``_rack_aggregate`` — BEFORE the round's offload
+        decision — on a cursor separate from ``_fault_cursor`` (the other
+        kinds still fire at the round edge, after replication).  Target
+        rack id flips that ToR's pool; target == num_racks flips the core
+        pool.  Without a switch tier the events are recorded as ignored —
+        a plan stays replayable on any fabric."""
+        if self.fault_plan is None:
+            return
+        due = self.fault_plan.between(self._switch_cursor, self.step)
+        self._switch_cursor = self.step
+        n_racks = len(self.rack_aggs)
+        for ev in due:
+            if ev.kind not in ("switch_fail", "switch_restore"):
+                continue
+            rec: dict[str, Any] = {"round": int(self.step),
+                                   "event": ev.to_json()}
+            if not 0 <= ev.target <= n_racks:
+                raise ValueError(
+                    f"{ev.kind} targets switch {ev.target}; the fabric has "
+                    f"{n_racks} ToR pools + 1 core pool")
+            sw = (self.core_switch if ev.target == n_racks
+                  else self.rack_aggs[ev.target].switch
+                  if self.rack_aggs else None)
+            if sw is None:
+                rec["action"] = "ignored_no_switch_tier"
+            elif ev.kind == "switch_fail":
+                sw.fail()
+                self.stats.switch_failures += 1
+                rec["action"] = f"switch_failed:{sw.name}"
+            else:
+                sw.restore()
+                self.stats.switch_restores += 1
+                rec["action"] = f"switch_restored:{sw.name}"
+            self.fault_trace.append(rec)
+
     def _apply_fault(self, ev) -> None:
+        if ev.kind in ("switch_fail", "switch_restore"):
+            return  # consumed mid-round by _consume_switch_faults
         rec: dict[str, Any] = {"round": int(self.step), "event": ev.to_json()}
         if ev.kind == "shard_crash":
             self.fault_trace.append(rec)  # record before a possible raise
@@ -1177,6 +1373,7 @@ class PBoxFabric:
         self.dead_workers.add(worker)
         self.stats.workers_crashed += 1
         self._staged.pop(worker, None)
+        self._deferred.discard(worker)  # a parked raw push dies in flight
         dropped = self._inbox.pop(worker, None)
         if dropped is not None:
             self.worker_clock[worker] -= 1  # that push never happened
@@ -1517,8 +1714,13 @@ class PBoxFabric:
         self._drops_since_step = 0
         self._inbox.clear()
         self._staged.clear()
+        self._deferred.clear()
         for rack in self.rack_aggs:
-            rack.reset()
+            rack.reset()  # also revives an attached ToR switch pool
+        if self.core_switch is not None:
+            self.core_switch.reset()
+            self._core_ef = init_ef_state(self.compression,
+                                          self.space.flat_elems)
         self._worker_ef = {
             w: init_ef_state(self.compression, self.space.flat_elems)
             for w in self._worker_ef
@@ -1539,6 +1741,7 @@ class PBoxFabric:
         )
         self._link_degrade.clear()
         self._fault_cursor = self.step
+        self._switch_cursor = self.step
         for group, shard in zip(self.replicas, self.shards):
             group.sync(shard, round_=self.step)  # provisioning, not wire
         # serving caches stamped with rounds from the abandoned timeline
@@ -1582,6 +1785,24 @@ class PBoxFabric:
             f"mode={self.mode}, workers={self.num_workers}, "
             f"codec={self.compression.codec}"
         ]
+        # the full knob surface, round-tripped from the one config object
+        # every fabric now carries (core/config.py) — nothing is omitted
+        # the way ad-hoc lines used to omit newer knobs
+        lines += ["  " + ln for ln in self.config.describe().splitlines()]
+        if self.switch_cfg.enabled:
+            s = self.stats
+            lines.append(
+                f"  switch tier: {s.switch_rounds} rounds offloaded "
+                f"({s.switch_fallback_rounds} fell back, "
+                f"{s.core_switch_rounds} core-pooled), "
+                f"{s.bytes_switch_agg >> 10} KiB absorbed in-pool, "
+                f"{s.bytes_switch_saved >> 10} KiB ingress saved"
+            )
+            for rack in self.rack_aggs:
+                if rack.switch is not None:
+                    lines.append("    " + rack.switch.describe())
+            if self.core_switch is not None:
+                lines.append("    " + self.core_switch.describe())
         if self.topology is not None:
             lines.append("  " + self.topology.describe())
             lines.append(

@@ -61,6 +61,14 @@ FAULT_KINDS = (
     "worker_recover",  # target: worker id — re-entry via snapshot/restore
     "link_degrade",  # target: rack id — rack link slows by ``factor``
     "link_restore",  # target: rack id — degradation lifted
+    # switch tier (core/topology.SwitchCompute): target rack id fails that
+    # ToR's aggregation pool; target == num_racks fails the core pool.
+    # Unlike the kinds above, these are consumed *mid-round* — before the
+    # target round's rack aggregation — so a failed pool never aggregates
+    # its own round and the software fallback is bit-exact
+    # (PBoxFabric._consume_switch_faults).
+    "switch_fail",
+    "switch_restore",
 )
 
 
@@ -159,6 +167,7 @@ class FaultPlan:
         shard_crash_rate: float = 0.0,
         worker_crash_rate: float = 0.0,
         link_degrade_rate: float = 0.0,
+        switch_fail_rate: float = 0.0,
         recover_after: int = 2,
         max_dead_workers: int = 1,
     ) -> "FaultPlan":
@@ -169,7 +178,11 @@ class FaultPlan:
         ``recover_after`` rounds later, and at most ``max_dead_workers``
         are down at once (so quorum admission can still make rounds).
         Link degradations are paired with a ``link_restore`` the following
-        round.  The same (seed, shape) always yields the same plan."""
+        round, and switch failures (uniform over the ``num_racks`` ToR
+        pools plus the core pool at target ``num_racks``) with a
+        ``switch_restore``.  The same (seed, shape) always yields the
+        same plan — rate-zero classes draw nothing, so adding the switch
+        class left every existing seed's schedule untouched."""
         rng = np.random.default_rng(seed)
         events: list[FaultEvent] = []
         down_until: dict[int, int] = {}  # worker -> recovery round
@@ -196,6 +209,12 @@ class FaultPlan:
                 events.append(FaultEvent(r, "link_degrade", rack, factor))
                 if r + 1 <= rounds:
                     events.append(FaultEvent(r + 1, "link_restore", rack))
+            if switch_fail_rate and rng.random() < switch_fail_rate:
+                # target num_racks is the core pool (see FAULT_KINDS)
+                sw = int(rng.integers(num_racks + 1))
+                events.append(FaultEvent(r, "switch_fail", sw))
+                if r + 1 <= rounds:
+                    events.append(FaultEvent(r + 1, "switch_restore", sw))
         return FaultPlan(events)
 
     # -- replayable serialization ---------------------------------------

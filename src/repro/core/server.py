@@ -13,6 +13,7 @@ from __future__ import annotations
 import jax
 
 from repro.core.chunking import ParamSpace
+from repro.core.config import FabricConfig
 from repro.core.fabric import (  # noqa: F401  (re-exported)
     LinkModel,
     PBoxFabric,
@@ -45,10 +46,12 @@ class PHubServer(PBoxFabric):
             space,
             spec,
             init_flat,
-            num_shards=1,
-            mode=mode,
-            staleness=staleness,
-            num_workers=num_workers,
-            min_push_fraction=min_push_fraction,
-            use_pallas=use_pallas,
+            config=FabricConfig(
+                num_shards=1,
+                mode=mode,
+                staleness=staleness,
+                num_workers=num_workers,
+                min_push_fraction=min_push_fraction,
+                use_pallas=use_pallas,
+            ),
         )

@@ -63,6 +63,13 @@ import numpy as np
 
 from repro.core.chunking import DEFAULT_CHUNK_ELEMS, ParamSpace
 from repro.core.compression import CompressionConfig
+from repro.core.config import (
+    FabricConfig,
+    FaultConfig,
+    PlacementConfig,
+    SwitchConfig,
+    WireConfig,
+)
 from repro.core.fabric import LinkModel, PBoxFabric, ServerStats
 from repro.core.topology import LinkQueue, NetworkTopology
 from repro.optim.optimizers import OptimizerSpec
@@ -162,7 +169,7 @@ class JobHandle:
         }
 
 
-def _build_fabric(
+def _job_config(
     spec: JobSpec,
     *,
     num_shards: int,
@@ -171,16 +178,14 @@ def _build_fabric(
     link: LinkModel,
     use_pallas: bool,
     fused_wire_path: bool = True,
+    switch: SwitchConfig | None = None,
     namespace: str | None = None,
     chunk_base: int = 0,
-    shared_clock: Any | None = None,
-) -> PBoxFabric:
-    """One construction path for a job's fabric — used by BOTH the shared
-    box (``MultiJobFabric.attach``) and its dedicated counterfactual
-    (``dedicated_fabric``), so the bit-identity comparison can never
-    silently drift onto differently-configured twins."""
-    space = ParamSpace.build(
-        spec.params, chunk_elems=spec.chunk_elems, num_owners=num_shards)
+) -> FabricConfig:
+    """One job's full fabric configuration — the single source both the
+    shared box and its dedicated counterfactual build from, so the
+    bit-identity comparison can never silently drift onto
+    differently-configured twins."""
     topology = None
     if num_racks > 1 and spec.num_workers > 1:
         topology = NetworkTopology(
@@ -188,25 +193,45 @@ def _build_fabric(
             num_racks=min(num_racks, spec.num_workers),
             oversubscription=oversubscription,
         )
-    return PBoxFabric(
-        space,
-        spec.optimizer,
-        space.flatten(spec.params),
+    return FabricConfig(
         num_shards=num_shards,
         mode=spec.mode,
         staleness=spec.staleness,
         num_workers=spec.num_workers,
         min_push_fraction=spec.min_push_fraction,
         use_pallas=use_pallas,
-        fused_wire_path=fused_wire_path,
-        link=link,
-        topology=topology,
-        compression=CompressionConfig(codec=spec.codec),
         namespace=namespace,
         chunk_base=chunk_base,
+        wire=WireConfig(
+            topology=topology,
+            compression=CompressionConfig(codec=spec.codec),
+            link=link,
+            fused_wire_path=fused_wire_path,
+            switch=switch or SwitchConfig(),
+        ),
+        faults=FaultConfig(replication=spec.replication,
+                           fault_plan=spec.fault_plan),
+        placement=PlacementConfig(),
+    )
+
+
+def _build_fabric(
+    spec: JobSpec,
+    *,
+    num_shards: int,
+    shared_clock: Any | None = None,
+    **cfg_kw: Any,
+) -> PBoxFabric:
+    """Construct one job's fabric from its ``_job_config``."""
+    space = ParamSpace.build(
+        spec.params, chunk_elems=spec.chunk_elems, num_owners=num_shards)
+    cfg = _job_config(spec, num_shards=num_shards, **cfg_kw)
+    return PBoxFabric(
+        space,
+        spec.optimizer,
+        space.flatten(spec.params),
+        config=cfg,
         shared_clock=shared_clock,
-        replication=spec.replication,
-        fault_plan=spec.fault_plan,
     )
 
 
@@ -231,6 +256,7 @@ class MultiJobFabric:
         link: LinkModel | None = None,
         use_pallas: bool = True,
         fused_wire_path: bool = True,
+        switch: SwitchConfig | None = None,
     ):
         if num_shards < 1:
             raise ValueError("num_shards must be >= 1")
@@ -242,6 +268,18 @@ class MultiJobFabric:
         self.link = link or LinkModel()
         self.use_pallas = use_pallas
         self.fused_wire_path = fused_wire_path
+        # physical switch pools (core/topology.SwitchCompute): the box's
+        # ToR and core register files are a shared resource like the
+        # links.  Slot grants are static at attach time and
+        # full-slab-or-nothing — a job gets its whole chunk count from
+        # the per-ToR budget (and the core budget when present) or no
+        # switch tier at all, so every granted job's offload semantics
+        # match a dedicated fabric with the same grant (bit-identity by
+        # construction, tests/test_switch.py).
+        self.switch = switch or SwitchConfig()
+        self._tor_slots_left = self.switch.tor_slots
+        self._core_slots_left = self.switch.core_slots
+        self.switch_grants: dict[str, SwitchConfig] = {}
         self.jobs: dict[str, JobHandle] = {}
         # serve tenants (core/serving.py): read planes attached as
         # co-tenants — they join the fair-share priority totals and book
@@ -258,6 +296,10 @@ class MultiJobFabric:
             **{f"rack{r}": LinkQueue(f"rack{r}") for r in range(num_racks)},
             "core": LinkQueue("core"),
         }
+        if self.switch.enabled:
+            # pool registers contend like a link: per-round occupancy is
+            # booked via the record_switch protocol hook
+            self.links["switch"] = LinkQueue("switch")
         self.rounds = 0  # aggregation rounds across all tenants
 
     # -- tenancy lifecycle ----------------------------------------------
@@ -279,6 +321,7 @@ class MultiJobFabric:
             # jobs: the per-link by_job accounting and the priority
             # totals key on them
             raise ValueError(f"tenant {spec.name!r} is already attached")
+        grant = self._grant_switch(spec)
         fabric = _build_fabric(
             spec,
             num_shards=self.num_shards,
@@ -287,6 +330,7 @@ class MultiJobFabric:
             link=self.link,
             use_pallas=self.use_pallas,
             fused_wire_path=self.fused_wire_path,
+            switch=grant,
             namespace=spec.name,
             chunk_base=self._next_chunk_base,
             shared_clock=self,
@@ -303,17 +347,50 @@ class MultiJobFabric:
         self.jobs[spec.name] = handle
         return handle
 
+    def _grant_switch(self, spec: JobSpec) -> SwitchConfig | None:
+        """Attach-time switch-slot grant, full-slab-or-nothing.
+
+        A training job speaking the int8 wire codec under a rack topology
+        gets its whole chunk count from the per-ToR register budget (and
+        from the core budget when that pool has room) or nothing at all —
+        a partial grant could never engage (``SwitchCompute.can_offload``
+        is all-or-nothing), so handing one out would only strand slots.
+        The grant is recorded in ``switch_grants`` so ``dedicated_fabric``
+        builds the bit-identical twin, and returned on detach."""
+        if (not self.switch.enabled or spec.codec != "int8"
+                or spec.mode == "async"
+                or not (self.num_racks > 1 and spec.num_workers > 1)):
+            return None
+        chunks = ParamSpace.build(
+            spec.params, chunk_elems=spec.chunk_elems,
+            num_owners=self.num_shards).num_chunks
+        if self._tor_slots_left < chunks:
+            return None
+        self._tor_slots_left -= chunks
+        core = 0
+        if self._core_slots_left >= chunks:
+            self._core_slots_left -= chunks
+            core = chunks
+        grant = SwitchConfig(enabled=True, tor_slots=chunks, core_slots=core)
+        self.switch_grants[spec.name] = grant
+        return grant
+
     def detach(self, name: str) -> dict:
         """Evict a job; returns its snapshot (params, optimizer state,
         step, worker clocks) so ``attach(snapshot=...)`` resumes it — on
         this box or another one (elastic re-target included).  Serve
         tenants reading the job detach with it (their planes keep working
-        against the now-dedicated fabric, uncontended)."""
+        against the now-dedicated fabric, uncontended).  Any switch-slot
+        grant returns to the box's register budget."""
         if name not in self.jobs:
             raise KeyError(f"job {name!r} is not attached")
         handle = self.jobs.pop(name)
         handle.detached = True
         self._share_override.pop(name, None)
+        grant = self.switch_grants.pop(name, None)
+        if grant is not None:
+            self._tor_slots_left += grant.tor_slots
+            self._core_slots_left += grant.core_slots
         # a detached job no longer contends (and its handle, if still
         # driven, behaves like a dedicated fabric)
         handle.fabric.shared_clock = None
@@ -500,6 +577,19 @@ class MultiJobFabric:
                 core_us / core_demand_us if core_demand_us > 0 else 1.0)
         self.rounds += 1
 
+    def record_switch(self, fabric: PBoxFabric, *, pool_us: float) -> None:
+        """Book one round's switch-pool occupancy (optional protocol hook
+        — the fabric calls it only when it exists and the round actually
+        offloaded).  Pool registers are box hardware like the links, so
+        their busy time lands on the shared ``switch`` queue under the
+        job's name; slot *capacity* was already reserved statically at
+        attach (``_grant_switch``), so no contention inflation applies."""
+        handle = self.jobs.get(fabric.namespace)
+        q = self.links.get("switch")
+        if handle is None or q is None or pool_us <= 0.0:
+            return
+        q.reserve(handle.name, pool_us, 1.0)
+
     # -- fabric-wide views ----------------------------------------------
     def aggregate_stats(self) -> ServerStats:
         """Sum of every attached job's ServerStats (fabric-wide load)."""
@@ -571,10 +661,11 @@ class MultiJobFabric:
 
 def dedicated_fabric(spec: JobSpec, box: MultiJobFabric) -> PBoxFabric:
     """The job's counterfactual: the same job alone on a dedicated fabric
-    with the same shard count, rack layout, link and codec — the baseline
-    the isolation invariant (and tests/test_tenancy.py) compares against.
-    Built by the exact construction path ``attach`` uses, minus the
-    tenancy hooks."""
+    with the same shard count, rack layout, link, codec — and the same
+    switch-slot grant the box handed the attached job, so a granted
+    tenant's offloaded training compares against an identically-granted
+    twin.  Built by the exact construction path ``attach`` uses, minus
+    the tenancy hooks."""
     return _build_fabric(
         spec,
         num_shards=box.num_shards,
@@ -583,4 +674,5 @@ def dedicated_fabric(spec: JobSpec, box: MultiJobFabric) -> PBoxFabric:
         link=box.link,
         use_pallas=box.use_pallas,
         fused_wire_path=box.fused_wire_path,
+        switch=box.switch_grants.get(spec.name),
     )

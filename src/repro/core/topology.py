@@ -9,7 +9,7 @@ streams *at the ToR* so only one stream per rack crosses the scarce core
 link, cutting cross-rack bytes by ~workers-per-rack (and, with the integer
 codec, a further ~4x).
 
-Three pieces:
+Four pieces:
 
   ``NetworkTopology``   the static layout: workers grouped into contiguous
                         racks, each with an oversubscribed core uplink.
@@ -17,6 +17,13 @@ Three pieces:
                         error-feedback for the edge-link codec, switch-side
                         error-feedback for the re-encoded upstream stream,
                         and per-rack wire accounting.
+  ``SwitchCompute``     one programmable switch's bounded aggregation pool
+                        (SwitchML-style): a fixed number of integer slot
+                        registers that accumulate int8 gradient segments
+                        on the wire.  Slabs that do not fit the pool — or
+                        arrive while the switch is failed — fall back to
+                        the ToR's software path, bit-identically to a
+                        fabric with no switch tier at all.
   ``LinkQueue``         one *shared* physical link's weighted-fair queue —
                         the multi-tenant tier (core/tenancy.py) hangs one
                         off every rack edge link and the core uplink so
@@ -43,6 +50,7 @@ from __future__ import annotations
 import dataclasses
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.compression import (
@@ -53,6 +61,131 @@ from repro.core.compression import (
     roundtrip,
     wire_bytes,
 )
+
+
+# ---------------------------------------------------------------------------
+# switch-pool integer arithmetic
+# ---------------------------------------------------------------------------
+def group_scale(slabs: list[jax.Array], chunk_elems: int) -> jax.Array:
+    """Shared per-chunk quantization scale across ``slabs`` — SwitchML's
+    exponent negotiation: every sender quantizes chunk ``c`` against the
+    *group* maximum magnitude, so the switch can sum the int8 payloads
+    with pure integer adds and one dequantize recovers the group sum.
+
+    Same scale formula as kernels/quant (``amax/127``, 1.0 on an all-zero
+    chunk); with a single slab this is exactly the per-sender scale the
+    software codec uses."""
+    amax = None
+    for slab in slabs:
+        a = jnp.max(
+            jnp.abs(slab.reshape(-1, chunk_elems).astype(jnp.float32)),
+            axis=1)
+        amax = a if amax is None else jnp.maximum(amax, a)
+    return jnp.where(amax > 0, amax / 127.0, 1.0)
+
+
+def integer_quantize(slab: jax.Array, scale: jax.Array,
+                     chunk_elems: int) -> jax.Array:
+    """(N,) f32 -> (N,) int8 under a given per-chunk ``scale`` (C,) —
+    the sender-side half of the switch pool's integer path.  Clip/round
+    expression matches kernels/quant exactly, so a one-slab group is
+    bit-identical to the software codec's quantizer."""
+    c = slab.shape[0] // chunk_elems
+    xc = slab.reshape(c, chunk_elems).astype(jnp.float32)
+    q = jnp.clip(jnp.round(xc / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q.reshape(-1)
+
+
+@dataclasses.dataclass
+class SwitchStats:
+    """One switch pool's accounting."""
+
+    rounds_offloaded: int = 0  # rounds the pool aggregated a whole slab
+    rounds_declined: int = 0  # engaged rounds refused (failed / exhausted)
+    chunks_aggregated: int = 0  # chunk segments accumulated in registers
+    int_adds: int = 0  # integer additions the pool performed
+    bytes_agg: int = 0  # wire bytes absorbed into slot registers
+    pool_high_water: int = 0  # most slots ever live in one round
+    failures: int = 0
+    restores: int = 0
+
+
+class SwitchCompute:
+    """Bounded aggregation pool of one programmable switch.
+
+    A real switch exposes a small, fixed register file (SwitchML's slot
+    pool): one slot accumulates one chunk's integer partial sum.  The
+    pool offloads a round's aggregation only when the whole slab fits
+    (``slots >= num_chunks``) and the switch is alive — otherwise the
+    round falls back to the ToR's software path.  The fallback is
+    *bit-identical* to a fabric with no switch tier: the decision is made
+    before any quantization happens, and the software path's per-worker
+    codec round-trip plus error feedback is untouched.
+
+    Accumulation is int32: with ``K`` senders the register magnitude is
+    bounded by ``127 * K``, so the sum is exact (never saturates) for any
+    realistic worker count — tests/test_switch.py drives adversarial
+    all-``±127`` payloads through it."""
+
+    def __init__(self, name: str, slots: int):
+        if slots < 0:
+            raise ValueError("switch slots must be >= 0")
+        self.name = name
+        self.slots = int(slots)
+        self.alive = True
+        self.stats = SwitchStats()
+
+    def can_offload(self, num_chunks: int) -> bool:
+        """One round's pool-admission decision (call once per round):
+        alive and the whole slab fits the register file.  A refusal is
+        recorded (``rounds_declined``) — it is the fallback edge the
+        bit-identity invariant rides on."""
+        if not self.alive or num_chunks > self.slots:
+            self.stats.rounds_declined += 1
+            return False
+        self.stats.pool_high_water = max(self.stats.pool_high_water,
+                                         num_chunks)
+        return True
+
+    def accumulate(self, qs: list[jax.Array], chunk_elems: int) -> jax.Array:
+        """Integer-sum the senders' int8 payloads in the slot registers:
+        (N,) int32, exact.  Books the pool's work accounting."""
+        acc = None
+        for q in qs:
+            q32 = q.astype(jnp.int32)
+            acc = q32 if acc is None else acc + q32
+        n = qs[0].shape[0]
+        c = n // chunk_elems
+        st = self.stats
+        st.rounds_offloaded += 1
+        st.chunks_aggregated += c * len(qs)
+        st.int_adds += (len(qs) - 1) * n
+        st.bytes_agg += (n + 4 * c) * len(qs)  # int8 payload + scale words
+        return acc
+
+    def fail(self) -> None:
+        self.alive = False
+        self.stats.failures += 1
+
+    def restore(self) -> None:
+        self.alive = True
+        self.stats.restores += 1
+
+    def reset(self) -> None:
+        """Elastic restore: the pool comes back alive and empty (slot
+        registers hold no cross-round state — they are drained every
+        round — so only the liveness flag needs resetting; a replayed
+        FaultPlan re-fires any scheduled failures)."""
+        self.alive = True
+
+    def describe(self) -> str:
+        s = self.stats
+        return (f"switch {self.name}: {self.slots} slots "
+                f"{'up' if self.alive else 'DOWN'}, "
+                f"{s.rounds_offloaded} rounds offloaded "
+                f"({s.rounds_declined} declined), "
+                f"{s.bytes_agg >> 10} KiB absorbed, "
+                f"{s.int_adds} int adds")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -290,7 +423,16 @@ class RackAggregator:
 
     Error-feedback state is split the way the hardware splits it: each
     worker's NIC keeps its own residual (``ingest``), the switch keeps one
-    residual for the re-quantized upstream sum (``uplink``)."""
+    residual for the re-quantized upstream sum (``uplink``).
+
+    With a ``SwitchCompute`` pool attached (``switch``), int8 pushes may
+    be parked raw at the ToR ingress (``ingest_deferred``) and aggregated
+    by the pool at round time (``switch_combine``) — the pool's shared
+    group scale needs every member's magnitude, so quantization cannot
+    happen per-push.  When the pool refuses the round (failed mid-round,
+    or the slab outgrew the register file), ``software_combine`` runs the
+    exact per-worker codec round-trip ``ingest`` would have run, making
+    the fallback bit-identical to a fabric with no switch at all."""
 
     def __init__(
         self,
@@ -298,11 +440,13 @@ class RackAggregator:
         members: tuple[int, ...],
         cfg: CompressionConfig,
         n_elems: int,
+        switch: "SwitchCompute | None" = None,
     ):
         self.rack_id = rack_id
         self.members = tuple(members)
         self.cfg = cfg
         self.n_elems = n_elems
+        self.switch = switch
         self.stats = RackStats()
         self._worker_ef = {w: init_ef_state(cfg, n_elems) for w in members}
         self._uplink_ef = init_ef_state(cfg, n_elems)
@@ -332,6 +476,79 @@ class RackAggregator:
             self.cfg, slab, self._worker_ef[worker]
         )
         return wp
+
+    def ingest_deferred(self, worker: int) -> None:
+        """Book one worker push parked *raw* at the ToR ingress (switch
+        pool path): ingest/byte accounting happens now — the stream spent
+        the rack link either way — but quantization waits for
+        ``switch_combine`` (the pool's shared scale needs every member's
+        magnitude).  A parked push that never reaches the pool (its
+        worker crashed mid-round) costs its wire bytes but touches no
+        error-feedback state — exactly how a dropped in-flight stream
+        behaves on a real NIC."""
+        if worker not in self._worker_ef:
+            raise ValueError(f"worker {worker} is not in rack {self.rack_id}")
+        self.stats.ingests += 1
+        self.stats.bytes_in += wire_bytes(self.cfg, self.n_elems)
+
+    def switch_combine(self, pushes: list[tuple[int, jax.Array]]) -> jax.Array:
+        """Aggregate one round's parked pushes in the switch pool.
+
+        The integer path, per SwitchML: every sender adds its NIC
+        residual, the group negotiates one shared per-chunk scale
+        (``group_scale`` — the max magnitude across members), each sender
+        ships int8 under that scale, and the pool's slot registers sum
+        the payloads with exact int32 adds.  The returned (N,) f32 slab
+        is the dequantized group sum (one multiply per element at pool
+        egress); each sender's error feedback carries its own residual
+        against the *shared* scale, so quantization error still never
+        biases convergence.
+
+        ``pushes`` must be in ascending worker order (the fabric's
+        deterministic fold order).  Bytes were booked at
+        ``ingest_deferred`` time."""
+        sw = self.switch
+        if sw is None:
+            raise RuntimeError(f"rack {self.rack_id} has no switch pool")
+        e = self.cfg.chunk_elems
+        use_ef = self.cfg.error_feedback
+        slabs2 = []
+        for w, slab in pushes:
+            if w not in self._worker_ef:
+                raise ValueError(
+                    f"worker {w} is not in rack {self.rack_id}")
+            ef = self._worker_ef[w]
+            slabs2.append((w, slab + ef if (use_ef and ef is not None)
+                           else slab))
+        scale = group_scale([s for _, s in slabs2], e)
+        scale_elems = jnp.repeat(scale, e)
+        qs = []
+        for w, slab2 in slabs2:
+            q = integer_quantize(slab2, scale, e)
+            qs.append(q)
+            if use_ef and self._worker_ef[w] is not None:
+                self._worker_ef[w] = (
+                    slab2 - q.astype(jnp.float32) * scale_elems)
+        acc = sw.accumulate(qs, e)
+        return acc.astype(jnp.float32) * scale_elems
+
+    def software_combine(self, pushes: list[tuple[int, jax.Array]]) -> jax.Array:
+        """Fallback for pushes parked raw by the deferred switch path
+        whose round the pool then refused (failed mid-round, or the slab
+        outgrew the register file): per-worker codec round-trip with NIC
+        error feedback, summed in ascending worker order — the *exact*
+        math ``ingest``-at-push-time plus the fabric's fold would have
+        produced, so the fallback is bit-identical to a fabric with no
+        switch tier.  Bytes were booked at ``ingest_deferred`` time."""
+        total = None
+        for w, slab in pushes:
+            if w not in self._worker_ef:
+                raise ValueError(
+                    f"worker {w} is not in rack {self.rack_id}")
+            dec, self._worker_ef[w] = roundtrip(
+                self.cfg, slab, self._worker_ef[w])
+            total = dec if total is None else total + dec
+        return total
 
     def drop_stale(self) -> None:
         """A stale quorum-round stream arrived and was refused: it spent
@@ -364,9 +581,33 @@ class RackAggregator:
         wp, self._uplink_ef = encode_wire(self.cfg, slab, self._uplink_ef)
         return wp
 
+    def uplink_pool(self, slab: jax.Array) -> jax.Array:
+        """Stage the rack's combined stream for a *core-pool* crossing:
+        books the uplink (same bytes as ``uplink_wire``) and returns the
+        error-feedback-carried slab whose quantization the core switch
+        coordinates *across racks* (shared group scale — see
+        ``group_scale``); ``commit_uplink`` lands the residual once the
+        shared scale is known."""
+        self.stats.uplinks += 1
+        self.stats.bytes_up += wire_bytes(self.cfg, self.n_elems)
+        ef = self._uplink_ef
+        return slab + ef if (self.cfg.error_feedback and ef is not None) \
+            else slab
+
+    def commit_uplink(self, slab2: jax.Array, q: jax.Array,
+                      scale_elems: jax.Array) -> None:
+        """Land the switch-side residual for a core-pool crossing staged
+        by ``uplink_pool``: the rack shipped ``q`` under the group's
+        shared scale, so its residual is against that scale."""
+        if self.cfg.error_feedback and self._uplink_ef is not None:
+            self._uplink_ef = slab2 - q.astype(jnp.float32) * scale_elems
+
     def reset(self) -> None:
-        """Clear codec residuals (elastic restore: streams restart fresh)."""
+        """Clear codec residuals (elastic restore: streams restart fresh);
+        an attached switch pool comes back alive and empty."""
         self._worker_ef = {
             w: init_ef_state(self.cfg, self.n_elems) for w in self.members
         }
         self._uplink_ef = init_ef_state(self.cfg, self.n_elems)
+        if self.switch is not None:
+            self.switch.reset()

@@ -65,6 +65,7 @@ def build_argparser() -> argparse.ArgumentParser:
 def _build_fabric(args, space, flat):
     """The serving-side fabric: the model's flat space on a small sharded,
     optionally replicated box under synthetic training load."""
+    from repro.core.config import FabricConfig, FaultConfig, WireConfig
     from repro.core.fabric import PBoxFabric
     from repro.core.topology import NetworkTopology
     from repro.optim.optimizers import sgd
@@ -74,13 +75,13 @@ def _build_fabric(args, space, flat):
     if args.serve_racks > 1 and workers > 1:
         topology = NetworkTopology(num_workers=workers,
                                    num_racks=min(args.serve_racks, workers))
-    return PBoxFabric(
-        space, sgd(1e-3), flat,
+    config = FabricConfig(
         num_shards=max(1, args.serve_shards),
         num_workers=workers,
-        topology=topology,
-        replication=max(1, args.serve_replication),
+        wire=WireConfig(topology=topology),
+        faults=FaultConfig(replication=max(1, args.serve_replication)),
     )
+    return PBoxFabric(space, sgd(1e-3), flat, config=config)
 
 
 def _train_rounds(args, fabric, space) -> None:

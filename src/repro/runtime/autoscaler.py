@@ -183,12 +183,16 @@ class Autoscaler:
 
     # -- placement re-solve ----------------------------------------------
     def _problem(self) -> PlacementProblem:
+        # static knobs read off the fabric's FabricConfig (core/config.py)
+        # — the one authoritative record of how it was built; live layout
+        # (chunk ownership, attached planes) off the fabric itself
         fab = self.fabric
-        topo = fab.topology
+        cfg = fab.config
+        topo = cfg.wire.topology
         return PlacementProblem.standard(
             num_shards=fab.num_shards,
             num_racks=topo.num_racks if topo is not None else 1,
-            replication=fab.replication,
+            replication=cfg.faults.replication,
             num_frontends=sum(len(p.frontends) for p in self.planes),
             oversubscription=(topo.oversubscription if topo is not None
                               else 4.0),

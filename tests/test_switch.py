@@ -1,0 +1,366 @@
+"""In-network switch aggregation tier (core/topology.SwitchCompute + the
+switch path in core/fabric.py).
+
+Load-bearing properties (ISSUE 9):
+
+  * full-slab-or-nothing: a starved pool (slots < chunks), a failed
+    switch, or a non-int8 codec never engages — and every non-engaged
+    run is *bit-identical* to a fabric with no switch tier at all;
+  * a mid-round ``switch_fail`` scheduled by a FaultPlan refuses its own
+    round (the fallback edge is before quantization), and ``generate``
+    pairs every failure with a restore;
+  * pool accumulation is int32 and exact under adversarial all-±127
+    payloads (a naive int8 register file wraps at two senders);
+  * the core pool absorbs (racks - 1) PS-ingress streams with exact byte
+    accounting;
+  * tenancy grants are full-slab-or-nothing out of the box's register
+    budget, returned on detach, and a granted job is bit-identical to a
+    dedicated fabric holding the same grant.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.chunking import TILE_ELEMS, ParamSpace
+from repro.core.compression import CompressionConfig, wire_bytes
+from repro.core.config import (
+    FabricConfig,
+    FaultConfig,
+    SwitchConfig,
+    WireConfig,
+)
+from repro.core.fabric import LinkModel, PBoxFabric, WorkerHarness
+from repro.core.replication import FaultEvent, FaultPlan
+from repro.core.tenancy import JobSpec, MultiJobFabric, dedicated_fabric
+from repro.core.topology import (
+    NetworkTopology,
+    SwitchCompute,
+    group_scale,
+    integer_quantize,
+)
+from repro.optim.optimizers import momentum
+
+K = 8
+ROUNDS = 3
+LINK = LinkModel(wire_us_per_chunk=1.0, agg_us_per_chunk=0.2)
+
+
+def make_setup(chunk_elems=TILE_ELEMS, chunks=4):
+    params = {"w": jnp.zeros((chunks * chunk_elems - 96,))}
+    space = ParamSpace.build(params, chunk_elems=chunk_elems)
+    rng = np.random.default_rng(7)
+    grads = [
+        jnp.asarray(rng.standard_normal(space.flat_elems), jnp.float32)
+        for _ in range(K)
+    ]
+    return space, grads
+
+
+def run_fab(space, grads, *, racks=2, shards=2, codec="int8", switch=None,
+            plan=None, rounds=ROUNDS):
+    topo = NetworkTopology(num_workers=K, num_racks=racks)
+    fab = PBoxFabric(
+        space, momentum(0.1, 0.9), jnp.zeros((space.flat_elems,)),
+        config=FabricConfig(
+            num_shards=shards, num_workers=K,
+            wire=WireConfig(
+                topology=topo,
+                compression=CompressionConfig(codec=codec),
+                link=LINK,
+                switch=switch or SwitchConfig(),
+            ),
+            faults=FaultConfig(fault_plan=plan),
+        ),
+    )
+    for r in range(rounds):
+        for w in range(K):
+            fab.pull(w)
+            fab.push(w, grads[(w + r) % K])
+    return fab
+
+
+def assert_bits(a, b, what):
+    assert np.array_equal(np.asarray(a.params), np.asarray(b.params)), (
+        f"{what}: expected bit-identical parameters")
+
+
+# ---------------------------------------------------------------------------
+# pool admission: full-slab-or-nothing
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("racks", [2, 4])
+@pytest.mark.parametrize("shards", [1, 2])
+def test_starved_pool_is_bit_identical_to_no_switch(racks, shards):
+    space, grads = make_setup()
+    tight = SwitchConfig(enabled=True, tor_slots=space.num_chunks - 1)
+    fab = run_fab(space, grads, racks=racks, shards=shards, switch=tight)
+    base = run_fab(space, grads, racks=racks, shards=shards)
+    assert fab.stats.switch_rounds == 0
+    assert fab.stats.bytes_switch_agg == 0
+    assert_bits(fab, base, f"starved pool r{racks}s{shards}")
+
+
+@pytest.mark.parametrize("codec", ["none", "bf16"])
+def test_non_int8_codecs_never_engage(codec):
+    # switches only do integer math: outside the int8 wire codec the
+    # pools must be bit-invisible even when generously sized
+    space, grads = make_setup()
+    big = SwitchConfig(enabled=True, tor_slots=64, core_slots=64)
+    fab = run_fab(space, grads, codec=codec, switch=big)
+    base = run_fab(space, grads, codec=codec)
+    assert fab.stats.switch_rounds == 0
+    assert fab.stats.core_switch_rounds == 0
+    assert_bits(fab, base, f"codec {codec}")
+
+
+def test_tor_offload_engages_and_stays_ef_bounded():
+    # the ToR pool's shared group scale is a *different* quantizer than
+    # the per-worker software path, so offloaded rounds are not
+    # bit-identical to the no-switch fabric — but error feedback keeps
+    # the divergence at quantization-noise scale
+    space, grads = make_setup()
+    full = SwitchConfig(enabled=True, tor_slots=space.num_chunks)
+    fab = run_fab(space, grads, switch=full)
+    base = run_fab(space, grads)
+    s = fab.stats
+    assert s.switch_rounds == ROUNDS
+    assert s.switch_fallback_rounds == 0
+    assert s.bytes_switch_agg > 0
+    a, b = np.asarray(fab.params), np.asarray(base.params)
+    rel = np.linalg.norm(a - b) / max(np.linalg.norm(b), 1e-12)
+    assert rel < 0.05, f"switch path diverged {rel:.4f} from software path"
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan-driven failure and restore
+# ---------------------------------------------------------------------------
+def test_switch_failure_falls_back_bit_identically():
+    space, grads = make_setup()
+    full = SwitchConfig(enabled=True, tor_slots=space.num_chunks)
+    racks = 2
+    plan = FaultPlan(events=tuple(
+        FaultEvent(round=1, kind="switch_fail", target=r)
+        for r in range(racks)))
+    fab = run_fab(space, grads, racks=racks, switch=full, plan=plan)
+    base = run_fab(space, grads, racks=racks, plan=plan)
+    # a failure scheduled at round 1 refuses round 1 itself: the whole
+    # run takes the software path, bit-for-bit.  Only round 1 counts as
+    # a fallback — its pushes were already deferred to the pool when the
+    # fault fired; later pushes see the dead switch at push time and take
+    # the ordinary ingest path outright
+    assert fab.stats.switch_rounds == 0
+    assert fab.stats.switch_fallback_rounds == 1
+    assert fab.stats.switch_failures == racks
+    assert_bits(fab, base, "all-ToR failure")
+    trace = [r.get("action") for r in fab.fault_trace]
+    assert "switch_failed:tor0" in trace and "switch_failed:tor1" in trace
+    # the no-switch twin records the events as ignored, not as faults
+    assert all(r.get("action") == "ignored_no_switch_tier"
+               for r in base.fault_trace)
+
+
+def test_partial_failure_mixes_offload_and_fallback():
+    space, grads = make_setup()
+    full = SwitchConfig(enabled=True, tor_slots=space.num_chunks)
+    plan = FaultPlan(events=(FaultEvent(1, "switch_fail", 0),))
+    fab = run_fab(space, grads, racks=2, switch=full, plan=plan)
+    s = fab.stats
+    # rack 1 keeps offloading every round; rack 0 falls back on round 1
+    # (deferred pushes caught by the mid-round fault) and then bypasses
+    # its dead pool at push time
+    assert s.switch_rounds == ROUNDS
+    assert s.switch_fallback_rounds == 1
+    assert s.switch_failures == 1
+
+
+def test_switch_restore_resumes_offloading():
+    space, grads = make_setup()
+    full = SwitchConfig(enabled=True, tor_slots=space.num_chunks)
+    plan = FaultPlan(events=(
+        FaultEvent(1, "switch_fail", 0),
+        FaultEvent(1, "switch_fail", 1),
+        FaultEvent(3, "switch_restore", 0),
+        FaultEvent(3, "switch_restore", 1),
+    ))
+    fab = run_fab(space, grads, racks=2, switch=full, plan=plan,
+                  rounds=4)
+    s = fab.stats
+    assert s.switch_failures == 2 and s.switch_restores == 2
+    # round 1: deferred pushes fall back; rounds 2-3 bypass the dead /
+    # just-restored pool at push time; round 4 offloads again
+    assert s.switch_fallback_rounds == 1
+    assert s.switch_rounds == 1
+
+
+def test_fabric_restore_revives_failed_pools():
+    space, grads = make_setup()
+    full = SwitchConfig(enabled=True, tor_slots=space.num_chunks)
+    plan = FaultPlan(events=(FaultEvent(1, "switch_fail", 0),))
+    fab = run_fab(space, grads, racks=2, switch=full, plan=plan)
+    assert not fab.rack_aggs[0].switch.alive
+    fab.restore(fab.snapshot())
+    assert fab.rack_aggs[0].switch.alive
+
+
+def test_generate_pairs_failures_with_restores():
+    plan = FaultPlan.generate(
+        seed=3, rounds=60, num_shards=2, num_workers=4, num_racks=2,
+        switch_fail_rate=0.4)
+    fails = [e for e in plan.events if e.kind == "switch_fail"]
+    restores = [e for e in plan.events if e.kind == "switch_restore"]
+    assert fails, "rate 0.4 over 60 rounds drew no switch failures"
+    # target space is the ToR pools plus the core pool at num_racks
+    assert all(0 <= e.target <= 2 for e in fails)
+    for f in fails:
+        if f.round + 1 <= 60:
+            assert any(r.round == f.round + 1 and r.target == f.target
+                       for r in restores)
+    quiet = FaultPlan.generate(
+        seed=3, rounds=60, num_shards=2, num_workers=4, num_racks=2)
+    assert not any(e.kind.startswith("switch") for e in quiet.events)
+
+
+# ---------------------------------------------------------------------------
+# integer numerics
+# ---------------------------------------------------------------------------
+def test_accumulate_is_int32_exact_under_adversarial_payloads():
+    e = 128
+    sw = SwitchCompute("t", 4)
+    # 300 all-+127 senders: an int8 register wraps at the second sender,
+    # an int16 one at sender 259 — int32 is exact
+    qs = [jnp.full((4 * e,), 127, jnp.int8) for _ in range(300)]
+    acc = sw.accumulate(qs, e)
+    assert acc.dtype == jnp.int32
+    expect = np.sum(np.stack([np.asarray(q, np.int64) for q in qs]), axis=0)
+    assert np.array_equal(np.asarray(acc, np.int64), expect)
+    # alternating-sign payloads cancel exactly
+    qs = [jnp.full((4 * e,), 127 if i % 2 == 0 else -127, jnp.int8)
+          for i in range(10)]
+    assert np.array_equal(np.asarray(sw.accumulate(qs, e)), np.zeros(4 * e))
+
+
+def test_group_scale_and_quantize_bounds():
+    e = 64
+    rng = np.random.default_rng(0)
+    slabs = [jnp.asarray(rng.standard_normal(2 * e), jnp.float32)
+             for _ in range(3)]
+    s = group_scale(slabs, e)
+    assert s.shape == (2,)
+    amax = np.max(np.abs(np.stack([np.asarray(x) for x in slabs])
+                         .reshape(3, 2, e)), axis=(0, 2))
+    assert np.allclose(np.asarray(s), amax / 127.0)
+    for slab in slabs:
+        q = integer_quantize(slab, s, e)
+        assert q.dtype == jnp.int8
+        assert np.all(np.abs(np.asarray(q, np.int32)) <= 127)
+    # all-zero input: scale pins to 1.0, no divide-by-zero
+    z = [jnp.zeros((2 * e,))]
+    assert np.array_equal(np.asarray(group_scale(z, e)), np.ones(2))
+
+
+# ---------------------------------------------------------------------------
+# core pool
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("racks", [2, 4])
+def test_core_pool_absorbs_ingress_with_exact_bytes(racks):
+    # the int8 fused wire path needs the 4096-element chunk granule
+    space, grads = make_setup(chunk_elems=4096, chunks=2)
+    c = space.num_chunks
+    sw = SwitchConfig(enabled=True, tor_slots=c, core_slots=c)
+    fab = run_fab(space, grads, racks=racks, switch=sw, rounds=2)
+    s = fab.stats
+    assert s.core_switch_rounds == 2
+    assert s.bytes_switch_saved == 2 * (racks - 1) * wire_bytes(
+        fab.compression, space.flat_elems)
+    # starving only the core pool keeps the ToR tier offloading
+    tor_only = SwitchConfig(enabled=True, tor_slots=c, core_slots=c - 1)
+    fab2 = run_fab(space, grads, racks=racks, switch=tor_only, rounds=2)
+    assert fab2.stats.core_switch_rounds == 0
+    assert fab2.stats.switch_rounds == 2
+    assert fab2.stats.bytes_switch_saved == 0
+
+
+def test_core_pool_failure_falls_back_to_per_rack_uplinks():
+    space, grads = make_setup(chunk_elems=4096, chunks=2)
+    c = space.num_chunks
+    sw = SwitchConfig(enabled=True, tor_slots=c, core_slots=c)
+    racks = 2
+    plan = FaultPlan(events=(FaultEvent(1, "switch_fail", racks),))
+    fab = run_fab(space, grads, racks=racks, switch=sw, plan=plan, rounds=2)
+    s = fab.stats
+    assert s.core_switch_rounds == 0
+    assert s.bytes_switch_saved == 0
+    assert s.switch_rounds == 2  # ToR pools keep going
+    assert any(r.get("action") == "switch_failed:core"
+               for r in fab.fault_trace)
+
+
+# ---------------------------------------------------------------------------
+# tenancy: register-budget grants
+# ---------------------------------------------------------------------------
+def tenant_job(name, *, workers=4, elems=3000, **kw):
+    params = {"w": jnp.zeros((elems,))}
+    targets = [jnp.full((elems,), 0.5 * (i + 1)) for i in range(workers)]
+
+    def grad_fn(p, batch):
+        return {"w": 2 * (p["w"] - targets[batch])}
+
+    kw.setdefault("optimizer", momentum(0.05, 0.9))
+    kw.setdefault("codec", "int8")
+    spec = JobSpec(name=name, params=params, num_workers=workers,
+                   chunk_elems=TILE_ELEMS, **kw)
+    return spec, grad_fn
+
+
+def test_granted_tenant_matches_dedicated_twin():
+    box = MultiJobFabric(
+        num_shards=2, num_racks=2, link=LINK,
+        switch=SwitchConfig(enabled=True, tor_slots=16, core_slots=16))
+    spec, grad_fn = tenant_job("a")
+    handle = box.attach(spec)
+    grant = box.switch_grants["a"]
+    assert grant.enabled and grant.tor_slots == handle.space.num_chunks
+    WorkerHarness(handle, grad_fn, lambda w, s: w).run(4)
+    assert handle.stats.switch_rounds == 4
+    twin = dedicated_fabric(spec, box)
+    WorkerHarness(twin, grad_fn, lambda w, s: w).run(4)
+    assert twin.stats.switch_rounds == 4
+    assert np.array_equal(np.asarray(handle.fabric.params),
+                          np.asarray(twin.params))
+    # pool occupancy is booked on the shared switch link
+    assert "switch" in box.links
+    assert box.links["switch"].stats.busy_us > 0
+
+
+def test_grant_budget_is_full_slab_or_nothing_and_returned_on_detach():
+    spec_a, grad_a = tenant_job("a")
+    chunks = ParamSpace.build(spec_a.params, chunk_elems=TILE_ELEMS,
+                              num_owners=2).num_chunks
+    box = MultiJobFabric(
+        num_shards=2, num_racks=2, link=LINK,
+        switch=SwitchConfig(enabled=True, tor_slots=chunks))
+    box.attach(spec_a)
+    assert box._tor_slots_left == 0
+    # the budget is spent: an identical second tenant gets no grant (and
+    # a partial one would strand slots, so none is carved out)
+    spec_b, grad_b = tenant_job("b")
+    hb = box.attach(spec_b)
+    assert "b" not in box.switch_grants
+    WorkerHarness(hb, grad_b, lambda w, s: w).run(2)
+    assert hb.stats.switch_rounds == 0
+    # detaching the holder returns its slots; the next tenant is granted
+    box.detach("a")
+    assert box._tor_slots_left == chunks
+    spec_c, _ = tenant_job("c")
+    box.attach(spec_c)
+    assert box.switch_grants["c"].tor_slots == chunks
+
+
+def test_ineligible_jobs_are_never_granted():
+    box = MultiJobFabric(
+        num_shards=2, num_racks=2, link=LINK,
+        switch=SwitchConfig(enabled=True, tor_slots=64, core_slots=64))
+    for spec, _ in (tenant_job("bf16", codec="bf16"),
+                    tenant_job("async", mode="async")):
+        box.attach(spec)
+    assert not box.switch_grants
+    assert box._tor_slots_left == 64 and box._core_slots_left == 64
