@@ -42,6 +42,7 @@ from repro.core.config import (
     FabricConfig,
     FaultConfig,
     PlacementConfig,
+    ServeConfig,
     WireConfig,
 )
 from repro.core.fabric import LinkModel, PBoxFabric
@@ -192,7 +193,9 @@ def _bench_sparse_skew() -> None:
     tiers = {"hash": _sparse_tier(), "solved": _sparse_tier(plan=solved)}
     p99 = {}
     for kind, tier in tiers.items():
-        plane = SparseReadPlane(tier, num_frontends=2, cache_rows=32)
+        plane = SparseReadPlane(tier, config=ServeConfig(
+            num_frontends=2, cache_rows=32, name="sparse-serve",
+            serve_us_per_read=0.01))
         lat = []
         for b, start in enumerate(range(0, len(trace), 12)):
             if b % 5 == 0:  # training keeps bumping versions underneath
@@ -221,7 +224,7 @@ def _bench_closed_loop() -> None:
     space, grads = _setup()
     fab_a = _make_fabric(space, shards=2, racks=2)
     fab_b = _make_fabric(space, shards=2, racks=2)
-    plane_b = ReadPlane(fab_b, num_frontends=2)
+    plane_b = ReadPlane(fab_b, config=ServeConfig(num_frontends=2))
     auto = Autoscaler(fab_b, planes=[plane_b], policy=AutoscalerPolicy(
         cooldown_rounds=0, solve_placement=False))
     _drive(fab_a, grads, 2)

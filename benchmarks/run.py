@@ -33,6 +33,7 @@ def main() -> None:
         placement,
         replication,
         serve_load,
+        serve_slo,
         sparse_serve,
         switch_agg,
         table1_frameworks,
@@ -51,6 +52,7 @@ def main() -> None:
         "placement": placement.run,
         "replication": replication.run,
         "serve_load": serve_load.run,
+        "serve_slo": serve_slo.run,
         "sparse_serve": sparse_serve.run,
         "switch_agg": switch_agg.run,
     }

@@ -6,9 +6,18 @@ arrivals never wait for completions, the closed-loop trap load benches
 fall into — against a ``ReadPlane`` serving a training tenant on a shared
 2-rack box.  Training rounds keep firing on the same event clock, so
 refreshes contend with push/pull through the weighted-fair-share scales
-and the per-link queues.  Requests queue FIFO per frontend and batch up to
-``BATCH_MAX`` while the frontend is busy; per-request latency is
-``completion - arrival`` on the event clock, reported as p50/p99.
+and the per-link queues.  Requests queue FIFO per frontend and batch up
+to the tenant's ``batch_max`` while the frontend is busy; per-request
+latency is ``completion - arrival`` on the event clock, reported as
+p50/p99.
+
+The load shape is declarative: ``WORKLOAD`` (a ``core.config
+.WorkloadConfig``) declares the single open-loop tenant the sweep fires,
+and ``core.workload.generate_trace`` materializes it — the unmodulated
+``open`` process reproduces the pre-config generator's ``i *
+interarrival`` schedule byte-for-byte, so the baseline rows survive the
+redesign unchanged.  Richer shapes (diurnal, flash crowds, MMPP, SLOs,
+hierarchy) live in ``benchmarks/serve_slo.py``.
 
 Derived columns per config:
   p50, p99    read latency percentiles (simulated µs)
@@ -30,24 +39,36 @@ across hosts, so the regression gate holds this bench to a tight band.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
 import jax.numpy as jnp
 
 from benchmarks.common import emit
+from repro.core.config import ArrivalConfig, TenantLoadConfig, WorkloadConfig
 from repro.core.fabric import LinkModel
 from repro.core.tenancy import JobSpec, MultiJobFabric, dedicated_fabric
+from repro.core.workload import generate_trace
 from repro.optim.optimizers import momentum
 
 K = 4  # training workers
 RACKS = 2
 SHARDS = 2
 ROUNDS = 8  # training rounds the load runs under
-N_REQUESTS = 120
-INTERARRIVAL_US = 3.0
 ROUND_PERIOD_US = 40.0  # a training round completes every this often
-BATCH_MAX = 4
 LINK = LinkModel(wire_us_per_chunk=1.0, agg_us_per_chunk=0.2)
+
+# the declarative load shape (was: N_REQUESTS / INTERARRIVAL_US /
+# BATCH_MAX module constants) — one open-loop tenant, fixed spacing
+WORKLOAD = WorkloadConfig(tenants=(
+    TenantLoadConfig(
+        name="load",
+        arrival=ArrivalConfig(process="open", interarrival_us=3.0),
+        n_requests=120,
+        batch_max=4,
+    ),
+))
 
 
 def _spec():
@@ -76,16 +97,34 @@ def run_load(
     *,
     frontends: int,
     max_staleness: int,
-    n_requests: int = N_REQUESTS,
-    interarrival_us: float = INTERARRIVAL_US,
+    workload: WorkloadConfig = WORKLOAD,
+    n_requests: int | None = None,
+    interarrival_us: float | None = None,
+    batch_max: int | None = None,
     round_period_us: float = ROUND_PERIOD_US,
     rounds: int = ROUNDS,
-    batch_max: int = BATCH_MAX,
 ) -> dict:
     """One open-loop run; returns latencies + plane stats + the invariant
     witnesses (param history, final fabric bits) for the caller to assert
-    on.  Deterministic: arrivals, gradients and the event clock carry no
-    randomness beyond the fixed seed."""
+    on.  Deterministic: arrivals come from the materialized trace (the
+    ``open`` process carries no randomness), gradients and the event
+    clock are seeded.  The scalar kwargs override the workload's first
+    tenant — the pre-config surface, kept for the unit tests."""
+    overrides = {}
+    if n_requests is not None:
+        overrides["n_requests"] = n_requests
+    if interarrival_us is not None:
+        overrides["arrival"] = dataclasses.replace(
+            workload.tenants[0].arrival, interarrival_us=interarrival_us)
+    if batch_max is not None:
+        overrides["batch_max"] = batch_max
+    if overrides:
+        workload = WorkloadConfig(tenants=(
+            dataclasses.replace(workload.tenants[0], **overrides),
+        ) + workload.tenants[1:])
+    trace = generate_trace(workload, seed=0)
+    batch_cap = {t.name: t.batch_max for t in workload.tenants}
+
     spec = _spec()
     box = MultiJobFabric(num_shards=SHARDS, num_racks=RACKS, link=LINK)
     handle = box.attach(spec)
@@ -109,29 +148,29 @@ def run_load(
             fired += 1
             next_round_at += round_period_us
 
-    # open loop: request i arrives at i * interarrival, assigned to
-    # frontend i % F; each frontend serves FIFO, batching what queued up
-    # while it was busy
+    # open loop: the trace's i-th request is assigned to frontend i % F;
+    # each frontend serves FIFO, batching (up to its head request's
+    # tenant ``batch_max``) whatever queued up while it was busy
     free_at = [0.0] * frontends
-    queues: list[list[float]] = [[] for _ in range(frontends)]
-    for i in range(n_requests):
-        queues[i % frontends].append(i * interarrival_us)
+    queues: list[list] = [[] for _ in range(frontends)]
+    for i, req in enumerate(trace.requests):
+        queues[i % frontends].append(req)
     latencies: list[float] = []
     reads = []
     for f, queue in enumerate(queues):
         i = 0
         while i < len(queue):
-            start = max(queue[i], free_at[f])
+            start = max(queue[i].arrival_us, free_at[f])
             fire_due(start)
             n = 1
-            while (i + n < len(queue) and n < batch_max
-                   and queue[i + n] <= start):
+            while (i + n < len(queue) and n < batch_cap[queue[i].tenant]
+                   and queue[i + n].arrival_us <= start):
                 n += 1
             batch = plane.read_batch(f, n)
             service = batch[0].sim_us
             done = start + service
             for j in range(n):
-                latencies.append(done - queue[i + j])
+                latencies.append(done - queue[i + j].arrival_us)
             reads.extend(batch)
             free_at[f] = done
             i += n

@@ -36,6 +36,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import emit
+from repro.core.config import ServeConfig
 from repro.core.serving import SparseReadPlane, zipfian_trace
 from repro.core.sparse import SparseTier, row_wire_bytes
 from repro.core.topology import NetworkTopology
@@ -85,8 +86,9 @@ def run_serve(*, skew: float, shards: int, codec: str) -> dict:
     direct table read before its latency counts."""
     tier = _make_tier(shards, codec)
     table = tier.tables["emb"]
-    plane = SparseReadPlane(tier, num_frontends=FRONTENDS,
-                            cache_rows=CACHE_ROWS)
+    plane = SparseReadPlane(tier, config=ServeConfig(
+        num_frontends=FRONTENDS, cache_rows=CACHE_ROWS,
+        name="sparse-serve", serve_us_per_read=0.01))
     trace = zipfian_trace(V, N_READS, skew, seed=7)
     reads_per_round = N_READS // ROUNDS
     fired = 0

@@ -62,6 +62,7 @@ PER_BENCH_TOLERANCE = {
     "placement": 0.05,  # pure event-clock numbers + inline bit-identity
     "replication": 0.05,
     "serve_load": 0.05,  # p99 read latency is pure event-clock time
+    "serve_slo": 0.05,  # p50/p99/p99.9 + goodput are pure event-clock
     "sparse_serve": 0.05,  # hot-row p99 is pure event-clock time too
     "kernel": 0.05,  # wire_model rows are exact bytes-touched accounting
     "switch_agg": 0.05,  # event-clock time + exact pool byte accounting

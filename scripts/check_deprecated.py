@@ -2,19 +2,20 @@
 """CI gate: no in-repo production code on the deprecated fabric surface.
 
 ``PBoxFabric`` is constructed from a single ``FabricConfig``
-(core/config.py); the loose-keyword spread is a deprecated back-compat
-adapter that warns once per call site and will eventually be removed.
-This script AST-scans ``src/`` and ``benchmarks/`` (``launch/`` lives
-inside src) for ``PBoxFabric(...)`` / ``PHubServer``-subclass call sites
-passing any legacy keyword, and fails if it finds one.  ``tests/`` is
-exempt on purpose — the adapter's behavior (warning cadence, config
-equivalence) is itself under test there.
+(core/config.py) and the serving planes (``ReadPlane`` /
+``SparseReadPlane``) from a single ``ServeConfig``; the loose-keyword
+spreads are deprecated back-compat adapters that warn once per call site
+and will eventually be removed.  This script AST-scans ``src/`` and
+``benchmarks/`` (``launch/`` lives inside src) for call sites of any
+gated constructor passing one of its legacy keywords, and fails if it
+finds one.  ``tests/`` is exempt on purpose — the adapters' behavior
+(warning cadence, config equivalence) is itself under test there.
 
 Stdlib-only: core/config.py imports nothing outside the stdlib, so the
-legacy-keyword registry loads without jax installed.
+legacy-keyword registries load without jax installed.
 
   python scripts/check_deprecated.py            # gate (exit 1 on hits)
-  python scripts/check_deprecated.py --list     # print the registry
+  python scripts/check_deprecated.py --list     # print the registries
 """
 from __future__ import annotations
 
@@ -26,18 +27,26 @@ from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
 SCAN_DIRS = ("src", "benchmarks", "examples")
-CONSTRUCTORS = {"PBoxFabric"}
+# constructor name -> (registry attr in core/config.py, config class name)
+CONSTRUCTORS = {
+    "PBoxFabric": ("LEGACY_KWARGS", "FabricConfig"),
+    "ReadPlane": ("SERVE_LEGACY_KWARGS", "ServeConfig"),
+    "SparseReadPlane": ("SPARSE_SERVE_LEGACY_KWARGS", "ServeConfig"),
+}
 
 
-def legacy_kwargs() -> dict[str, str]:
-    """The kwarg -> config-path registry, loaded straight from
-    core/config.py by file path (no package import, no jax)."""
+def legacy_registries() -> dict[str, tuple[dict[str, str], str]]:
+    """constructor -> (kwarg registry, config class), loaded straight
+    from core/config.py by file path (no package import, no jax)."""
     spec = importlib.util.spec_from_file_location(
         "_repro_config", REPO / "src" / "repro" / "core" / "config.py")
     mod = importlib.util.module_from_spec(spec)
     sys.modules[spec.name] = mod  # dataclass machinery looks the module up
     spec.loader.exec_module(mod)
-    return dict(mod.LEGACY_KWARGS)
+    return {
+        ctor: (dict(getattr(mod, attr)), config)
+        for ctor, (attr, config) in CONSTRUCTORS.items()
+    }
 
 
 def _call_name(node: ast.Call) -> str | None:
@@ -49,33 +58,39 @@ def _call_name(node: ast.Call) -> str | None:
     return None
 
 
-def scan_file(path: Path, legacy: dict[str, str]) -> list[tuple[int, str]]:
+def scan_file(path: Path,
+              registries: dict[str, tuple[dict[str, str], str]],
+              ) -> list[tuple[int, str, str, str]]:
     try:
         tree = ast.parse(path.read_text(), filename=str(path))
     except SyntaxError as e:  # a broken file is its own CI failure
-        return [(e.lineno or 0, f"syntax error: {e.msg}")]
-    hits: list[tuple[int, str]] = []
+        return [(e.lineno or 0, "?", "?", f"syntax error: {e.msg}")]
+    hits: list[tuple[int, str, str, str]] = []
     for node in ast.walk(tree):
         if not isinstance(node, ast.Call):
             continue
-        if _call_name(node) not in CONSTRUCTORS:
+        name = _call_name(node)
+        if name not in registries:
             continue
+        legacy, config = registries[name]
         bad = sorted(kw.arg for kw in node.keywords
                      if kw.arg is not None and kw.arg in legacy)
         if bad:
-            hits.append((node.lineno, ", ".join(bad)))
+            hits.append((node.lineno, name, config, ", ".join(bad)))
     return hits
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--list", action="store_true",
-                    help="print the legacy-kwarg registry and exit")
+                    help="print the legacy-kwarg registries and exit")
     args = ap.parse_args()
-    legacy = legacy_kwargs()
+    registries = legacy_registries()
     if args.list:
-        for kw, path in sorted(legacy.items()):
-            print(f"{kw:20s} -> FabricConfig.{path}")
+        for ctor, (legacy, config) in sorted(registries.items()):
+            for kw, path in sorted(legacy.items()):
+                print(f"{ctor}({kw}=...)".ljust(40)
+                      + f" -> {config}.{path}")
         return 0
     failures = 0
     for d in SCAN_DIRS:
@@ -83,18 +98,19 @@ def main() -> int:
         if not root.is_dir():
             continue
         for path in sorted(root.rglob("*.py")):
-            for lineno, detail in scan_file(path, legacy):
+            for lineno, ctor, config, detail in scan_file(path, registries):
                 failures += 1
                 rel = path.relative_to(REPO)
-                print(f"{rel}:{lineno}: deprecated PBoxFabric keyword(s) "
-                      f"[{detail}] — build a core.config.FabricConfig and "
+                print(f"{rel}:{lineno}: deprecated {ctor} keyword(s) "
+                      f"[{detail}] — build a core.config.{config} and "
                       "pass config=... (docs/api.md)")
     if failures:
         print(f"\n{failures} deprecated call site(s); the legacy-kwarg "
               "path is for out-of-repo callers and tests only.")
         return 1
+    gated = sum(len(r[0]) for r in registries.values())
     print(f"check_deprecated: clean ({', '.join(SCAN_DIRS)}; "
-          f"{len(legacy)} legacy kwargs gated)")
+          f"{len(registries)} constructors, {gated} legacy kwargs gated)")
     return 0
 
 

@@ -24,7 +24,7 @@ python -m pytest -x -q "$@"
 # exhaustion/failure fallback bit-identity + exact pool byte accounting)
 # are asserted inside and fail the run if violated
 python -m benchmarks.run \
-    --only topo,multijob,replication,serve_load,sparse_serve,placement,kernel,switch_agg >/dev/null
+    --only topo,multijob,replication,serve_load,serve_slo,sparse_serve,placement,kernel,switch_agg >/dev/null
 
 # no in-repo production code on the deprecated PBoxFabric kwarg path
 # (src/, benchmarks/, examples/; tests exempt — stdlib-only AST scan)

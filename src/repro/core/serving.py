@@ -58,11 +58,33 @@ ride the full-bisection tier, cross-rack hops pay the oversubscribed core
 — same ``hop_cost`` the replication chains use), inflated by the serve
 job's fair share; ``benchmarks/serve_load.py`` drives an open-loop load
 generator against this clock and reports p50/p99 read latency.
+
+The SLO tier (docs/architecture.md §13) stacks three more pieces on top,
+all timing-and-bookkeeping only (bits never change):
+
+  ``HierarchicalReadPlane``  the geo ladder from ``core/hierarchy.py``
+                     as a read plane: rack / cluster / cross-cluster
+                     frontend tiers with distinct client latency floors
+                     priced off ``NetworkTopology.hop_cost``; reads
+                     route to the nearest tier satisfying their
+                     staleness requirement.
+  ``FrontDoor``      per-tenant token-bucket admission, priority-aware
+                     overload shedding (shed rather than serve late),
+                     streaming p50/p99/p99.9 (``LatencyTracker``) and
+                     goodput-under-SLO in ``ServeStats``; drives
+                     ``core/workload.py`` traces (open- and closed-loop)
+                     deterministically.
+
+Construction is declarative: ``core.config.ServeConfig`` (SLOs,
+admission, hierarchy) is the primary surface for both planes; the
+pre-redesign keyword spreads warn once per call site through the same
+legacy adapter cadence as ``PBoxFabric`` (docs/api.md).
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import math
 import weakref
 from typing import Any
 
@@ -70,10 +92,119 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.config import (AdmissionConfig, SLOConfig, ServeConfig,
+                               warn_legacy_call)
+from repro.core.hierarchy import select_tier, tier_ladder
+
 
 # ---------------------------------------------------------------------------
 # stats
 # ---------------------------------------------------------------------------
+class LatencyTracker:
+    """Streaming latency quantiles over a log-binned histogram.
+
+    O(1) memory and O(1) per record, and — unlike t-digest-style sketches
+    — fully deterministic: the same latency sequence yields the same bins
+    and the same quantiles on every host, so p50/p99/p99.9 can sit in the
+    bench baseline under a tight gate.  Bin edges are geometric
+    (``bins_per_decade`` per decade, default 64 ≈ 3.7 % resolution);
+    ``quantile`` returns the upper edge of the bin holding the q-th
+    sample, clamped to the exact observed min/max."""
+
+    def __init__(self, lo_us: float = 1e-3, hi_us: float = 1e7,
+                 bins_per_decade: int = 64):
+        if not 0.0 < lo_us < hi_us:
+            raise ValueError("need 0 < lo_us < hi_us")
+        if bins_per_decade < 1:
+            raise ValueError("bins_per_decade must be >= 1")
+        self.lo_us = float(lo_us)
+        self.bins_per_decade = int(bins_per_decade)
+        decades = math.log10(hi_us / lo_us)
+        nbins = int(math.ceil(decades * bins_per_decade))
+        # [0] = under lo, [1..nbins] = the geometric bins, [-1] = over hi
+        self.counts = np.zeros(nbins + 2, dtype=np.int64)
+        self.count = 0
+        self.total_us = 0.0
+        self.min_us = math.inf
+        self.max_us = 0.0
+
+    def record(self, us: float) -> None:
+        if us < 0.0:
+            raise ValueError("latency must be >= 0")
+        us = float(us)
+        if us <= self.lo_us:
+            idx = 0
+        else:
+            idx = 1 + int(math.log10(us / self.lo_us) * self.bins_per_decade)
+            idx = min(idx, len(self.counts) - 1)
+        self.counts[idx] += 1
+        self.count += 1
+        self.total_us += us
+        self.min_us = min(self.min_us, us)
+        self.max_us = max(self.max_us, us)
+
+    def quantile(self, q: float) -> float:
+        """The upper bin edge covering the ``q``-quantile sample (0.0
+        when nothing was recorded)."""
+        if not 0.0 <= q <= 1.0:
+            raise ValueError("q must be in [0, 1]")
+        if self.count == 0:
+            return 0.0
+        target = max(1, int(math.ceil(q * self.count)))
+        cum = 0
+        for idx, c in enumerate(self.counts):
+            cum += int(c)
+            if cum >= target:
+                if idx == 0:
+                    edge = self.lo_us
+                else:
+                    edge = self.lo_us * 10.0 ** (idx / self.bins_per_decade)
+                return min(max(edge, self.min_us), self.max_us)
+        return self.max_us  # unreachable: cum == count covers q == 1
+
+    @property
+    def p50(self) -> float:
+        return self.quantile(0.50)
+
+    @property
+    def p99(self) -> float:
+        return self.quantile(0.99)
+
+    @property
+    def p999(self) -> float:
+        return self.quantile(0.999)
+
+    @property
+    def mean_us(self) -> float:
+        return self.total_us / self.count if self.count else 0.0
+
+    def merge(self, other: "LatencyTracker") -> None:
+        """Fold ``other``'s samples in (same binning required)."""
+        if (other.lo_us != self.lo_us
+                or other.bins_per_decade != self.bins_per_decade
+                or len(other.counts) != len(self.counts)):
+            raise ValueError("cannot merge trackers with different binning")
+        self.counts += other.counts
+        self.count += other.count
+        self.total_us += other.total_us
+        self.min_us = min(self.min_us, other.min_us)
+        self.max_us = max(self.max_us, other.max_us)
+
+    def __eq__(self, other: Any) -> bool:
+        if not isinstance(other, LatencyTracker):
+            return NotImplemented
+        return (self.count == other.count
+                and self.lo_us == other.lo_us
+                and self.bins_per_decade == other.bins_per_decade
+                and np.array_equal(self.counts, other.counts))
+
+    def __repr__(self) -> str:
+        if self.count == 0:
+            return "LatencyTracker(empty)"
+        return (f"LatencyTracker(n={self.count}, p50={self.p50:.3g}us, "
+                f"p99={self.p99:.3g}us, p99.9={self.p999:.3g}us)")
+
+
 @dataclasses.dataclass
 class ServeStats:
     """Read-plane accounting (the serve-side twin of fabric ServerStats)."""
@@ -93,12 +224,42 @@ class ServeStats:
     max_staleness_served: int = 0  # staleness ceiling actually observed
     frontend_moves: int = 0  # plan-driven frontend re-placements
     sim_serve_us: float = 0.0  # cumulative event-clock service time
+    # SLO front-door accounting (FrontDoor fills these; a bare plane with
+    # no front door leaves them zero)
+    admitted: int = 0  # requests past the token bucket + overload check
+    shed_rate_limit: int = 0  # shed at the door: no bucket token
+    shed_overload: int = 0  # shed under backlog: would blow the budget
+    slo_met: int = 0  # admitted, served within budget + staleness bound
+    slo_violations: int = 0  # admitted but served late (or too stale)
+    latency: LatencyTracker = dataclasses.field(
+        default_factory=LatencyTracker)  # client-observed request latency
 
     @property
     def hit_rate(self) -> float:
         if self.reads == 0:
             return 0.0
         return self.cache_hits / self.reads
+
+    @property
+    def offered(self) -> int:
+        """Requests that reached the front door at all."""
+        return self.admitted + self.shed_rate_limit + self.shed_overload
+
+    @property
+    def shed(self) -> int:
+        return self.shed_rate_limit + self.shed_overload
+
+    @property
+    def goodput(self) -> float:
+        """Goodput under SLO: the fraction of *offered* requests that
+        completed within their tenant's latency budget and staleness
+        bound.  Shed requests count against goodput (they were offered
+        and not served) — but they never count as SLO violations: the
+        whole point of shedding is keeping admitted tenants inside
+        budget."""
+        if self.offered == 0:
+            return 0.0
+        return self.slo_met / self.offered
 
 
 @dataclasses.dataclass(frozen=True)
@@ -323,6 +484,14 @@ class ReadPlane:
     round-robin over the topology's racks; each keeps one cached flat
     space keyed by the round version it pulled.
 
+    Construction: the primary surface is ``config=`` — a validated
+    ``core.config.ServeConfig`` carrying every knob.  The pre-redesign
+    keyword spread (``max_staleness=``, ``num_frontends=``, ...) still
+    works through ``ServeConfig.from_legacy_kwargs`` with a
+    once-per-call-site ``DeprecationWarning`` (the same adapter cadence
+    as ``PBoxFabric``); ``shared``/``plan`` are live wiring, not config,
+    and stay real keywords on both paths.
+
     Tenancy: ``MultiJobFabric.attach_serving`` sets ``shared`` so refresh
     streams are inflated by the serve job's weighted fair share and booked
     on the shared per-link queues; standalone planes serve uncontended
@@ -332,34 +501,32 @@ class ReadPlane:
         self,
         source: Any,
         *,
-        max_staleness: int = 0,
-        num_frontends: int = 1,
-        name: str = "serve",
-        priority: float = 1.0,
-        bandwidth_cap: float | None = None,
-        serve_us_per_read: float = 0.05,
+        config: ServeConfig | None = None,
         shared: Any | None = None,
         plan: Any = None,
+        **legacy: Any,
     ):
-        if max_staleness < 0:
-            raise ValueError("max_staleness must be >= 0")
-        if num_frontends < 1:
-            raise ValueError("num_frontends must be >= 1")
-        if priority <= 0.0:
-            raise ValueError("priority must be > 0")
-        if bandwidth_cap is not None and not 0.0 < bandwidth_cap <= 1.0:
-            raise ValueError("bandwidth_cap must be in (0, 1]")
-        if serve_us_per_read < 0.0:
-            raise ValueError("serve_us_per_read must be >= 0")
+        if config is not None and legacy:
+            raise TypeError(
+                f"pass either config= or the legacy keyword spread, not "
+                f"both (got config and {sorted(legacy)})")
+        if config is None:
+            if legacy:
+                warn_legacy_call(constructor="ReadPlane",
+                                 config="ServeConfig")
+            config = ServeConfig.from_legacy_kwargs(**legacy)
+        config.validate()
         if not hasattr(source, "assemble"):
             source = FabricSource(source)
+        self.config = config
         self.source = source
-        self.max_staleness = max_staleness
-        self.name = name
-        self.priority = priority
-        self.bandwidth_cap = bandwidth_cap
-        self.serve_us_per_read = serve_us_per_read
+        self.max_staleness = config.max_staleness
+        self.name = config.name
+        self.priority = config.priority
+        self.bandwidth_cap = config.bandwidth_cap
+        self.serve_us_per_read = config.serve_us_per_read
         self.shared = shared
+        num_frontends = config.num_frontends
         racks = max(1, source.num_racks)
         # frontend -> rack comes from the placement plan when one is
         # attached (kwarg, else the backing fabric's); the default plan's
@@ -544,6 +711,391 @@ class ReadPlane:
 
 
 # ---------------------------------------------------------------------------
+# the hierarchical (geo) read plane
+# ---------------------------------------------------------------------------
+class HierarchicalReadPlane:
+    """Rack / cluster / cross-cluster serving over one source — the geo
+    ladder from ``core/hierarchy.py`` activated as a read plane.
+
+    One inner ``ReadPlane`` per ``ReadTier``, all backed by the same
+    source (and the same assembled-flat memo discipline), each serving
+    under its tier's staleness bound with its tier's refresh bandwidth
+    cap.  The client sits *outside* the datacenter: the cross-cluster
+    tier is client-local (latency floor 0) but caches the stalest bits,
+    the rack tier is co-racked with the serving replicas (bound 0) but a
+    WAN + core transit away.  ``route`` picks the nearest tier whose
+    bound satisfies a request's staleness requirement, so staleness
+    tolerance buys latency — and every tier's reads stay bit-identical
+    to ``fabric.params`` at their stamped version (each tier is a plain
+    ``ReadPlane``; the ladder never touches bits).
+
+    The aggregate surface (``frontends``, ``move_frontend``, ``stats``,
+    ``invalidate``) matches ``ReadPlane`` so the autoscaler and
+    placement deltas drive it unchanged; frontends are indexed globally
+    in tier order (rack tier first)."""
+
+    def __init__(
+        self,
+        source: Any,
+        *,
+        config: ServeConfig,
+        shared: Any | None = None,
+        plan: Any = None,
+    ):
+        config.validate()
+        if not config.hierarchy.enabled:
+            raise ValueError(
+                "HierarchicalReadPlane needs config.hierarchy.enabled; "
+                "use ReadPlane for a flat plane")
+        if not hasattr(source, "assemble"):
+            source = FabricSource(source)
+        self.config = config
+        self.source = source
+        self.name = config.name
+        self.priority = config.priority
+        self.bandwidth_cap = config.bandwidth_cap
+        self.serve_us_per_read = config.serve_us_per_read
+        # the loosest bound any tier serves under (the plane-level
+        # ceiling, for describe/telemetry symmetry with ReadPlane)
+        self.max_staleness = config.hierarchy.staleness_ladder[-1]
+        topo = getattr(getattr(source, "fabric", None), "topology", None)
+        wire = getattr(source, "wire_us_per_chunk", 1.0)
+        self.tiers = tier_ladder(config.hierarchy, topology=topo,
+                                 wire_us_per_chunk=wire)
+        # door-level SLO accounting (admission/shed/goodput/latency):
+        # a FrontDoor over this plane writes here, and the ``stats``
+        # merge folds it in so telemetry sees one surface
+        self.slo_stats = ServeStats()
+        self.planes: list[ReadPlane] = []
+        self._offsets: list[int] = []
+        off = 0
+        for tier in self.tiers:
+            sub = dataclasses.replace(
+                config,
+                num_frontends=tier.num_frontends,
+                max_staleness=tier.max_staleness,
+                bandwidth_cap=tier.refresh_cap,
+                slos=(),
+                admission=dataclasses.replace(config.admission,
+                                              enabled=False),
+                hierarchy=dataclasses.replace(config.hierarchy,
+                                              enabled=False),
+            )
+            p = ReadPlane(source, config=sub, shared=shared, plan=plan)
+            p.parent = self  # tenancy serve_scale accepts tier planes
+            self.planes.append(p)
+            self._offsets.append(off)
+            off += tier.num_frontends
+
+    # -- shared-box wiring (tenancy attach/detach set this) --------------
+    @property
+    def shared(self) -> Any | None:
+        return self.planes[0].shared
+
+    @shared.setter
+    def shared(self, box: Any | None) -> None:
+        for p in self.planes:
+            p.shared = box
+
+    # -- routing ---------------------------------------------------------
+    @property
+    def current_version(self) -> int:
+        return self.planes[0].current_version
+
+    def route(self, staleness_req: int) -> int:
+        """The tier index serving a read with this staleness requirement:
+        nearest (lowest client latency floor) among the tiers whose bound
+        satisfies it."""
+        return select_tier(self.tiers, staleness_req)
+
+    def frontend_range(self, tier: int) -> tuple[int, int]:
+        """Global frontend index range ``[lo, hi)`` of one tier."""
+        lo = self._offsets[tier]
+        return lo, lo + self.tiers[tier].num_frontends
+
+    def _locate(self, frontend: int) -> tuple[ReadPlane, int]:
+        if not 0 <= frontend < sum(t.num_frontends for t in self.tiers):
+            raise ValueError(f"no frontend {frontend}")
+        for tier in reversed(range(len(self.tiers))):
+            if frontend >= self._offsets[tier]:
+                return self.planes[tier], frontend - self._offsets[tier]
+        raise AssertionError("unreachable")
+
+    # -- serving API (ReadPlane-shaped) ----------------------------------
+    def read(self, frontend: int = 0) -> ReadResult:
+        return self.read_batch(frontend, 1)[0]
+
+    def read_batch(self, frontend: int, n: int) -> list[ReadResult]:
+        """Serve a batch from one (globally indexed) frontend under its
+        own tier's staleness bound.  ``sim_us`` is frontend service time
+        only; the client additionally pays the tier's latency floor in
+        transit (``tiers[i].latency_floor_us``) — the ``FrontDoor`` adds
+        it to the client-observed latency without serializing it into
+        frontend occupancy."""
+        plane, local = self._locate(frontend)
+        return plane.read_batch(local, n)
+
+    @property
+    def frontends(self) -> list[_Frontend]:
+        """Every tier's frontends, concatenated in tier order (the
+        placement/autoscaler surface)."""
+        return [fe for p in self.planes for fe in p.frontends]
+
+    def move_frontend(self, frontend: int, rack: int) -> None:
+        plane, local = self._locate(frontend)
+        plane.move_frontend(local, rack)
+
+    def invalidate(self) -> None:
+        for p in self.planes:
+            p.invalidate()
+
+    def notify_round(self, rounds: int = 1) -> None:
+        self.planes[0].notify_round(rounds)
+
+    @property
+    def stats(self) -> ServeStats:
+        """A merged snapshot: every tier plane's wire accounting plus the
+        door-level SLO counters (``slo_stats``) — the telemetry surface."""
+        out = ServeStats()
+        for s in [p.stats for p in self.planes] + [self.slo_stats]:
+            for f in dataclasses.fields(ServeStats):
+                if f.name == "latency":
+                    out.latency.merge(s.latency)
+                elif f.name == "max_staleness_served":
+                    out.max_staleness_served = max(
+                        out.max_staleness_served, s.max_staleness_served)
+                else:
+                    setattr(out, f.name,
+                            getattr(out, f.name) + getattr(s, f.name))
+        return out
+
+    def tier_stats(self, tier: int) -> ServeStats:
+        return self.planes[tier].stats
+
+    def describe(self) -> str:
+        lines = [f"HierarchicalReadPlane[{self.name}]: "
+                 f"{len(self.tiers)} tiers"]
+        for t, p in zip(self.tiers, self.planes):
+            lines.append(
+                f"  {t.name}: floor {t.latency_floor_us:g}us, bound "
+                f"{t.max_staleness} rounds"
+                + (f", refresh cap {t.refresh_cap:g}"
+                   if t.refresh_cap is not None else "")
+                + f" — {p.describe()}")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# SLO front door: admission control + shedding + goodput accounting
+# ---------------------------------------------------------------------------
+class TokenBucket:
+    """Deterministic token-bucket rate limiter on the event clock.
+
+    Refills continuously at ``rate_per_us`` up to ``burst``; ``admit``
+    spends one token (when available) at the given event-clock time.
+    Time only moves forward — out-of-order probes see the bucket as of
+    the latest time observed."""
+
+    def __init__(self, rate_per_us: float, burst: float):
+        if rate_per_us <= 0.0:
+            raise ValueError("rate_per_us must be > 0")
+        if burst < 1:
+            raise ValueError("burst must be >= 1")
+        self.rate_per_us = float(rate_per_us)
+        self.capacity = float(burst)
+        self.tokens = float(burst)
+        self._t = 0.0
+
+    def admit(self, now_us: float, cost: float = 1.0) -> bool:
+        if now_us > self._t:
+            self.tokens = min(self.capacity,
+                              self.tokens + (now_us - self._t)
+                              * self.rate_per_us)
+            self._t = now_us
+        if self.tokens >= cost:
+            self.tokens -= cost
+            return True
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class ServedRequest:
+    """One front-door outcome: the request's fate, timing and (when
+    served) the read it got.  ``finish_us`` for a shed request is its
+    arrival time — the client learns immediately and can think/retry."""
+
+    tenant: str
+    arrival_us: float
+    admitted: bool
+    shed: str | None  # None | "rate_limit" | "overload"
+    tier: int  # 0 for a flat plane
+    frontend: int
+    finish_us: float
+    latency_us: float  # queue wait + service + tier latency floor
+    slo_met: bool
+    result: ReadResult | None
+
+
+class FrontDoor:
+    """The SLO front door over a read plane (flat or hierarchical).
+
+    Sits where production requests arrive and makes the three decisions
+    the plane itself never does:
+
+      1. **Admission** — each tenant class has a token bucket
+         (``AdmissionConfig.rate_per_us`` / ``burst``); an arrival with
+         no token is shed at the door (``shed_rate_limit``).
+      2. **Overload shedding, priority-aware** — an admitted arrival
+         still sheds when its frontend's queued backlog would hold it
+         past ``shed_slack x latency_budget x (priority / max
+         priority)``: at equal budgets a lower-priority tenant hits its
+         threshold strictly earlier, so overload sheds the low-priority
+         classes first and the plane *sheds rather than serves late* —
+         admitted work stays inside budget.
+      3. **Routing** — a hierarchical plane's requests go to the nearest
+         tier satisfying their staleness requirement, then to the
+         least-loaded frontend of that tier (ties to the lowest index —
+         deterministic).
+
+    Accounting lands in ``self.stats`` (a ``ServeStats``): streaming
+    p50/p99/p99.9 client latency, admitted/shed counters, and
+    goodput-under-SLO.  Client latency = queue wait + frontend service +
+    the tier's latency floor; the floor is transit, so it never
+    serializes into frontend occupancy.  Everything here is timing and
+    bookkeeping only — the bits a request gets remain whatever the plane
+    serves, bit-identical to the fabric at the stamped version."""
+
+    def __init__(self, plane: Any, *,
+                 slos: Any = None, admission: AdmissionConfig | None = None):
+        cfg = getattr(plane, "config", None)
+        if slos is None:
+            slos = cfg.slos if cfg is not None else ()
+        if admission is None:
+            admission = (cfg.admission if cfg is not None
+                         else AdmissionConfig())
+        self.plane = plane
+        self.slos: dict[str, SLOConfig] = dict(slos)
+        self.admission = admission
+        self._default_slo = SLOConfig()
+        self._max_priority = max(
+            (s.priority for s in self.slos.values()), default=1.0)
+        self.buckets: dict[str, TokenBucket] = {}
+        self.free_at = [0.0] * len(plane.frontends)
+        # SLO counters land where telemetry reads them: the hierarchical
+        # plane's persistent ``slo_stats``, a flat plane's own stats
+        sink = getattr(plane, "slo_stats", None)
+        if sink is None:
+            sink = getattr(plane, "stats", None)
+        self.stats = sink if isinstance(sink, ServeStats) else ServeStats()
+
+    def slo_of(self, tenant: str) -> SLOConfig:
+        return self.slos.get(tenant, self._default_slo)
+
+    def _bucket(self, tenant: str) -> TokenBucket:
+        b = self.buckets.get(tenant)
+        if b is None:
+            b = self.buckets[tenant] = TokenBucket(
+                self.admission.rate_per_us, self.admission.burst)
+        return b
+
+    def _shed_threshold_us(self, slo: SLOConfig) -> float:
+        """The queue wait beyond which this tenant sheds instead of
+        serving late.  Scaled by priority relative to the box's highest:
+        under one shared backlog the low-priority classes cross their
+        thresholds first."""
+        if math.isinf(slo.latency_budget_us):
+            return math.inf
+        return (self.admission.shed_slack * slo.latency_budget_us
+                * (slo.priority / self._max_priority))
+
+    def submit(self, request: Any) -> ServedRequest:
+        """Admit/shed/serve one workload ``Request`` (anything with
+        ``arrival_us``/``tenant``/``n``/``staleness_req``).  Arrivals
+        must be submitted in event-clock order — the driver (``run``)
+        guarantees it."""
+        now = float(request.arrival_us)
+        tenant = request.tenant
+        slo = self.slo_of(tenant)
+        if self.admission.enabled and not self._bucket(tenant).admit(now):
+            self.stats.shed_rate_limit += 1
+            return ServedRequest(tenant, now, False, "rate_limit", 0, -1,
+                                 now, 0.0, False, None)
+        if hasattr(self.plane, "route"):
+            tier = self.plane.route(request.staleness_req)
+            lo, hi = self.plane.frontend_range(tier)
+            floor = self.plane.tiers[tier].latency_floor_us
+        else:
+            tier, (lo, hi), floor = 0, (0, len(self.plane.frontends)), 0.0
+        f = min(range(lo, hi), key=lambda i: (self.free_at[i], i))
+        wait = max(0.0, self.free_at[f] - now)
+        if (self.admission.enabled
+                and wait + floor > self._shed_threshold_us(slo)):
+            self.stats.shed_overload += 1
+            return ServedRequest(tenant, now, False, "overload", tier, f,
+                                 now, 0.0, False, None)
+        self.stats.admitted += 1
+        results = self.plane.read_batch(f, request.n)
+        service = results[0].sim_us  # the batch's cost rides its head
+        start = max(now, self.free_at[f])
+        finish = start + service
+        self.free_at[f] = finish
+        latency = (finish - now) + floor
+        self.stats.latency.record(latency)
+        met = latency <= slo.latency_budget_us
+        if tenant in self.slos:
+            met = met and results[0].staleness <= slo.staleness_bound
+        if met:
+            self.stats.slo_met += 1
+        else:
+            self.stats.slo_violations += 1
+        return ServedRequest(tenant, now, True, None, tier, f, finish,
+                             latency, met, results[0])
+
+    def run(self, trace: Any, on_time: Any = None) -> list[ServedRequest]:
+        """Drive a ``WorkloadTrace`` to completion: open-loop arrivals
+        fire at their recorded times, closed-loop clients issue, wait for
+        completion (or shed), think, and issue again.  ``on_time(t)``,
+        when given, is called with each arrival's event-clock time before
+        it is submitted — the hook the benches use to fire training
+        rounds on the same clock.  Fully deterministic — same trace, same
+        plane, same outcomes, so a replayed trace yields bit-identical
+        stats."""
+        outcomes: list[ServedRequest] = []
+        clients = [c for tenant in sorted(trace.think)
+                   for c in trace.clients(tenant)]
+        reqs = trace.requests
+        i = 0
+        while True:
+            t_open = reqs[i].arrival_us if i < len(reqs) else math.inf
+            t_closed, j = min(
+                ((c.next_at, k) for k, c in enumerate(clients)
+                 if not c.done),
+                default=(math.inf, -1))
+            if math.isinf(t_open) and math.isinf(t_closed):
+                return outcomes
+            if on_time is not None:
+                on_time(min(t_open, t_closed))
+            if t_open <= t_closed:  # ties: open-loop arrivals first
+                outcomes.append(self.submit(reqs[i]))
+                i += 1
+            else:
+                c = clients[j]
+                out = self.submit(c.issue())
+                c.completed(out.finish_us)
+                outcomes.append(out)
+
+    def describe(self) -> str:
+        s = self.stats
+        lat = s.latency
+        return (
+            f"FrontDoor[{self.plane.name}]: {s.offered} offered, "
+            f"{s.admitted} admitted, {s.shed_rate_limit}+{s.shed_overload} "
+            f"shed (rate/overload), goodput {s.goodput:.1%}, "
+            f"p50/p99/p99.9 {lat.p50:.2f}/{lat.p99:.2f}/{lat.p999:.2f}us"
+        )
+
+
+# ---------------------------------------------------------------------------
 # sparse row serving (hot-row caches over core/sparse.SparseTier)
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
@@ -641,21 +1193,26 @@ class SparseReadPlane:
         self,
         tier: Any,
         *,
-        num_frontends: int = 1,
-        cache_rows: int = 256,
-        name: str = "sparse-serve",
-        serve_us_per_read: float = 0.01,
+        config: ServeConfig | None = None,
         plan: Any = None,
+        **legacy: Any,
     ):
-        if num_frontends < 1:
-            raise ValueError("num_frontends must be >= 1")
-        if cache_rows < 1:
-            raise ValueError("cache_rows must be >= 1")
-        if serve_us_per_read < 0.0:
-            raise ValueError("serve_us_per_read must be >= 0")
+        if config is not None and legacy:
+            raise TypeError(
+                f"pass either config= or the legacy keyword spread, not "
+                f"both (got config and {sorted(legacy)})")
+        if config is None:
+            if legacy:
+                warn_legacy_call(constructor="SparseReadPlane",
+                                 config="ServeConfig")
+            config = ServeConfig.from_sparse_legacy_kwargs(**legacy)
+        config.validate()
+        self.config = config
+        num_frontends = config.num_frontends
+        cache_rows = config.cache_rows
         self.tier = tier
-        self.name = name
-        self.serve_us_per_read = float(serve_us_per_read)
+        self.name = config.name
+        self.serve_us_per_read = float(config.serve_us_per_read)
         racks = max(1, tier.topology.num_racks if tier.topology is not None
                     else 1)
         # frontend placement mirrors ReadPlane: plan-backed when a plan is

@@ -405,6 +405,7 @@ class MultiJobFabric:
         spec: JobSpec,
         source: str,
         *,
+        config=None,
         max_staleness: int = 0,
         serve_us_per_read: float = 0.05,
     ):
@@ -417,23 +418,37 @@ class MultiJobFabric:
         frontend count.  ``params``/``optimizer`` are ignored (a serve
         tenant owns no chunk space — it reads the source job's replica
         tails).  Contention is timing-only: attaching a serve tenant
-        leaves every training tenant bit-identical."""
-        from repro.core.serving import ReadPlane
+        leaves every training tenant bit-identical.
+
+        ``config`` (a ``core.config.ServeConfig``) carries the serving
+        knobs beyond the JobSpec — staleness bound, SLOs, admission,
+        hierarchy; the spec's name/priority/cap/frontend-count override
+        the config's (the JobSpec *is* the tenancy surface).  With
+        ``config.hierarchy.enabled`` the attached plane is a
+        ``HierarchicalReadPlane`` sized by its own
+        ``frontends_per_tier``."""
+        import dataclasses as _dc
+
+        from repro.core.config import ServeConfig
+        from repro.core.serving import HierarchicalReadPlane, ReadPlane
 
         if spec.name in self.jobs or spec.name in self.serving:
             raise ValueError(f"tenant {spec.name!r} is already attached")
         if source not in self.jobs:
             raise KeyError(f"serve source job {source!r} is not attached")
-        plane = ReadPlane(
-            self.jobs[source],
-            max_staleness=max_staleness,
-            num_frontends=spec.num_workers,
+        if config is None:
+            config = ServeConfig(max_staleness=max_staleness,
+                                 serve_us_per_read=serve_us_per_read)
+        config = _dc.replace(
+            config,
             name=spec.name,
             priority=spec.priority,
             bandwidth_cap=spec.bandwidth_cap,
-            serve_us_per_read=serve_us_per_read,
-            shared=self,
+            num_frontends=spec.num_workers,
         )
+        cls = (HierarchicalReadPlane if config.hierarchy.enabled
+               else ReadPlane)
+        plane = cls(self.jobs[source], config=config, shared=self)
         self.serving[spec.name] = plane
         self._serve_source[spec.name] = source
         return plane
@@ -454,8 +469,12 @@ class MultiJobFabric:
         total active priority weight (training + serve tenants) over the
         plane's own — the same fluid-flow WFQ rule ``wire_scales`` applies
         to training transfers.  The plane applies its own bandwidth-cap
-        floor on top."""
-        if self.serving.get(plane.name) is not plane:
+        floor on top.  A hierarchical plane's tier planes share their
+        parent's attachment (one serve tenant, one priority weight)."""
+        attached = self.serving.get(plane.name)
+        if attached is None or (attached is not plane
+                                and attached is not getattr(
+                                    plane, "parent", None)):
             raise KeyError(
                 f"serve tenant {plane.name!r} is not attached to this box")
         return (self._total_priority()

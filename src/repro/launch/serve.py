@@ -112,6 +112,7 @@ def _serve_params(args, params, space):
     space at the stamped version."""
     import numpy as np
 
+    from repro.core.config import ServeConfig
     from repro.core.serving import ReadPlane, SnapshotSource
 
     flat = space.flatten(params)
@@ -138,12 +139,14 @@ def _serve_params(args, params, space):
         snap = flat_to_fabric_snapshot(state)
         source = SnapshotSource.from_snapshot(
             snap, chunk_elems=space.chunk_elems)
-        plane = ReadPlane(source, max_staleness=args.max_staleness,
-                          num_frontends=args.frontends)
+        plane = ReadPlane(source, config=ServeConfig(
+            max_staleness=args.max_staleness,
+            num_frontends=args.frontends))
         expect = np.asarray(snap["params"])
     else:
-        plane = ReadPlane(fabric, max_staleness=args.max_staleness,
-                          num_frontends=args.frontends)
+        plane = ReadPlane(fabric, config=ServeConfig(
+            max_staleness=args.max_staleness,
+            num_frontends=args.frontends))
         expect = np.asarray(fabric.params)
 
     read = plane.read(0)

@@ -129,6 +129,14 @@ class Autoscaler:
         if self.planes:
             tele["serve_us"] = [float(p.stats.sim_serve_us)
                                 for p in self.planes]
+            # SLO health per plane: goodput-under-SLO and shed counts
+            # (zero for planes with no FrontDoor writing into their
+            # stats) — the closed loop's serve-side scale signal
+            tele["serve_goodput"] = [float(p.stats.goodput)
+                                     for p in self.planes]
+            tele["serve_shed"] = [int(p.stats.shed) for p in self.planes]
+            tele["serve_p99_us"] = [float(p.stats.latency.p99)
+                                    for p in self.planes]
         if self.shared is not None:
             tele["link_busy_us"] = {
                 name: float(q.stats.busy_us)

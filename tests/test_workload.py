@@ -1,0 +1,284 @@
+"""Trace-driven workload generation (core/workload.py).
+
+The contract mirrors ``FaultPlan``: all randomness happens exactly once,
+in ``generate_trace(config, seed)`` — the trace is a pure value.  Pinned
+here:
+
+  * same (config, seed) -> the same trace, draw for draw;
+  * per-tenant seeding: adding a tenant never perturbs another tenant's
+    arrivals;
+  * ``to_json``/``from_json`` round-trips the trace exactly;
+  * the unmodulated ``open`` process is byte-for-byte the legacy
+    serve_load schedule (``i * interarrival``);
+  * diurnal/flash modulation reshape arrivals the documented way
+    (closed-form, deterministic);
+  * MMPP is burstier than Poisson at the same mean rate;
+  * closed-loop clients pace off completions + pre-drawn think times;
+  * every config rule raises a *named* ``FabricConfigError`` before any
+    trace is drawn.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.config import (
+    ArrivalConfig,
+    DiurnalConfig,
+    FabricConfigError,
+    FlashCrowdConfig,
+    TenantLoadConfig,
+    WorkloadConfig,
+)
+from repro.core.workload import (
+    ClosedLoopClient,
+    Request,
+    WorkloadTrace,
+    generate_trace,
+    rate_factor,
+)
+
+
+def open_tenant(name="load", n=20, gap=3.0, **kw):
+    return TenantLoadConfig(
+        name=name, arrival=ArrivalConfig(process="open", interarrival_us=gap),
+        n_requests=n, **kw)
+
+
+# ---------------------------------------------------------------------------
+# determinism + replay
+# ---------------------------------------------------------------------------
+def test_same_config_same_seed_same_trace():
+    cfg = WorkloadConfig(tenants=(
+        TenantLoadConfig(name="p", n_requests=30,
+                         arrival=ArrivalConfig(process="poisson",
+                                               interarrival_us=5.0)),
+        TenantLoadConfig(name="m", n_requests=30,
+                         arrival=ArrivalConfig(process="mmpp",
+                                               interarrival_us=5.0,
+                                               burst_factor=4.0,
+                                               burst_dwell_us=50.0)),
+        TenantLoadConfig(name="c", clients=3, think_us=7.0,
+                         requests_per_client=5),
+    ))
+    a, b = generate_trace(cfg, 42), generate_trace(cfg, 42)
+    assert a.requests == b.requests
+    for k in a.think:
+        np.testing.assert_array_equal(a.think[k], b.think[k])
+    # a different seed draws different arrivals (poisson can't collide)
+    c = generate_trace(cfg, 43)
+    assert a.requests != c.requests
+
+
+def test_per_tenant_seeding_is_isolated():
+    """Randomness is keyed (seed, tenant index): appending a tenant must
+    not perturb the draws of the tenants before it."""
+    base = (TenantLoadConfig(name="p", n_requests=25,
+                             arrival=ArrivalConfig(process="poisson",
+                                                   interarrival_us=4.0)),)
+    extra = base + (TenantLoadConfig(name="q", n_requests=25,
+                                     arrival=ArrivalConfig(
+                                         process="poisson",
+                                         interarrival_us=4.0)),)
+    solo = generate_trace(WorkloadConfig(tenants=base), 7)
+    both = generate_trace(WorkloadConfig(tenants=extra), 7)
+    assert [r for r in both.requests if r.tenant == "p"] == list(solo.requests)
+    # ...and the two tenants' identically-shaped processes still draw
+    # differently from their distinct streams
+    p = [r.arrival_us for r in both.requests if r.tenant == "p"]
+    q = [r.arrival_us for r in both.requests if r.tenant == "q"]
+    assert p != q
+
+
+def test_json_round_trip_is_exact():
+    cfg = WorkloadConfig(tenants=(
+        open_tenant(n=10, staleness_req=3),
+        TenantLoadConfig(name="c", clients=2, think_us=5.0,
+                         requests_per_client=4, staleness_req=8),
+    ))
+    trace = generate_trace(cfg, 9)
+    back = WorkloadTrace.from_json(trace.to_json())
+    assert back.requests == trace.requests
+    assert back.staleness_req == trace.staleness_req
+    for k in trace.think:
+        np.testing.assert_array_equal(back.think[k], trace.think[k])
+    with pytest.raises(ValueError):
+        WorkloadTrace.from_json({"schema": 2})
+
+
+# ---------------------------------------------------------------------------
+# arrival shapes
+# ---------------------------------------------------------------------------
+def test_unmodulated_open_is_the_legacy_schedule():
+    trace = generate_trace(WorkloadConfig(tenants=(open_tenant(),)), 0)
+    for i, r in enumerate(trace.requests):
+        assert r.arrival_us == i * 3.0  # byte-for-byte, not approx
+        assert r.tenant == "load" and r.n == 1
+
+
+def test_diurnal_open_compresses_peak_spacing():
+    d = DiurnalConfig(enabled=True, amplitude=0.5, period_us=100.0)
+    t = open_tenant(n=40, gap=2.0, diurnal=d)
+    # the closed form itself: peak rate at t=25 (sin=1), trough at t=75
+    assert rate_factor(t, 25.0) == pytest.approx(1.5)
+    assert rate_factor(t, 75.0) == pytest.approx(0.5)
+    trace = generate_trace(WorkloadConfig(tenants=(t,)), 0)
+    times = np.array([r.arrival_us for r in trace.requests])
+    gaps = np.diff(times)
+    # spacing is modulated: gaps differ, and the tightest gap sits near
+    # the diurnal peak (rate 1.5x -> gap 2/1.5; arrivals sample the
+    # sinusoid at discrete times, so "near", not "at")
+    assert gaps.min() == pytest.approx(2.0 / 1.5, rel=1e-3)
+    assert gaps.max() > 2.0
+
+
+def test_flash_crowd_floods_its_window():
+    f = FlashCrowdConfig(enabled=True, at_us=30.0, duration_us=30.0,
+                         magnitude=10.0)
+    calm = generate_trace(WorkloadConfig(tenants=(
+        open_tenant(n=60, gap=2.0),)), 0)
+    flood = generate_trace(WorkloadConfig(tenants=(
+        open_tenant(n=60, gap=2.0, flash=f),)), 0)
+
+    def in_window(tr):
+        return sum(1 for r in tr.requests if 30.0 <= r.arrival_us < 60.0)
+
+    assert in_window(flood) > 2 * in_window(calm)
+    # outside the window the rate factor is exactly 1
+    t = flood.requests[0]
+    assert t.arrival_us == 0.0
+    cfg = open_tenant(flash=f)
+    assert rate_factor(cfg, 29.9) == 1.0
+    assert rate_factor(cfg, 30.0) == 10.0
+    assert rate_factor(cfg, 60.0) == 1.0
+
+
+def test_poisson_matches_mean_and_mmpp_is_burstier():
+    n = 4000
+    pois = generate_trace(WorkloadConfig(tenants=(
+        TenantLoadConfig(name="p", n_requests=n,
+                         arrival=ArrivalConfig(process="poisson",
+                                               interarrival_us=5.0)),)), 3)
+    mmpp = generate_trace(WorkloadConfig(tenants=(
+        TenantLoadConfig(name="m", n_requests=n,
+                         arrival=ArrivalConfig(process="mmpp",
+                                               interarrival_us=5.0,
+                                               burst_factor=8.0,
+                                               burst_dwell_us=100.0)),)), 3)
+    pg = np.diff([r.arrival_us for r in pois.requests])
+    mg = np.diff([r.arrival_us for r in mmpp.requests])
+    assert np.mean(pg) == pytest.approx(5.0, rel=0.1)
+    # exponential gaps: CV ~= 1; the two-state MMPP mixes a fast and a
+    # slow rate, so its gap CV is strictly above the Poisson's
+    cv = lambda g: np.std(g) / np.mean(g)  # noqa: E731
+    assert cv(pg) == pytest.approx(1.0, abs=0.15)
+    assert cv(mg) > cv(pg) + 0.2
+    # arrivals are strictly ordered in both
+    assert (pg > 0).all() and (mg > 0).all()
+
+
+# ---------------------------------------------------------------------------
+# closed-loop clients
+# ---------------------------------------------------------------------------
+def test_closed_loop_client_paces_off_completions():
+    trace = generate_trace(WorkloadConfig(tenants=(
+        TenantLoadConfig(name="c", clients=2, think_us=10.0,
+                         requests_per_client=3, staleness_req=4),)), 5)
+    assert len(trace.requests) == 0  # closed-loop only: no open arrivals
+    clients = trace.clients("c")
+    assert len(clients) == 2
+    c = clients[0]
+    think = trace.think["c"][0]
+    # request 0 arrives after the initial think from t=0
+    r0 = c.issue()
+    assert r0.arrival_us == pytest.approx(float(think[0]))
+    assert r0.tenant == "c" and r0.staleness_req == 4
+    # completion at T schedules request 1 at T + think[1]
+    c.completed(100.0)
+    assert c.issue().arrival_us == pytest.approx(100.0 + float(think[1]))
+    c.completed(130.0)
+    assert c.issue().arrival_us == pytest.approx(130.0 + float(think[2]))
+    c.completed(150.0)
+    assert c.done
+    with pytest.raises(RuntimeError):
+        c.issue()
+    with pytest.raises(RuntimeError):
+        c.completed(160.0)
+    # replay: fresh clients start from the same pre-drawn think table
+    again = trace.clients("c")[0]
+    assert again.issue().arrival_us == pytest.approx(float(think[0]))
+    with pytest.raises(KeyError):
+        trace.clients("nope")
+
+
+def test_zero_think_clients_fire_back_to_back():
+    trace = generate_trace(WorkloadConfig(tenants=(
+        TenantLoadConfig(name="c", clients=1, think_us=0.0,
+                         requests_per_client=3),)), 0)
+    c = trace.clients("c")[0]
+    assert c.issue().arrival_us == 0.0
+    c.completed(7.0)
+    assert c.issue().arrival_us == 7.0  # completion time, zero think
+
+
+# ---------------------------------------------------------------------------
+# trace surface + validation
+# ---------------------------------------------------------------------------
+def test_trace_sorts_and_describes():
+    trace = WorkloadTrace([Request(5.0, "b"), Request(1.0, "a"),
+                           Request(5.0, "a")])
+    assert [r.arrival_us for r in trace.requests] == [1.0, 5.0, 5.0]
+    # ties keep list order (part of the deterministic contract)
+    assert [r.tenant for r in trace.requests] == ["a", "b", "a"]
+    assert len(trace) == 3 and trace.duration_us == 5.0
+    assert "3 open-loop arrivals" in trace.describe()
+    assert WorkloadTrace().duration_us == 0.0
+    with pytest.raises(TypeError):
+        WorkloadTrace([object()])
+    with pytest.raises(ValueError):
+        Request(-1.0, "a")
+    with pytest.raises(ValueError):
+        Request(0.0, "a", n=0)
+    with pytest.raises(ValueError):
+        Request(0.0, "a", staleness_req=-1)
+
+
+@pytest.mark.parametrize("cfg,rule", [
+    (WorkloadConfig(), "workload_tenants"),
+    (WorkloadConfig(tenants=(open_tenant(name=""),)), "tenant_name"),
+    (WorkloadConfig(tenants=(open_tenant(), open_tenant())), "tenant_name"),
+    (WorkloadConfig(tenants=(TenantLoadConfig(
+        arrival=ArrivalConfig(process="lognormal")),)), "arrival_process"),
+    (WorkloadConfig(tenants=(TenantLoadConfig(
+        arrival=ArrivalConfig(interarrival_us=0.0)),)), "arrival_rate"),
+    (WorkloadConfig(tenants=(TenantLoadConfig(
+        arrival=ArrivalConfig(process="mmpp", burst_factor=0.5)),)),
+     "mmpp_shape"),
+    (WorkloadConfig(tenants=(open_tenant(
+        diurnal=DiurnalConfig(enabled=True, amplitude=1.0)),)),
+     "diurnal_amplitude"),
+    (WorkloadConfig(tenants=(open_tenant(
+        diurnal=DiurnalConfig(enabled=True, period_us=0.0)),)),
+     "diurnal_period"),
+    (WorkloadConfig(tenants=(open_tenant(
+        flash=FlashCrowdConfig(enabled=True, magnitude=0.5)),)),
+     "flash_shape"),
+    (WorkloadConfig(tenants=(open_tenant(batch_max=0),)), "batch_max"),
+    (WorkloadConfig(tenants=(open_tenant(staleness_req=-1),)),
+     "staleness_req"),
+    (WorkloadConfig(tenants=(TenantLoadConfig(clients=-1),)), "closed_loop"),
+    (WorkloadConfig(tenants=(TenantLoadConfig(clients=1),)), "closed_loop"),
+])
+def test_workload_validation_rules_are_named(cfg, rule):
+    with pytest.raises(FabricConfigError, match=rf"\[{rule}\]") as ei:
+        cfg.validate()
+    assert ei.value.rule == rule
+    # generate_trace validates before drawing anything
+    with pytest.raises(FabricConfigError):
+        generate_trace(cfg, 0)
+
+
+def test_valid_workload_round_trips_validate():
+    cfg = WorkloadConfig(tenants=(open_tenant(),))
+    assert cfg.validate() is cfg
+    assert math.isfinite(generate_trace(cfg, 0).duration_us)
